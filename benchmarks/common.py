@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import numpy as np
+
+
+def time_call(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (after warmup, block_until_ready-safe)."""
+    for _ in range(warmup):
+        _block(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _block(x):
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except Exception:
+        pass
+    return x
+
+
+def emit(name: str, seconds: float, derived: str = "") -> str:
+    """`name,us_per_call,derived` CSV row (scaffold contract)."""
+    row = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(row, flush=True)
+    return row
+
+
+def series_to_csv(path: str, header: Iterable[str], rows):
+    import csv
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(list(header))
+        for r in rows:
+            w.writerow(list(r))

@@ -1,0 +1,55 @@
+"""Measured §Perf track: DES engine throughput (events/s), JAX vs reference.
+
+This is the paper-side performance benchmark that hillclimbs iterate on —
+per-policy event throughput on a fixed trace, plus the Pallas queue_select
+hot-spot microbenchmark at scheduler-relevant queue sizes.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, series_to_csv, time_call
+from repro.core.engine import simulate
+from repro.core.jobs import POLICY_IDS, make_jobset
+from repro.kernels.queue_select.ops import queue_select
+from repro.refsim import simulate_reference
+from repro.traces import sdsc_sp2_like
+
+
+def main(outdir: str = "results") -> None:
+    os.makedirs(outdir, exist_ok=True)
+    J = 2000
+    trace = sdsc_sp2_like(J, seed=13)
+    jobs = make_jobset(trace["submit"], trace["runtime"], trace["nodes"],
+                       trace["estimate"], total_nodes=128)
+    rows = []
+    for pol in ("fcfs", "sjf", "bestfit", "backfill"):
+        t_jax = time_call(lambda: simulate(jobs, POLICY_IDS[pol], 128).n_events)
+        t_ref = time_call(
+            lambda: simulate_reference(trace, pol, total_nodes=128),
+            warmup=0, iters=1)
+        ev = 2 * J
+        rows.append((pol, t_jax, ev / t_jax, t_ref, ev / t_ref))
+        emit(f"des_throughput_{pol}", t_jax,
+             f"jax_events_per_s={ev / t_jax:.0f};ref_events_per_s={ev / t_ref:.0f}")
+    series_to_csv(os.path.join(outdir, "des_throughput.csv"),
+                  ["policy", "t_jax_s", "jax_events_per_s", "t_ref_s",
+                   "ref_events_per_s"], rows)
+
+    # scheduler hot-spot kernel at production queue sizes
+    rng = np.random.default_rng(0)
+    for N in (65_536, 1_048_576):
+        scores = jnp.asarray(rng.integers(0, 1 << 20, N).astype(np.int32))
+        feas = jnp.asarray((rng.random(N) < 0.1).astype(np.int32))
+        t = time_call(lambda: queue_select(scores, feas, tile=8192,
+                                           interpret=True))
+        emit(f"queue_select_N{N}", t,
+             f"interpret_mode;GBps={(N * 8 / t) / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Run the full (arch x shape x mesh) dry-run sweep, one subprocess per cell.
+
+Each cell runs in a fresh process (jax locks the host-device count at init
+and compile state accumulates), writes results/dryrun/<arch>_<shape>_<mesh>.json
+and is skipped on re-run if the JSON already exists (resumable).
+
+    PYTHONPATH=src python -m benchmarks.dryrun_sweep [--mesh single|multi|both]
+        [--only arch1,arch2] [--timeout 3600]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "llama4-scout-17b-a16e", "mixtral-8x7b", "mistral-nemo-12b",
+    "llama3.2-3b", "stablelm-3b", "h2o-danube-1.8b", "zamba2-2.7b",
+    "rwkv6-7b", "qwen2-vl-72b", "seamless-m4t-medium",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+# fail-fast ordering: one cell per (family x kind) first, then the rest
+PRIORITY = [
+    ("llama3.2-3b", "train_4k"), ("llama3.2-3b", "decode_32k"),
+    ("mixtral-8x7b", "train_4k"), ("zamba2-2.7b", "train_4k"),
+    ("rwkv6-7b", "train_4k"), ("qwen2-vl-72b", "prefill_32k"),
+    ("seamless-m4t-medium", "train_4k"), ("rwkv6-7b", "long_500k"),
+]
+
+
+def cell_list(meshes, only=None):
+    cells, seen = [], set()
+    for mesh in meshes:
+        for a, s in PRIORITY:
+            if (a, s, mesh) not in seen:
+                cells.append((a, s, mesh)); seen.add((a, s, mesh))
+        for a in ARCHS:
+            for s in SHAPES:
+                if (a, s, mesh) not in seen:
+                    cells.append((a, s, mesh)); seen.add((a, s, mesh))
+    if only:
+        cells = [c for c in cells if c[0] in only]
+    return cells
+
+
+def out_path(outdir, a, s, mesh):
+    safe = a.replace("/", "_")
+    return os.path.join(outdir, f"{safe}__{s}__{mesh}.json")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.outdir, exist_ok=True)
+
+    cells = cell_list(meshes, only)
+    t00 = time.time()
+    n_ok = n_skip = n_err = 0
+    for i, (a, s, mesh) in enumerate(cells):
+        path = out_path(args.outdir, a, s, mesh)
+        if os.path.exists(path) and not args.force:
+            try:
+                st = json.load(open(path)).get("status")
+                if st in ("ok", "skipped"):
+                    n_skip += 1
+                    continue
+            except Exception:
+                pass
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+               "--shape", s, "--mesh", mesh, "--out", path]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src"
+        try:
+            p = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout, env=env)
+            status = "ok" if p.returncode == 0 else "err"
+        except subprocess.TimeoutExpired:
+            status = "timeout"
+            with open(path, "w") as f:
+                json.dump({"arch": a, "shape": s, "mesh": mesh,
+                           "status": "error", "error": "timeout"}, f)
+        dt = time.time() - t0
+        if status == "ok":
+            n_ok += 1
+        else:
+            n_err += 1
+        tail = ""
+        if status != "ok":
+            tail = (p.stderr or "")[-400:].replace("\n", " | ") if status == "err" else "timeout"
+        print(f"[{i+1}/{len(cells)}] {a} x {s} [{mesh}] -> {status} "
+              f"({dt:.0f}s, total {(time.time()-t00)/60:.1f}m) {tail}",
+              flush=True)
+    print(f"done: ok={n_ok} cached={n_skip} err={n_err}")
+
+
+if __name__ == "__main__":
+    main()

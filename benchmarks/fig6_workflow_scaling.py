@@ -1,0 +1,52 @@
+"""Paper Fig. 6: scalability of workflow simulation (Galactic Plane).
+
+Scales the Galactic-like workflow (union of Montage tile sub-workflows) in
+size and in ensemble width, reporting tasks/second.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, series_to_csv, time_call
+from repro.core.workflow import WF_POLICY_IDS, make_taskset, simulate_workflow
+from repro.traces import workflows as W
+
+POOLS = np.array([64, 1 << 20])
+
+
+def main(outdir: str = "results") -> None:
+    os.makedirs(outdir, exist_ok=True)
+    rows = []
+    for tiles in (2, 4, 8, 16):
+        wf = W.galactic_like(tiles, 12, seed=tiles)
+        n = len(wf["exec_time"])
+        ts = make_taskset(wf["exec_time"], wf["resources"], wf["dep_pairs"])
+        t = time_call(
+            lambda: simulate_workflow(ts, POOLS, WF_POLICY_IDS["fcfs_fit"]).n_events)
+        rows.append((tiles, n, t, n / t))
+        emit(f"fig6_galactic_tiles{tiles}", t,
+             f"tasks={n};tasks_per_s={n / t:.0f}")
+
+    # ensemble width (the parallel axis): vmap W copies vs python loop
+    wf = W.galactic_like(4, 12, seed=9)
+    ts = make_taskset(wf["exec_time"], wf["resources"], wf["dep_pairs"])
+    for width in (1, 8, 32):
+        batched = jax.tree.map(
+            lambda x: jax.numpy.broadcast_to(x, (width,) + x.shape), ts)
+        pools_b = np.broadcast_to(POOLS, (width, 2))
+        fn = jax.jit(jax.vmap(
+            lambda t_, p_: simulate_workflow(t_, p_, WF_POLICY_IDS["fcfs_fit"])))
+        t = time_call(lambda: fn(batched, pools_b).n_events)
+        n = len(wf["exec_time"]) * width
+        emit(f"fig6_ensemble_w{width}", t, f"tasks_per_s={n / t:.0f}")
+        rows.append((f"ens{width}", n, t, n / t))
+    series_to_csv(os.path.join(outdir, "fig6_workflow_scaling.csv"),
+                  ["scale", "tasks", "seconds", "tasks_per_s"], rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Collect results/dryrun/*.json into the EXPERIMENTS.md roofline tables."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(outdir="results/dryrun"):
+    recs = {}
+    for p in glob.glob(os.path.join(outdir, "*.json")):
+        r = json.load(open(p))
+        recs[(r["arch"], r["shape"], r.get("mesh", "single"))] = r
+    return recs
+
+
+def fmt_row(r):
+    if r.get("status") == "skipped":
+        return "| {arch} | {shape} | — | skipped: sub-quadratic-only cell | | | | | |".format(**r)
+    if r.get("status") != "ok":
+        return "| {arch} | {shape} | — | ERROR {err} | | | | | |".format(
+            err=r.get("error", "?")[:40], **r)
+    return ("| {arch} | {shape} | {rules} | {bot} | {tc:.4f} | {tm:.4f} | "
+            "{tl:.4f} | {uf:.2f} | {hbm:.1f} |").format(
+        arch=r["arch"], shape=r["shape"], rules=r["rules"],
+        bot=r["bottleneck"], tc=r["t_compute_s"], tm=r["t_memory_s"],
+        tl=r["t_collective_s"], uf=r["useful_flops_ratio"],
+        hbm=r["memory"]["peak_bytes_per_device"] / 2**30)
+
+
+def markdown(recs, mesh="single"):
+    lines = [
+        "| arch | shape | rules | bound | t_compute (s) | t_memory (s) | "
+        "t_collective (s) | useful-FLOPs | HBM peak (GiB/dev) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def main(outdir: str = "results") -> None:
+    recs = load()
+    if not recs:
+        emit("roofline_table", 0.0, "no dryrun results found")
+        return
+    n_ok = sum(1 for r in recs.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in recs.values() if r.get("status") == "skipped")
+    with open(os.path.join(outdir, "roofline_single.md"), "w") as f:
+        f.write(markdown(recs, "single"))
+    with open(os.path.join(outdir, "roofline_multi.md"), "w") as f:
+        f.write(markdown(recs, "multi"))
+    fits = sum(1 for r in recs.values() if r.get("status") == "ok"
+               and r["memory"]["peak_bytes_per_device"] < 16 * 2**30)
+    emit("roofline_table", 0.0,
+         f"cells_ok={n_ok};skipped={n_skip};fit_under_16GiB={fits}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; artifacts land in results/.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig5       # substring filter
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    des_throughput, fig3_occupancy, fig4_policies, fig4_wait, fig5_scaling,
+    fig6_workflow_scaling, fig7_workflow_wait, roofline_table,
+)
+
+BENCHES = [
+    ("fig3_occupancy", fig3_occupancy.main),
+    ("fig4_wait", fig4_wait.main),
+    ("fig4_policies", fig4_policies.main),
+    ("fig5_scaling", fig5_scaling.main),
+    ("fig6_workflow_scaling", fig6_workflow_scaling.main),
+    ("fig7_workflow_wait", fig7_workflow_wait.main),
+    ("des_throughput", des_throughput.main),
+    ("roofline_table", roofline_table.main),
+]
+
+
+def main() -> int:
+    pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in BENCHES:
+        if pattern and pattern not in name:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"# {name} FAILED: {e}", flush=True)
+    if failed:
+        print(f"# FAILED benches: {failed}")
+        return 1
+    print("# all benches passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

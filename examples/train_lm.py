@@ -1,0 +1,78 @@
+"""End-to-end training driver: a ~100M-parameter llama-family model trained
+for a few hundred steps with checkpointing, fault injection, straggler
+monitoring, and gradient compression — the full production loop at CPU scale.
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~25M, 100 steps
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train_lm.py --inject-failure-at 40
+"""
+
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import ModelConfig, register  # noqa: E402
+from repro.data.pipeline import SyntheticTokens  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: E402
+
+PRESETS = {
+    # ~25M params: fast on 1 CPU core (~0.2 s/step)
+    "25m": dict(n_layers=6, d_model=384, n_heads=6, n_kv_heads=2,
+                d_ff=1024, vocab=8192, head_dim=64),
+    # ~100M params: the assignment's end-to-end scale (~2 s/step on CPU)
+    "100m": dict(n_layers=10, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab=16384, head_dim=64),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="25m", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="default: /tmp/repro_train_lm_<preset>")
+    ap.add_argument("--inject-failure-at", type=int, default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    if args.ckpt_dir is None:
+        args.ckpt_dir = f"/tmp/repro_train_lm_{args.preset}"
+    cfg = ModelConfig(
+        name=f"example-{args.preset}", family="dense",
+        rope_theta=10_000.0, dtype="float32", remat=False,
+        block_q=128, block_k=128, **PRESETS[args.preset],
+    )
+    register(cfg)
+    from repro.models.api import get_model
+    print(f"model: {get_model(cfg).n_params() / 1e6:.1f}M params")
+
+    ds = SyntheticTokens(cfg.vocab, batch=args.batch, seq=args.seq, seed=0)
+    trainer = Trainer(
+        cfg,
+        AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                    total_steps=args.steps),
+        TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=max(args.steps // 4, 10), log_every=10,
+                      inject_failure_at=args.inject_failure_at,
+                      compress_grads=args.compress_grads),
+        ds,
+    )
+    out = trainer.run()
+    if out["final_loss"] is None:
+        print("\nno steps ran (checkpoint already at/past --steps; "
+              "raise --steps or clear --ckpt-dir)")
+        return
+    print(f"\nfinal loss {out['final_loss']:.4f} after {args.steps} steps "
+          f"({out['restarts']} restarts)")
+    print(f"step time: mean {out['straggler']['mean_s']*1e3:.0f} ms, "
+          f"p95 {out['straggler']['p95_s']*1e3:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Checkpointing: one .npy per leaf + JSON manifest, atomic, elastic restore.
+
+- **atomic**: writes land in ``<dir>/tmp.<step>`` then a single rename
+  publishes ``step_<n>``; a crash mid-write never corrupts the latest.
+- **integrity**: every leaf records crc32 in the manifest, verified on load.
+- **elastic**: leaves are stored unsharded (gathered); ``load_checkpoint``
+  re-device_puts onto whatever sharding tree the *current* mesh provides, so
+  restarts may change device count / mesh shape freely (tested 8 -> 4 devs).
+- **async**: ``CheckpointManager(async_save=True)`` snapshots to host then
+  writes in a daemon thread, keeping the train loop running.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    def key(path):
+        return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+    return [(key(p), l) for p, l in leaves], treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
+                    extra: Optional[dict] = None, keep: int = 3) -> str:
+    """Write tree -> <ckpt_dir>/step_<step>/ atomically. Returns final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({
+            "key": key, "file": fname, "shape": list(arr.shape),
+            "dtype": str(arr.dtype), "crc32": zlib.crc32(arr.tobytes()),
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(
+        (int(d.split("_")[1]), d) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_")
+    )
+    for _, d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
+                    shardings: Any = None, verify: bool = True):
+    """Restore into ``template``'s structure; reshard onto ``shardings``.
+
+    Returns (tree, step, extra).  Elastic: the stored leaves are global
+    arrays; device placement comes entirely from the current ``shardings``.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+
+    leaves, treedef = _flatten(template)
+    shard_leaves = (
+        [s for _, s in _flatten(shardings)[0]] if shardings is not None
+        else [None] * len(leaves)
+    )
+    out = []
+    for (key, tmpl), shard in zip(leaves, shard_leaves):
+        rec = by_key.get(key)
+        if rec is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(path, rec["file"]))
+        if verify and zlib.crc32(arr.tobytes()) != rec["crc32"]:
+            raise IOError(f"crc mismatch for leaf {key!r} in {path}")
+        if tuple(arr.shape) != tuple(np.shape(tmpl)):
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {arr.shape}, template "
+                f"expects {np.shape(tmpl)} — wrong model/config for this "
+                f"checkpoint directory?")
+        if shard is not None:
+            out.append(jax.device_put(arr, shard))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    return tree, manifest["step"], manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """keep-last-k manager with optional async writes."""
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3, async_save: bool = False):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any, *, extra: Optional[dict] = None):
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # snapshot
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=save_checkpoint,
+                args=(self.ckpt_dir, step, host_tree),
+                kwargs={"extra": extra, "keep": self.keep},
+                daemon=True,
+            )
+            self._thread.start()
+        else:
+            save_checkpoint(self.ckpt_dir, step, host_tree, extra=extra,
+                            keep=self.keep)
+        self.last_saved = step
+
+    def restore(self, template: Any, *, shardings: Any = None,
+                step: Optional[int] = None):
+        return load_checkpoint(self.ckpt_dir, template, step=step,
+                               shardings=shardings)

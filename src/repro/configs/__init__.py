@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES, LONG_CONTEXT_OK, ModelConfig, ShapeConfig, cell_supported,
+    get_config, list_archs, register,
+)

@@ -1,0 +1,6 @@
+"""Import-for-effect registry of all assigned architectures."""
+from repro.configs import (  # noqa: F401
+    llama4_scout_17b_a16e, mixtral_8x7b, mistral_nemo_12b, llama3_2_3b,
+    stablelm_3b, h2o_danube_1_8b, zamba2_2_7b, rwkv6_7b, qwen2_vl_72b,
+    seamless_m4t_medium,
+)

@@ -1,0 +1,9 @@
+"""h2o-danube-1.8b — 24L d=2560 32H (GQA kv=8) d_ff=6912 vocab=32000,
+llama+mistral mix with sliding-window attention. [arXiv:2401.16818; hf]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="h2o-danube-1.8b", family="dense",
+    n_layers=24, d_model=2560, n_heads=32, n_kv_heads=8, d_ff=6912,
+    vocab=32000, head_dim=80, rope_theta=10_000.0, window=4096,
+))

@@ -1,0 +1,233 @@
+"""The discrete-event engine (paper §2.2, Algorithm 1) as a jit-able loop.
+
+Event semantics, pinned identically in ``repro.refsim``:
+
+  1. advance clock to min(next arrival, next completion),
+  2. process *all* completions with finish <= clock (reclaim nodes),
+  3. process *all* arrivals with submit <= clock (enqueue),
+  4. run the scheduling pass: repeatedly ask the policy selector for a job
+     and start it, until the selector returns -1.
+
+Each event consumes at least one arrival or completion, so the loop runs at
+most ``2*J + 1`` iterations; ``max_events`` is a safety cap on top.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policies
+from repro.core.jobs import (
+    DONE, INF_TIME, PENDING, RUNNING, WAITING,
+    JobSet, SimResult, SimState, result_from_state,
+)
+import jax.numpy as jnp  # noqa: F811  (used by preemption helpers)
+
+
+def _start_job(jobs: JobSet, state: SimState, idx: jax.Array) -> SimState:
+    """Allocate nodes to job ``idx`` and schedule its completion event.
+
+    Uses ``state.remaining`` (== runtime unless previously preempted) and
+    records only the FIRST start time (dispatch-latency metric).
+    """
+    start = state.clock
+    fin = start + state.remaining[idx]
+    rsv = start + jobs.estimate[idx]
+    first = jnp.minimum(state.start[idx], start)
+    return SimState(
+        clock=state.clock,
+        jstate=state.jstate.at[idx].set(RUNNING),
+        start=state.start.at[idx].set(first),
+        finish=state.finish.at[idx].set(fin),
+        rsv_finish=state.rsv_finish.at[idx].set(rsv),
+        remaining=state.remaining,
+        free=state.free - jobs.nodes[idx],
+        n_events=state.n_events,
+    )
+
+
+def _preempt_for(jobs: JobSet, state: SimState, idx: jax.Array) -> SimState:
+    """Suspend the minimal set of strictly-lower-priority running jobs so
+    that job ``idx`` fits (paper §5 future work: preemption capability).
+
+    Victims are chosen most-preemptible-first: (priority desc, row desc).
+    Suspended jobs keep their elapsed work (remaining shrinks) and return to
+    WAITING with their original submit time/FCFS rank.
+    """
+    J = jobs.capacity
+    need = jobs.nodes[idx] - state.free
+    running = state.jstate == RUNNING
+    lower = running & (jobs.priority > jobs.priority[idx])
+    # order victims by (priority desc, row desc): key = -(priority*J + row)
+    key = jnp.where(lower, -(jobs.priority * J + jnp.arange(J, dtype=jnp.int32)),
+                    jnp.int32(INF_TIME))
+    order = jnp.argsort(key)
+    nodes_o = jnp.where(lower, jobs.nodes, 0)[order]
+    cum = jnp.cumsum(nodes_o)
+    # preempt the minimal prefix whose cumulative nodes cover the deficit
+    take_rank = jnp.where(cum - nodes_o < jnp.maximum(need, 0), True, False)
+    take_rank = take_rank & (nodes_o > 0)
+    victim = jnp.zeros((J,), bool).at[order].set(take_rank)
+    freed = jnp.sum(jnp.where(victim, jobs.nodes, 0)).astype(jnp.int32)
+    new_remaining = jnp.where(
+        victim, jnp.maximum(state.finish - state.clock, 1), state.remaining
+    )
+    return SimState(
+        clock=state.clock,
+        jstate=jnp.where(victim, WAITING, state.jstate),
+        start=state.start,
+        finish=jnp.where(victim, INF_TIME, state.finish),
+        rsv_finish=jnp.where(victim, INF_TIME, state.rsv_finish),
+        remaining=new_remaining,
+        free=state.free + freed,
+        n_events=state.n_events,
+    )
+
+
+def _schedule_pass(policy: jax.Array, jobs: JobSet, state: SimState) -> SimState:
+    """Start jobs until the policy blocks (Algorithm 1 lines 16-21)."""
+
+    def cond(carry):
+        _, idx = carry
+        return idx >= 0
+
+    def body(carry):
+        st, idx = carry
+        st = jax.lax.cond(
+            jobs.nodes[idx] <= st.free,
+            lambda s: s,
+            lambda s: _preempt_for(jobs, s, idx),  # preempt policy only
+            st,
+        )
+        st = _start_job(jobs, st, idx)
+        return st, policies.select(policy, jobs, st)
+
+    state, _ = jax.lax.while_loop(
+        cond, body, (state, policies.select(policy, jobs, state))
+    )
+    return state
+
+
+def _event_step(policy: jax.Array, jobs: JobSet, state: SimState) -> SimState:
+    pending = state.jstate == PENDING
+    running = state.jstate == RUNNING
+
+    t_arr = jnp.min(jnp.where(pending, jobs.submit, INF_TIME))
+    t_fin = jnp.min(jnp.where(running, state.finish, INF_TIME))
+    clock = jnp.minimum(t_arr, t_fin)
+
+    # completions first (frees nodes for arrivals at the same timestamp)
+    completed = running & (state.finish <= clock)
+    freed = jnp.sum(jnp.where(completed, jobs.nodes, 0)).astype(jnp.int32)
+    jstate = jnp.where(completed, DONE, state.jstate)
+
+    # arrivals
+    arrived = (jstate == PENDING) & (jobs.submit <= clock)
+    jstate = jnp.where(arrived, WAITING, jstate)
+
+    state = SimState(
+        clock=clock,
+        jstate=jstate,
+        start=state.start,
+        finish=state.finish,
+        rsv_finish=state.rsv_finish,
+        remaining=state.remaining,
+        free=state.free + freed,
+        n_events=state.n_events + 1,
+    )
+    return _schedule_pass(policy, jobs, state)
+
+
+@functools.partial(jax.jit, static_argnames=("max_events",))
+def simulate(
+    jobs: JobSet,
+    policy: jax.Array | int,
+    total_nodes: jax.Array | int,
+    *,
+    max_events: Optional[int] = None,
+) -> SimResult:
+    """Run the full job-scheduling simulation for one cluster.
+
+    Pure function of its inputs (``policy`` and ``total_nodes`` are traced,
+    so the same executable serves every policy/machine size); ``vmap``-able
+    over ``jobs`` leaves, ``policy`` and/or ``total_nodes`` for ensemble
+    simulation (see ``repro.core.parallel``).
+    """
+    policy = jnp.asarray(policy, dtype=jnp.int32)
+    cap = max_events if max_events is not None else 6 * jobs.capacity + 8
+    state = SimState.init(jobs, total_nodes)
+
+    def cond(st: SimState):
+        unfinished = jnp.any((st.jstate != DONE))
+        return unfinished & (st.n_events < cap)
+
+    state = jax.lax.while_loop(
+        cond, lambda st: _event_step(policy, jobs, st), state
+    )
+    return result_from_state(jobs, state)
+
+
+def next_event_time(jobs: JobSet, state: SimState) -> jax.Array:
+    pending = state.jstate == PENDING
+    running = state.jstate == RUNNING
+    t_arr = jnp.min(jnp.where(pending, jobs.submit, INF_TIME))
+    t_fin = jnp.min(jnp.where(running, state.finish, INF_TIME))
+    return jnp.minimum(t_arr, t_fin)
+
+
+def simulate_window(
+    policy: jax.Array,
+    jobs: JobSet,
+    state: SimState,
+    t_hi: jax.Array,
+    max_events: jax.Array | int,
+) -> SimState:
+    """Process every event with timestamp <= ``t_hi`` (conservative window).
+
+    The multi-cluster engine (``repro.core.parallel``) calls this once per
+    synchronization round — the JAX analogue of SST's conservative
+    per-lookahead-window execution (DESIGN.md §2).
+    """
+
+    def cond(st: SimState):
+        return (next_event_time(jobs, st) <= t_hi) & (st.n_events < max_events)
+
+    return jax.lax.while_loop(cond, lambda st: _event_step(policy, jobs, st), state)
+
+
+def simulate_np(trace, policy, *, total_nodes: int, capacity: int | None = None):
+    """Host convenience wrapper: dict-of-numpy trace -> numpy result dict."""
+    import numpy as np
+    from repro.core.jobs import make_jobset
+
+    jobs = make_jobset(
+        trace["submit"], trace["runtime"], trace["nodes"],
+        trace.get("estimate"), trace.get("priority"),
+        capacity=capacity, total_nodes=total_nodes,
+    )
+    pol = policies_id(policy)
+    res = simulate(jobs, pol, total_nodes)
+    ok = np.asarray(res.done)
+    return {
+        "submit": np.asarray(jobs.submit),
+        "nodes": np.asarray(jobs.nodes),
+        "runtime": np.asarray(jobs.runtime),
+        "start": np.asarray(res.start),
+        "finish": np.asarray(res.finish),
+        "wait": np.asarray(res.wait),
+        "makespan": int(res.makespan),
+        "n_events": int(res.n_events),
+        "done": ok,
+        "valid": np.asarray(jobs.valid),
+    }
+
+
+def policies_id(policy) -> int:
+    from repro.core.jobs import POLICY_IDS
+    if isinstance(policy, str):
+        return POLICY_IDS[policy.lower()]
+    return int(policy)

@@ -1,0 +1,202 @@
+"""Job-table data structures for the JAX discrete-event scheduler.
+
+The paper encapsulates each job as a ``TaskEvent`` C++ object moved between
+SST components.  On SPMD hardware we keep the whole job table as a
+struct-of-arrays pytree (``JobSet``) plus a mutable simulation state
+(``SimState``); "moving a job between queues" is a masked state transition.
+
+All times are int32 *relative* seconds (trace loaders normalize so that
+``min(submit) == 0`` and ``max(submit) + 2*max(runtime) < 2**30``, which
+keeps every ``clock + estimate`` addition overflow-free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Job lifecycle states (paper Fig. 1: submission -> waiting -> running -> done).
+PENDING = 0   # submitted to the simulator but its submit time is in the future
+WAITING = 1   # in the wait queue
+RUNNING = 2   # allocated nodes, executing
+DONE = 3      # completed; resources reclaimed
+
+# Sentinel "infinite" time.  Kept well under int32 max so sentinel arithmetic
+# (e.g. INF + estimate) cannot wrap.
+INF_TIME = np.int32(2**30 - 1)
+
+# Scheduling policies (paper §2.1) + priority preemption (paper §5 lists
+# preemption as planned future work; implemented here in both engines).
+FCFS = 0
+SJF = 1
+LJF = 2
+BESTFIT = 3
+BACKFILL = 4
+PREEMPT = 5
+
+POLICY_NAMES = {
+    FCFS: "fcfs",
+    SJF: "sjf",
+    LJF: "ljf",
+    BESTFIT: "bestfit",
+    BACKFILL: "backfill",
+    PREEMPT: "preempt",
+}
+POLICY_IDS = {v: k for k, v in POLICY_NAMES.items()}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class JobSet:
+    """Immutable struct-of-arrays job table, sorted by (submit, id).
+
+    ``valid`` masks padding rows so fixed-capacity tables can be batched /
+    sharded.  ``estimate`` is the user walltime request (drives SJF/LJF
+    ordering and EASY reservations); ``runtime`` is the actual duration
+    (drives completion events) — mirroring how CQsim treats walltime vs. run
+    time.
+    """
+
+    submit: jax.Array    # i32[J]
+    runtime: jax.Array   # i32[J]  actual duration, >= 1
+    estimate: jax.Array  # i32[J]  requested walltime, >= 1
+    nodes: jax.Array     # i32[J]  requested nodes, >= 1
+    priority: jax.Array  # i32[J]  lower = more important (preempt policy)
+    valid: jax.Array     # bool[J]
+
+    @property
+    def capacity(self) -> int:
+        return self.submit.shape[-1]
+
+    def num_valid(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32), axis=-1)
+
+
+def make_jobset(
+    submit,
+    runtime,
+    nodes,
+    estimate=None,
+    priority=None,
+    *,
+    capacity: int | None = None,
+    total_nodes: int | None = None,
+) -> JobSet:
+    """Build a normalized ``JobSet`` from host arrays.
+
+    - sorts by (submit, original index) so row order == FCFS order,
+    - clamps node requests to ``total_nodes`` (paper traces contain requests
+      larger than the simulated machine; CQsim clamps the same way),
+    - pads to ``capacity`` with invalid rows.
+    """
+    submit = np.asarray(submit, dtype=np.int64)
+    runtime = np.asarray(runtime, dtype=np.int64)
+    nodes = np.asarray(nodes, dtype=np.int64)
+    estimate = (
+        np.asarray(estimate, dtype=np.int64) if estimate is not None else runtime.copy()
+    )
+    n = submit.shape[0]
+    priority = (np.asarray(priority, dtype=np.int64) if priority is not None
+                else np.zeros(n, dtype=np.int64))
+    if not (runtime.shape[0] == nodes.shape[0] == estimate.shape[0] == n):
+        raise ValueError("job attribute arrays must have equal length")
+
+    submit = submit - (submit.min() if n else 0)
+    runtime = np.maximum(runtime, 1)
+    estimate = np.maximum(estimate, 1)
+    nodes = np.maximum(nodes, 1)
+    if total_nodes is not None:
+        nodes = np.minimum(nodes, total_nodes)
+
+    horizon = submit.max(initial=0) + 2 * max(int(runtime.max(initial=1)), int(estimate.max(initial=1)))
+    if horizon >= int(INF_TIME):
+        raise ValueError(
+            f"trace horizon {horizon} overflows int32 sentinel; rescale the trace"
+        )
+
+    order = np.lexsort((np.arange(n), submit))
+    submit, runtime, estimate, nodes, priority = (
+        submit[order], runtime[order], estimate[order], nodes[order],
+        priority[order],
+    )
+
+    cap = capacity or n
+    if cap < n:
+        raise ValueError(f"capacity {cap} < number of jobs {n}")
+
+    def pad(a, fill):
+        out = np.full((cap,), fill, dtype=np.int32)
+        out[:n] = a.astype(np.int32)
+        return out
+
+    valid = np.zeros((cap,), dtype=bool)
+    valid[:n] = True
+    return JobSet(
+        submit=jnp.asarray(pad(submit, INF_TIME)),
+        runtime=jnp.asarray(pad(runtime, 1)),
+        estimate=jnp.asarray(pad(estimate, 1)),
+        nodes=jnp.asarray(pad(nodes, 1)),
+        priority=jnp.asarray(pad(priority, 0)),
+        valid=jnp.asarray(valid),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimState:
+    """Mutable (functionally) simulation state for one cluster."""
+
+    clock: jax.Array        # i32 scalar
+    jstate: jax.Array       # i32[J] in {PENDING, WAITING, RUNNING, DONE}
+    start: jax.Array        # i32[J] FIRST start time (INF until started)
+    finish: jax.Array       # i32[J] actual completion time (INF until started)
+    rsv_finish: jax.Array   # i32[J] start + estimate; EASY shadow math input
+    remaining: jax.Array    # i32[J] runtime left (preemption suspends work)
+    free: jax.Array         # i32 scalar, nodes currently free
+    n_events: jax.Array     # i32 scalar, events processed
+
+    @classmethod
+    def init(cls, jobs: JobSet, total_nodes: int) -> "SimState":
+        J = jobs.capacity
+        inf = jnp.full((J,), INF_TIME, dtype=jnp.int32)
+        jstate = jnp.where(jobs.valid, jnp.int32(PENDING), jnp.int32(DONE))
+        return cls(
+            clock=jnp.int32(0),
+            jstate=jstate,
+            start=inf,
+            finish=inf,
+            rsv_finish=inf,
+            remaining=jobs.runtime,
+            free=jnp.int32(total_nodes),
+            n_events=jnp.int32(0),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Per-job outcome; every paper metric derives from these arrays."""
+
+    start: jax.Array      # i32[J]
+    finish: jax.Array     # i32[J]
+    wait: jax.Array       # i32[J] start - submit
+    makespan: jax.Array   # i32 scalar
+    n_events: jax.Array   # i32 scalar
+    done: jax.Array       # bool[J] job reached DONE (False => engine hit event cap)
+
+
+def result_from_state(jobs: JobSet, state: SimState) -> SimResult:
+    wait = jnp.where(jobs.valid, state.start - jobs.submit, 0).astype(jnp.int32)
+    fin = jnp.where(jobs.valid & (state.jstate == DONE), state.finish, 0)
+    return SimResult(
+        start=state.start,
+        finish=state.finish,
+        wait=wait,
+        makespan=jnp.max(fin).astype(jnp.int32),
+        n_events=state.n_events,
+        done=(state.jstate == DONE) & jobs.valid,
+    )

@@ -1,0 +1,91 @@
+"""Offline metric derivation (paper Figs. 3-4, 7).
+
+The engine returns only per-job (start, finish); node occupancy, active-job
+counts, queue lengths, utilization, waits, and slowdowns are all pure
+functions of (submit, start, finish, nodes) — computed here in numpy so the
+device loop stays lean (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+def _select_valid(res: Dict[str, np.ndarray]):
+    v = np.asarray(res["valid"], dtype=bool) & np.asarray(res["done"], dtype=bool)
+    return (
+        np.asarray(res["submit"])[v],
+        np.asarray(res["start"])[v],
+        np.asarray(res["finish"])[v],
+        np.asarray(res["nodes"])[v],
+        np.asarray(res["runtime"])[v],
+    )
+
+
+def step_series(times: np.ndarray, deltas: np.ndarray):
+    """Event-sorted cumulative step function: returns (t, value_after_t)."""
+    order = np.argsort(times, kind="stable")
+    t = times[order]
+    v = np.cumsum(deltas[order])
+    # collapse duplicate timestamps to the final value at that time
+    keep = np.r_[t[1:] != t[:-1], True]
+    return t[keep], v[keep]
+
+
+def occupancy_series(res) -> tuple[np.ndarray, np.ndarray]:
+    """Nodes in use over time (paper Fig. 3a)."""
+    _, start, finish, nodes, _ = _select_valid(res)
+    times = np.r_[start, finish]
+    deltas = np.r_[nodes, -nodes].astype(np.int64)
+    return step_series(times, deltas)
+
+
+def active_jobs_series(res) -> tuple[np.ndarray, np.ndarray]:
+    """Number of running jobs over time (paper Fig. 3b)."""
+    _, start, finish, _, _ = _select_valid(res)
+    times = np.r_[start, finish]
+    deltas = np.r_[np.ones_like(start), -np.ones_like(finish)].astype(np.int64)
+    return step_series(times, deltas)
+
+
+def queue_length_series(res) -> tuple[np.ndarray, np.ndarray]:
+    """Waiting-queue length over time."""
+    submit, start, _, _, _ = _select_valid(res)
+    times = np.r_[submit, start]
+    deltas = np.r_[np.ones_like(submit), -np.ones_like(start)].astype(np.int64)
+    return step_series(times, deltas)
+
+
+def sample_series(t: np.ndarray, v: np.ndarray, grid: np.ndarray) -> np.ndarray:
+    """Sample a step series onto a regular grid (for plotting/comparison)."""
+    idx = np.searchsorted(t, grid, side="right") - 1
+    out = np.where(idx >= 0, v[np.clip(idx, 0, len(v) - 1)], 0)
+    return out.astype(np.float64)
+
+
+def summary(res, total_nodes: int) -> Dict[str, float]:
+    """Scalar metrics used by the five-policy comparison (paper Fig. 4b)."""
+    submit, start, finish, nodes, runtime = _select_valid(res)
+    if len(submit) == 0:
+        return {k: 0.0 for k in (
+            "n_jobs", "avg_wait", "p50_wait", "p95_wait", "max_wait",
+            "avg_bounded_slowdown", "makespan", "utilization", "throughput")}
+    wait = (start - submit).astype(np.float64)
+    run = runtime.astype(np.float64)
+    bsld = np.maximum((wait + run) / np.maximum(run, 10.0), 1.0)
+    makespan = float(finish.max() - submit.min())
+    node_seconds = float((nodes.astype(np.float64) * run).sum())
+    util = node_seconds / (total_nodes * makespan) if makespan > 0 else 0.0
+    return {
+        "n_jobs": float(len(submit)),
+        "avg_wait": float(wait.mean()),
+        "p50_wait": float(np.percentile(wait, 50)),
+        "p95_wait": float(np.percentile(wait, 95)),
+        "max_wait": float(wait.max()),
+        "avg_bounded_slowdown": float(bsld.mean()),
+        "makespan": makespan,
+        "utilization": util,
+        "throughput": float(len(submit)) / makespan if makespan > 0 else 0.0,
+    }

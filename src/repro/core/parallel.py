@@ -1,0 +1,301 @@
+"""Parallel discrete-event simulation (paper Figs. 5-6, DESIGN.md §2).
+
+Two parallelization modes, both SPMD-native:
+
+1. **Ensemble** — many independent simulations (trace shards, policy sweeps,
+   parameter studies) batched with ``vmap`` and sharded across devices with
+   ``shard_map``.  This is the weak-scaling mode the paper exercises by
+   growing job counts per rank.
+
+2. **Multi-cluster conservative windows** — one simulation partitioned into
+   K clusters, each advanced independently over a time window ``W`` and then
+   synchronized.  Job *migration* messages emitted in window ``k`` carry a
+   latency >= W, so they cannot affect window ``k`` — the window is a valid
+   conservative lookahead bound, exactly SST's synchronization contract,
+   expressed with ``shard_map`` + ``all_gather`` instead of MPI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.engine import simulate, simulate_window
+from repro.core.jobs import (
+    DONE, INF_TIME, PENDING, WAITING,
+    JobSet, SimResult, SimState, result_from_state,
+)
+
+# ---------------------------------------------------------------------------
+# ensemble mode
+# ---------------------------------------------------------------------------
+
+
+def stack_jobsets(jobsets: list[JobSet]) -> JobSet:
+    """Stack equally-sized JobSets into a leading batch dimension."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *jobsets)
+
+
+def simulate_ensemble(
+    jobs_b: JobSet,
+    policies_b,
+    total_nodes_b,
+    *,
+    mesh: Optional[Mesh] = None,
+    max_events: Optional[int] = None,
+) -> SimResult:
+    """vmap-batched simulation, optionally sharded over a 1-D device mesh.
+
+    ``jobs_b`` leaves have leading batch dim B; ``policies_b``/``total_nodes_b``
+    are i32[B].  With a mesh, B must divide evenly across the ``sim`` axis;
+    each device advances its ensemble members fully independently (zero
+    cross-device communication — the embarrassingly-parallel mode).
+    """
+    policies_b = jnp.asarray(policies_b, dtype=jnp.int32)
+    total_nodes_b = jnp.asarray(total_nodes_b, dtype=jnp.int32)
+    fn = jax.vmap(functools.partial(simulate, max_events=max_events))
+    if mesh is None:
+        return jax.jit(fn)(jobs_b, policies_b, total_nodes_b)
+
+    axis = mesh.axis_names[0]
+    shard = NamedSharding(mesh, P(axis))
+    jobs_b = jax.device_put(jobs_b, shard)
+    policies_b = jax.device_put(policies_b, shard)
+    total_nodes_b = jax.device_put(total_nodes_b, shard)
+    out_shard = jax.tree.map(
+        lambda _: shard, jax.eval_shape(fn, jobs_b, policies_b, total_nodes_b)
+    )
+    return jax.jit(fn, out_shardings=out_shard)(jobs_b, policies_b, total_nodes_b)
+
+
+# ---------------------------------------------------------------------------
+# multi-cluster conservative-window mode
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MulticlusterResult:
+    """Final per-cluster tables: leaves shaped [C, J]."""
+
+    jobs: JobSet          # post-migration job tables (valid marks ownership)
+    state: SimState
+    migrated: jax.Array   # i32[C] jobs exported by each cluster
+    dropped: jax.Array    # i32[C] imports dropped for lack of free rows (should be 0)
+
+
+def _queue_load(jobs: JobSet, state: SimState) -> jax.Array:
+    """Pending work metric: node-seconds waiting in queue (estimates)."""
+    waiting = (state.jstate == WAITING) | (state.jstate == PENDING)
+    return jnp.sum(
+        jnp.where(waiting, jobs.nodes * jnp.minimum(jobs.estimate, 1 << 16), 0)
+    ).astype(jnp.int32)
+
+
+def _export_jobs(jobs: JobSet, state: SimState, t_hi, latency, max_export: int,
+                 enable: jax.Array):
+    """Pick up to ``max_export`` *tail* waiting/pending jobs to offload.
+
+    Tail = largest submit time first (least FCFS-urgent), so migration never
+    reorders the local head-of-queue.  Returns (jobs', state', packet).
+    """
+    J = jobs.capacity
+    movable = ((state.jstate == WAITING) | (state.jstate == PENDING)) & jobs.valid
+    # rank movable jobs by descending submit (non-movable sort last)
+    key = jnp.where(movable, -jobs.submit, jnp.int32(INF_TIME))
+    order = jnp.argsort(key)  # ascending => movable with largest submit first
+    take = jnp.arange(J) < jnp.where(enable, max_export, 0)
+    n_movable = jnp.sum(movable.astype(jnp.int32))
+    take = take & (jnp.arange(J) < n_movable)
+    sel_rows = order[:max_export]
+    sel_ok = take[:max_export]
+
+    new_submit = jnp.maximum(jobs.submit[sel_rows], t_hi + latency)
+    packet = {
+        "submit": jnp.where(sel_ok, new_submit, INF_TIME).astype(jnp.int32),
+        "runtime": jobs.runtime[sel_rows].astype(jnp.int32),
+        "estimate": jobs.estimate[sel_rows].astype(jnp.int32),
+        "nodes": jobs.nodes[sel_rows].astype(jnp.int32),
+        "priority": jobs.priority[sel_rows].astype(jnp.int32),
+        "ok": sel_ok,
+    }
+    # remove exported jobs locally
+    remove = jnp.zeros((J,), bool).at[sel_rows].set(sel_ok)
+    jobs = dataclasses.replace(jobs, valid=jobs.valid & ~remove)
+    state = dataclasses.replace(
+        state, jstate=jnp.where(remove, DONE, state.jstate)
+    )
+    return jobs, state, packet
+
+
+def _import_jobs(jobs: JobSet, state: SimState, flat):
+    """Insert gathered packets destined to this cluster into free rows."""
+    J = jobs.capacity
+    ok = flat["ok"]
+    n_imp = jnp.sum(ok.astype(jnp.int32))
+    free_rows_order = jnp.argsort(jnp.where(jobs.valid, 1, 0), stable=True)
+    n_free = jnp.sum((~jobs.valid).astype(jnp.int32))
+    slot = jnp.cumsum(ok.astype(jnp.int32)) - 1           # slot per packet
+    can = ok & (slot < n_free)
+    rows = free_rows_order[jnp.clip(slot, 0, J - 1)]
+    rows = jnp.where(can, rows, J)  # J = out-of-bounds => dropped by mode="drop"
+
+    jobs = JobSet(
+        submit=jobs.submit.at[rows].set(flat["submit"], mode="drop"),
+        runtime=jobs.runtime.at[rows].set(flat["runtime"], mode="drop"),
+        estimate=jobs.estimate.at[rows].set(flat["estimate"], mode="drop"),
+        nodes=jobs.nodes.at[rows].set(flat["nodes"], mode="drop"),
+        priority=jobs.priority.at[rows].set(flat["priority"], mode="drop"),
+        valid=jobs.valid.at[rows].set(True, mode="drop"),
+    )
+    state = dataclasses.replace(
+        state,
+        jstate=state.jstate.at[rows].set(PENDING, mode="drop"),
+        start=state.start.at[rows].set(INF_TIME, mode="drop"),
+        finish=state.finish.at[rows].set(INF_TIME, mode="drop"),
+        rsv_finish=state.rsv_finish.at[rows].set(INF_TIME, mode="drop"),
+        remaining=state.remaining.at[rows].set(flat["runtime"], mode="drop"),
+    )
+    dropped = n_imp - jnp.minimum(n_imp, n_free)
+    return jobs, state, dropped
+
+
+def simulate_multicluster(
+    jobs_c: JobSet,
+    policy,
+    nodes_c,
+    *,
+    window: int,
+    horizon: int,
+    mesh: Optional[Mesh] = None,
+    migrate: bool = True,
+    max_export: int = 8,
+    latency: Optional[int] = None,
+    load_imbalance_threshold: float = 1.5,
+    max_events: Optional[int] = None,
+) -> MulticlusterResult:
+    """Conservative-window multi-cluster simulation.
+
+    ``jobs_c`` leaves are [C, J]; ``nodes_c`` is i32[C].  Each round: every
+    cluster simulates events in ``(r*W, (r+1)*W]`` independently; clusters
+    whose queue load exceeds ``threshold * mean`` export up to ``max_export``
+    tail jobs to the least-loaded cluster, with arrival latency >= ``W``
+    (the conservative lookahead).  With ``mesh`` the cluster dimension is
+    sharded via ``shard_map``; without, it runs vmapped on one device with
+    identical semantics (the collective degenerates to an identity gather).
+    """
+    C = jobs_c.submit.shape[0]
+    J = jobs_c.submit.shape[1]
+    policy = jnp.asarray(policy, dtype=jnp.int32)
+    nodes_c = jnp.asarray(nodes_c, dtype=jnp.int32)
+    latency = int(latency if latency is not None else window)
+    if latency < window:
+        raise ValueError("migration latency must be >= window for conservative sync")
+    n_rounds = int(np.ceil(horizon / window)) + 1
+    ev_cap = max_events if max_events is not None else 2 * J + 8
+
+    def local_sim(jobs, nodes, axis_name):
+        # jobs leaves [Cl, J]; runs on one shard (or the whole batch w/o mesh)
+        state = jax.vmap(SimState.init, in_axes=(0, 0))(jobs, nodes)
+
+        def round_body(r, carry):
+            jobs, state, mig, drop = carry
+            t_hi = (r + 1) * jnp.int32(window)
+            state = jax.vmap(
+                lambda j, s: simulate_window(policy, j, s, t_hi, ev_cap)
+            )(jobs, state)
+            if not migrate:
+                return jobs, state, mig, drop
+
+            load_l = jax.vmap(_queue_load)(jobs, state)          # [Cl]
+            if axis_name is not None:
+                loads = jax.lax.all_gather(load_l, axis_name).reshape(-1)  # [C]
+                my0 = jax.lax.axis_index(axis_name) * load_l.shape[0]
+            else:
+                loads = load_l
+                my0 = 0
+            mean_load = jnp.mean(loads.astype(jnp.float32))
+            dest = jnp.argmin(loads).astype(jnp.int32)           # global id
+            gids = my0 + jnp.arange(load_l.shape[0], dtype=jnp.int32)
+            over = (
+                (load_l.astype(jnp.float32) > load_imbalance_threshold * mean_load)
+                & (gids != dest)
+                & (loads[dest] < load_l)
+            )
+            jobs, state, pkt = jax.vmap(
+                lambda j, s, en: _export_jobs(j, s, t_hi, jnp.int32(latency),
+                                              max_export, en)
+            )(jobs, state, over)
+            pkt["dest"] = jnp.broadcast_to(dest, pkt["ok"].shape).astype(jnp.int32)
+            mig = mig + jax.vmap(lambda o: jnp.sum(o.astype(jnp.int32)))(pkt["ok"])
+
+            if axis_name is not None:
+                gpkt = {k: jax.lax.all_gather(v, axis_name) for k, v in pkt.items()}
+                gpkt = {k: v.reshape((-1,) + v.shape[3:]) for k, v in gpkt.items()}
+            else:
+                gpkt = {k: v.reshape((-1,) + v.shape[2:]) for k, v in pkt.items()}
+
+            def imp(j, s, gid):
+                flat = dict(gpkt)
+                flat["ok"] = gpkt["ok"] & (gpkt["dest"] == gid)
+                j, s, d = _import_jobs(j, s, flat)
+                return j, s, d
+
+            jobs, state, d = jax.vmap(imp)(jobs, state, gids)
+            return jobs, state, mig, drop + d
+
+        mig0 = jnp.zeros((jobs.submit.shape[0],), jnp.int32)
+        carry = (jobs, state, mig0, jnp.zeros_like(mig0))
+        jobs, state, mig, drop = jax.lax.fori_loop(0, n_rounds, round_body, carry)
+        # drain any events beyond the horizon (no migration afterwards)
+        state = jax.vmap(
+            lambda j, s: simulate_window(policy, j, s, jnp.int32(INF_TIME), ev_cap)
+        )(jobs, state)
+        return jobs, state, mig, drop
+
+    if mesh is None:
+        jobs, state, mig, drop = jax.jit(
+            lambda j, n: local_sim(j, n, None)
+        )(jobs_c, nodes_c)
+    else:
+        axis = mesh.axis_names[0]
+        from jax.experimental.shard_map import shard_map
+        fn = shard_map(
+            lambda j, n: local_sim(j, n, axis),
+            mesh=mesh,
+            in_specs=(P(axis), P(axis)),
+            out_specs=P(axis),
+            check_rep=False,
+        )
+        jobs, state, mig, drop = jax.jit(fn)(jobs_c, nodes_c)
+
+    return MulticlusterResult(jobs=jobs, state=state, migrated=mig, dropped=drop)
+
+
+def multicluster_result_np(res: MulticlusterResult) -> dict:
+    """Flatten per-cluster tables to one host-side result dict."""
+    jobs, state = res.jobs, res.state
+    flat = lambda a: np.asarray(a).reshape(-1)
+    valid = flat(jobs.valid)
+    done = flat(state.jstate) == DONE
+    out = {
+        "submit": flat(jobs.submit),
+        "runtime": flat(jobs.runtime),
+        "nodes": flat(jobs.nodes),
+        "start": flat(state.start),
+        "finish": flat(state.finish),
+        "valid": valid,
+        "done": done & valid,
+        "migrated": int(np.asarray(res.migrated).sum()),
+        "dropped": int(np.asarray(res.dropped).sum()),
+    }
+    out["wait"] = out["start"] - out["submit"]
+    fin = out["finish"][out["done"]]
+    out["makespan"] = int(fin.max(initial=0))
+    return out

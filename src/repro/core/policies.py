@@ -1,0 +1,175 @@
+"""Vectorized scheduling-policy selectors (paper §2.1).
+
+Each selector answers: *given the current state, which waiting job starts
+next?* and returns an ``int32`` job index or ``-1``.  The engine calls the
+selector in a loop until it returns ``-1`` (one event may start many jobs —
+paper Algorithm 1 lines 16-21).
+
+Semantics (pinned identically in ``repro.refsim`` for validation):
+
+- FCFS / SJF / LJF: *blocking* head-of-(re)ordered-queue. If the highest
+  priority waiting job does not fit, nothing starts.
+- BestFit: among waiting jobs that fit, pick the one leaving the fewest
+  nodes free (tie: FCFS order). Work-conserving.
+- Backfill: EASY — if the FCFS head fits, start it; otherwise compute the
+  head's shadow (earliest time enough nodes free, using *estimates* of
+  running jobs) and start the first FCFS-ordered waiting job that fits now
+  and either completes by the shadow or uses only the shadow's extra nodes.
+
+A heap is the natural CPU data structure here; on SPMD hardware we instead
+use masked O(J) reductions, which vmap/shard cleanly (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jobs import (
+    BACKFILL, BESTFIT, FCFS, INF_TIME, LJF, RUNNING, SJF, WAITING,
+    JobSet, SimState,
+)
+
+_BIG = jnp.int32(INF_TIME)
+
+
+def _lex_argmin(primary: jax.Array, mask: jax.Array) -> jax.Array:
+    """Index minimizing (primary, index) over ``mask``; -1 if mask empty."""
+    p = jnp.where(mask, primary, _BIG)
+    best = jnp.min(p)
+    idx = jnp.argmin(jnp.where(mask & (p == best), jnp.arange(p.shape[0]), _BIG))
+    return jnp.where(jnp.any(mask), idx.astype(jnp.int32), jnp.int32(-1))
+
+
+def _first_index(mask: jax.Array) -> jax.Array:
+    idx = jnp.argmax(mask)  # first True (argmax of bool picks lowest index)
+    return jnp.where(jnp.any(mask), idx.astype(jnp.int32), jnp.int32(-1))
+
+
+def _blocking_head(jobs: JobSet, state: SimState, key: jax.Array) -> jax.Array:
+    waiting = state.jstate == WAITING
+    head = _lex_argmin(key, waiting)
+    fits = jobs.nodes[jnp.maximum(head, 0)] <= state.free
+    return jnp.where((head >= 0) & fits, head, jnp.int32(-1))
+
+
+def select_fcfs(jobs: JobSet, state: SimState) -> jax.Array:
+    # FCFS key = (submit, row); row order of an initial JobSet is already
+    # (submit, id), and keying on submit keeps FCFS correct after the
+    # multi-cluster engine migrates jobs into arbitrary free rows.
+    return _blocking_head(jobs, state, jobs.submit)
+
+
+def select_sjf(jobs: JobSet, state: SimState) -> jax.Array:
+    return _blocking_head(jobs, state, jobs.estimate)
+
+
+def select_ljf(jobs: JobSet, state: SimState) -> jax.Array:
+    return _blocking_head(jobs, state, -jobs.estimate)
+
+
+def select_bestfit(jobs: JobSet, state: SimState) -> jax.Array:
+    waiting = state.jstate == WAITING
+    feasible = waiting & (jobs.nodes <= state.free)
+    leftover = state.free - jobs.nodes
+    return _lex_argmin(leftover, feasible)
+
+
+def select_backfill(jobs: JobSet, state: SimState) -> jax.Array:
+    J = jobs.capacity
+    waiting = state.jstate == WAITING
+    head = _lex_argmin(jobs.submit, waiting)
+    head_safe = jnp.maximum(head, 0)
+    head_need = jobs.nodes[head_safe]
+    head_fits = head_need <= state.free
+
+    def blocked(_):
+        # ---- shadow computation over running jobs (walltime estimates) ---
+        running = state.jstate == RUNNING
+        # clamp to > clock so an over-running job (actual > estimate) still
+        # releases "in the future" for shadow math
+        rsv = jnp.where(running, jnp.maximum(state.rsv_finish, state.clock + 1),
+                        _BIG)
+        # The shadow needs only the earliest releases until cumulative free
+        # nodes cover the head: top-k of the M smallest release times is
+        # O(J log M) vs O(J log J) for the full sort; fall back to the full
+        # sort in the rare case M releases don't cover the head.  Ties are
+        # broken by row index in both paths (and in refsim), so the two
+        # engines stay bit-identical.
+        rel_nodes = jnp.where(running, jobs.nodes, 0)
+        n_running = jnp.sum(running.astype(jnp.int32))
+
+        def shadow_from(rsv_sorted, nodes_sorted):
+            cum_free = state.free + jnp.cumsum(nodes_sorted)
+            enough = cum_free >= head_need
+            k = _first_index(enough)
+            k_safe = jnp.maximum(k, 0)
+            sh = jnp.where(k >= 0, rsv_sorted[k_safe], _BIG)
+            ex = jnp.where(k >= 0, cum_free[k_safe] - head_need, state.free)
+            return sh, ex, k
+
+        M = min(64, J)
+        neg_top, order_m = jax.lax.top_k(-rsv, M)
+        sh_m, ex_m, k_m = shadow_from(-neg_top, rel_nodes[order_m])
+
+        def full_path(_):
+            order = jnp.argsort(rsv)  # stable: ties by row index
+            sh, ex, _ = shadow_from(rsv[order], rel_nodes[order])
+            return sh, ex
+
+        shadow, extra = jax.lax.cond(
+            (k_m >= 0) | (n_running <= M),
+            lambda _: (sh_m, ex_m), full_path, None,
+        )
+
+        # ---- backfill candidates -----------------------------------------
+        idxs = jnp.arange(J, dtype=jnp.int32)
+        fits_now = jobs.nodes <= state.free
+        ends_by_shadow = (state.clock + jobs.estimate) <= shadow
+        within_extra = jobs.nodes <= jnp.minimum(state.free, extra)
+        cand = (waiting & fits_now & (idxs != head_safe)
+                & (ends_by_shadow | within_extra))
+        return _lex_argmin(jobs.submit, cand)
+
+    # Lazy shadow: most selections either start the head or have nothing
+    # waiting; the O(J log J) sort only runs when the head is blocked
+    # (measured 20x single-stream throughput on SDSC-SP2-like traces).
+    return jax.lax.cond(
+        head_fits & (head >= 0),
+        lambda _: head,
+        lambda _: jax.lax.cond(head >= 0, blocked, lambda __: jnp.int32(-1), _),
+        None,
+    )
+
+
+def select_preempt(jobs: JobSet, state: SimState) -> jax.Array:
+    """Priority scheduling with preemption (paper §5 future work).
+
+    Queue order: (priority, submit, row).  The head starts if it fits in
+    free nodes OR if enough nodes can be reclaimed from strictly-lower-
+    priority running jobs; the engine's ``_preempt_for`` suspends the
+    minimal victim set before the start.
+    """
+    waiting = state.jstate == WAITING
+    # lexicographic (priority, submit): both bounded by INF_TIME < 2**30;
+    # combine via f64-free two-stage argmin
+    p = jnp.where(waiting, jobs.priority, _BIG)
+    best_p = jnp.min(p)
+    tier = waiting & (jobs.priority == best_p)
+    head = _lex_argmin(jobs.submit, tier)
+    head_safe = jnp.maximum(head, 0)
+    running = state.jstate == RUNNING
+    reclaimable = jnp.sum(jnp.where(
+        running & (jobs.priority > jobs.priority[head_safe]), jobs.nodes, 0))
+    fits = jobs.nodes[head_safe] <= state.free + reclaimable
+    return jnp.where((head >= 0) & fits, head, jnp.int32(-1))
+
+
+_SELECTORS = (select_fcfs, select_sjf, select_ljf, select_bestfit,
+              select_backfill, select_preempt)
+assert tuple(sorted((FCFS, SJF, LJF, BESTFIT, BACKFILL))) == tuple(range(5))
+
+
+def select(policy: jax.Array, jobs: JobSet, state: SimState) -> jax.Array:
+    """Dispatch on (possibly traced) policy id — vmap-able over policies."""
+    return jax.lax.switch(jnp.clip(policy, 0, 5), _SELECTORS, jobs, state)

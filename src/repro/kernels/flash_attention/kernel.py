@@ -1,0 +1,136 @@
+"""Flash attention Pallas TPU kernel (online softmax over KV tiles).
+
+Grid: (B, KV_heads, G, num_q_blocks, num_kv_blocks) — the kv-block axis is
+innermost, so on TPU the kernel streams K/V tiles through VMEM while the
+(m, l, acc) accumulators live in VMEM scratch across grid steps.  Causal
+blocks above the diagonal are skipped with ``pl.when`` (no MXU work issued).
+
+Block shapes are MXU-aligned: block_q x head_dim and block_k x head_dim with
+head_dim in {64, 128} and blocks multiples of 128 (pad upstream).  GQA is
+expressed in the grid (KV x G) so KV tiles are fetched once per G=heads/kv
+group — the HBM->VMEM K/V traffic is the GQA-optimal schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,          # VMEM tiles
+    o_ref,                        # output tile (revisited across kv blocks)
+    m_ref, l_ref, acc_ref,        # VMEM scratch accumulators
+    *, block_q: int, block_k: int, num_kv_blocks: int,
+    causal: bool, window: Optional[int], q_offset: int, seq_k: int,
+    scale: float,
+):
+    qi = pl.program_id(3)
+    kj = pl.program_id(4)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # whole-block skip: the earliest q in this tile vs latest k
+    first_q = q_offset + qi * block_q
+    last_q = first_q + block_q - 1
+    first_k = kj * block_k
+    run = True
+    if causal:
+        run = first_k <= last_q
+    if window is not None:
+        run = jnp.logical_and(run, first_k + block_k - 1 > first_q - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0, 0].astype(jnp.float32)          # [block_q, hd]
+        k = k_ref[0, 0].astype(jnp.float32)             # [block_k, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                        # [block_q, block_k]
+        mask = k_pos < seq_k
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_grouped(
+    q: jax.Array,   # [B, KV, G, Sq, hd]
+    k: jax.Array,   # [B, KV, Sk, hd]
+    v: jax.Array,   # [B, KV, Sk, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    seq_k_valid: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, KV, G, Sq, hd = q.shape
+    Sk = k.shape[2]
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    seq_k = seq_k_valid if seq_k_valid is not None else Sk
+    kern = functools.partial(
+        _flash_kernel,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+        causal=causal, window=window, q_offset=q_offset, seq_k=seq_k,
+        scale=hd ** -0.5,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(B, KV, G, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, block_q, hd),
+                         lambda b, h, g, i, j: (b, h, g, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, g, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, g, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, block_q, hd),
+                               lambda b, h, g, i, j: (b, h, g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max m
+            pltpu.VMEM((block_q,), jnp.float32),       # running denom l
+            pltpu.VMEM((block_q, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Public jit'd wrapper: layout plumbing + padding around the Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_grouped
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention(
+    q: jax.Array,   # [B, Sq, H, hd]
+    k: jax.Array,   # [B, Sk, KV, hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,   # CPU container default; False on real TPU
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, max(Sq, 1))
+    block_k = min(block_k, max(Sk, 1))
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+
+    qg = q.reshape(B, Sq, KV, G, hd).transpose(0, 2, 3, 1, 4)  # [B,KV,G,Sq,hd]
+    kg = k.transpose(0, 2, 1, 3)                               # [B,KV,Sk,hd]
+    vg = v.transpose(0, 2, 1, 3)
+    if pq:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        kg = jnp.pad(kg, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, 0), (0, pk), (0, 0)))
+
+    o = flash_attention_grouped(
+        qg, kg, vg, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, seq_k_valid=Sk,
+        interpret=interpret,
+    )
+    o = o[..., :Sq, :].transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return o

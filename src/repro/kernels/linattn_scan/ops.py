@@ -1,0 +1,23 @@
+"""jit'd wrapper for the chunked linear-attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linattn_scan.kernel import linattn_grouped
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def linattn(r, k, v, logw, u, *, chunk: int = 128, interpret: bool = True):
+    """[B, H, S, K] inputs; pads S to a chunk multiple (decay 0 on padding)."""
+    B, H, S, K = r.shape
+    chunk = min(chunk, S) if S else chunk
+    pad = (-S) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, k, v, logw = zp(r), zp(k), zp(v), zp(logw)
+    y = linattn_grouped(r, k, v, logw, u, chunk=chunk, interpret=interpret)
+    return y[:, :, :S]

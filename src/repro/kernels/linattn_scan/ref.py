@@ -1,0 +1,25 @@
+"""Token-by-token recurrence oracle for the chunked linear-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linattn_reference(r, k, v, logw, u):
+    """r/k/v/logw: [B, H, S, K]; u: [H, K] -> y [B, H, S, K] (f32 math)."""
+    B, H, S, K = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp            # [B, H, K] each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + uf[None, :, :, None] * kv)
+        state = wt[..., None] * state + kv
+        return state, y
+
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (rf, kf, vf, w))
+    _, ys = jax.lax.scan(step, jnp.zeros((B, H, K, K), jnp.float32), xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype)

@@ -1,0 +1,15 @@
+"""jit'd wrapper for queue_select."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.queue_select.kernel import queue_select_tiled
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def queue_select(scores, feasible, *, tile: int = 1024, interpret: bool = True):
+    """Masked lex-argmin: returns i32[2] (index or -1, best score)."""
+    return queue_select_tiled(scores, feasible, tile=tile, interpret=interpret)

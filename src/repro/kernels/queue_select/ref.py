@@ -1,0 +1,18 @@
+"""Oracle for queue_select: masked lexicographic argmin in pure jnp."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = 2**30 - 1
+
+
+def queue_select_reference(scores, feasible):
+    s = jnp.where(feasible.astype(bool), scores, BIG)
+    best = jnp.min(s)
+    idx = jnp.where(feasible.astype(bool) & (s == best),
+                    jnp.arange(s.shape[0], dtype=jnp.int32), BIG)
+    bi = jnp.min(idx)
+    found = bi < BIG
+    return jnp.stack([jnp.where(found, bi, -1).astype(jnp.int32),
+                      jnp.where(found, best, BIG).astype(jnp.int32)])

@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh, prove it fits (memory_analysis) and extract roofline terms
+(cost_analysis + HLO collective parse).  One cell per process:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+        --shape train_4k --mesh single --out results/mixtral_train.json
+
+The XLA_FLAGS line above MUST run before any other jax import — jax locks
+the device count at first init (assignment requirement; do not move it).
+"""
+
+import argparse
+import json
+import sys
+import time
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, rules_name: str | None,
+             out_path: str | None, print_hlo: bool = False,
+             accum: int | None = None, remat_policy: str | None = None) -> dict:
+    import jax
+    from repro.configs.base import SHAPES, cell_supported
+    from repro.launch.hlo_analysis import analyze_hlo_text
+    from repro.launch.mesh import make_production_mesh, mesh_num_devices
+    from repro.launch.roofline import summarize_cell
+    from repro.launch.specs import build_cell
+    from repro.sharding.rules import RULE_SETS
+
+    ok, reason = cell_supported(arch, shape_name)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skipped", "reason": reason}
+        if out_path:
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=1)
+        print(json.dumps(rec))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh_num_devices(mesh)
+    rules = RULE_SETS[rules_name] if rules_name else None
+    cell = build_cell(arch, shape_name, mesh, rules=rules, accum=accum,
+                      remat_policy=remat_policy)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(
+            cell["fn"],
+            in_shardings=cell["in_shardings"],
+            donate_argnums=cell["donate_argnums"],
+        )
+        lowered = jitted.lower(*cell["args"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_bytes_per_device": int(
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+        ),
+    }
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # Trip-count-aware analysis (cost_analysis counts while bodies once).
+    hs = analyze_hlo_text(hlo)
+    ca_fixed = {"flops": hs.flops, "bytes accessed": hs.hbm_bytes}
+    colls = {k: int(v) for k, v in hs.collective_bytes.items()}
+
+    from repro.configs.base import get_config
+    from repro.launch.roofline import analytic_hbm_bytes
+    shape_cfg = SHAPES[shape_name]
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ab = analytic_hbm_bytes(
+        get_config(arch), shape_cfg, mesh_shape,
+        cell["meta"]["n_active" if shape_cfg.kind != "train" else "n_params"],
+        cell["meta"]["rules"],
+    )
+    rec = summarize_cell(cell["meta"], shape_cfg, n_dev, ca_fixed,
+                         mem_d, colls, analytic_bytes=ab)
+    rec["xla_cost_analysis_flops_uncorrected"] = float(ca.get("flops", 0.0))
+    rec["while_loops"] = hs.while_loops
+    rec["dot_count"] = hs.dot_count
+    rec.update(
+        status="ok", mesh=mesh_kind, mesh_shape=list(mesh.devices.shape),
+        t_lower_s=round(t_lower, 2), t_compile_s=round(t_compile, 2),
+    )
+    print(f"== {arch} x {shape_name} [{mesh_kind}] "
+          f"rules={rec['rules']} devices={n_dev}")
+    print(f"memory_analysis: {mem}")
+    print(f"cost_analysis: flops/dev={rec['hlo_flops_per_device']:.3e} "
+          f"bytes/dev={rec['hlo_bytes_per_device']:.3e}")
+    print(f"collectives/dev: {colls}")
+    print(f"roofline: compute={rec['t_compute_s']:.4f}s "
+          f"memory={rec['t_memory_s']:.4f}s coll={rec['t_collective_s']:.4f}s "
+          f"-> {rec['bottleneck']}-bound; useful-flops={rec['useful_flops_ratio']:.3f}")
+    if print_hlo:
+        print(hlo[:20000])
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=[
+        "train_4k", "prefill_32k", "decode_32k", "long_500k"])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--print-hlo", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--remat-policy", default=None)
+    args = ap.parse_args(argv)
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh, args.rules, args.out,
+                       args.print_hlo, args.accum, args.remat_policy)
+        return 0 if rec.get("status") in ("ok", "skipped") else 1
+    except Exception as e:  # record the failure for the sweep collector
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "error": f"{type(e).__name__}: {e}"}
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(rec, f, indent=1)
+        print(json.dumps(rec)[:2000], file=sys.stderr)
+        raise
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,224 @@
+"""Trip-count-aware analysis of optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**, so any
+scan-over-layers program under-reports FLOPs/bytes by ~L and hides
+loop-carried collectives.  This analyzer walks the computation graph with
+multipliers taken from each while's ``known_trip_count`` backend config:
+
+- **flops**: 2 x |output| x |contraction| for every ``dot`` (descending into
+  fusion bodies), x enclosing trip counts.
+- **hbm_bytes**: sum of operand+output bytes at *fusion granularity* (fusion
+  boundary == materialization boundary on TPU), x trip counts.  Control ops
+  (tuple/gte/parameter/constant/bitcast) are skipped.
+- **collective_bytes**: per-device payload (max of in/out sums) of
+  all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+  x trip counts, by kind.
+
+All quantities are per-device (the HLO module is the per-partition SPMD
+program).  Validated against 6·N·D analytics in tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->\s+.*\{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+_COLLECTIVE_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+
+def _shapes_of(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims.strip() else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    tot = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        tot += n * _DTYPE_BYTES[dt]
+    return tot
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    out_shapes: list
+    operands: List[str]
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+def _parse(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and line.endswith("{"):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if raw.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        # operand names: up to the metadata section (operands come first)
+        arg_end = rest.find("), ")
+        arg_str = rest if arg_end < 0 else rest[:arg_end]
+        operands = _OPERAND_RE.findall(arg_str)
+        ins = Instr(name=name, op=op, out_shapes=_shapes_of(type_str),
+                    operands=operands, rest=rest)
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    return comps, entry
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    dot_count: int = 0
+    while_loops: Dict[str, int] = field(default_factory=dict)
+
+    def as_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "dot_count": self.dot_count, "while_loops": dict(self.while_loops),
+        }
+
+
+def analyze_hlo_text(text: str) -> HloStats:
+    comps, entry = _parse(text)
+    if entry is None:
+        # fall back: the largest computation is usually main
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    stats = HloStats(collective_bytes=defaultdict(float))
+
+    def operand_bytes(comp: Computation, ins: Instr) -> int:
+        tot = 0
+        for opn in ins.operands:
+            src = comp.by_name.get(opn)
+            if src is not None:
+                tot += _nbytes(src.out_shapes)
+        return tot
+
+    def dot_flops(comp: Computation, ins: Instr) -> float:
+        out_elems = 1
+        for _, shape in ins.out_shapes[:1]:
+            for d in shape:
+                out_elems *= d
+        m = _CONTRACT_RE.search(ins.rest)
+        contract = 1
+        if m and ins.operands:
+            lhs = comp.by_name.get(ins.operands[0])
+            if lhs is not None and lhs.out_shapes:
+                lshape = lhs.out_shapes[0][1]
+                for idx in (int(i) for i in m.group(1).split(",") if i.strip()):
+                    if idx < len(lshape):
+                        contract *= lshape[idx]
+        return 2.0 * out_elems * contract
+
+    visited_depth = [0]
+
+    def walk(comp_name: str, mult: float, count_bytes: bool):
+        if visited_depth[0] > 64 or comp_name not in comps:
+            return
+        visited_depth[0] += 1
+        comp = comps[comp_name]
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "dot":
+                stats.flops += mult * dot_flops(comp, ins)
+                stats.dot_count += 1
+            if op in _COLLECTIVE_OPS:
+                kind = op.replace("-start", "")
+                payload = max(_nbytes(ins.out_shapes), operand_bytes(comp, ins))
+                stats.collective_bytes[kind] += mult * payload
+            if op == "while":
+                m = _TRIP_RE.search(ins.rest)
+                trips = int(m.group(1)) if m else 1
+                cb = _COND_BODY_RE.search(ins.rest)
+                if cb:
+                    stats.while_loops[cb.group(2)] = trips
+                    walk(cb.group(2), mult * trips, count_bytes)
+                continue
+            if op in ("fusion",):
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    walk(m.group(1), mult, False)  # flops inside; bytes at boundary
+                if count_bytes:
+                    stats.hbm_bytes += mult * (
+                        _nbytes(ins.out_shapes) + operand_bytes(comp, ins)
+                    )
+                continue
+            if op in ("call", "async-start", "custom-call"):
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    walk(m.group(1), mult, count_bytes)
+                continue
+            if op == "conditional":
+                for m in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)([\w\.\-,%\s]+)", ins.rest):
+                    for c in _OPERAND_RE.findall(m.group(1)):
+                        walk(c, mult, count_bytes)
+                continue
+            if count_bytes and op not in _SKIP_BYTES_OPS:
+                stats.hbm_bytes += mult * (
+                    _nbytes(ins.out_shapes) + operand_bytes(comp, ins)
+                )
+        visited_depth[0] -= 1
+
+    walk(entry, 1.0, True)
+    stats.collective_bytes = dict(stats.collective_bytes)
+    return stats

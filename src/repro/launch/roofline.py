@@ -1,0 +1,202 @@
+"""Roofline-term extraction from compiled dry-run artifacts (DESIGN.md §10).
+
+TPU v5e hardware model (per chip):
+    peak bf16:  197 TFLOP/s
+    HBM bw:     819 GB/s
+    ICI link:   ~50 GB/s per link
+
+``cost_analysis()`` reports the per-device (post-SPMD) module's FLOPs and
+bytes.  Collective bytes are parsed from the optimized HLO text: we sum the
+output shard sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (per-device payload).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %foo = f32[16,128]{1,0} all-gather(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^a-z]*\s*"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\b"
+)
+# tuple-result collectives:  = (f32[..], f32[..]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\b"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device collective payload bytes by op kind."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            kind = m.group(2).replace("-start", "")
+            for dt, dims in _SHAPE_RE.findall(m.group(1)):
+                out[kind] += _shape_bytes(dt, dims)
+            continue
+        m = _INSTR_RE.search(line)
+        if m:
+            kind = m.group(3).replace("-start", "")
+            out[kind] += _shape_bytes(m.group(1), m.group(2))
+    return dict(out)
+
+
+def roofline_terms(
+    *, flops_per_device: float, bytes_per_device: float,
+    coll_bytes_per_device: float,
+) -> Dict[str, float]:
+    """Three roofline times in seconds (per step, per device)."""
+    t_compute = flops_per_device / PEAK_FLOPS
+    t_memory = bytes_per_device / HBM_BW
+    t_coll = coll_bytes_per_device / ICI_BW
+    dom = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    total = max(t_compute, t_memory, t_coll)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom,
+        "bound_step_s": total,
+    }
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6·N·D convention (training); 2·N·D for inference-only cells."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens
+
+
+def analytic_hbm_bytes(cfg, shape, mesh_shape: dict, n_params: int,
+                       rules_name: str) -> float:
+    """Structural per-device HBM traffic model (bytes/step).
+
+    The CPU-lowered HLO materializes attention scores and masks that stay in
+    VMEM on a real TPU (flash kernel), so HLO byte counts are a gross upper
+    bound.  This model counts the traffic that *must* cross HBM on TPU:
+
+      train:   gathered bf16 weights (w+r x 3 passes: fwd, remat, bwd),
+               f32 master params + Adam moments (r+w), f32 grads (r+w),
+               layer-boundary activations (~8 tensors/layer/pass),
+               logits (fwd+bwd).
+      prefill: 1 pass of the above, last-position logits only.
+      decode:  weight shards (gathered over data under FSDP serving rules;
+               stationary under serve-2d rules), full KV/state cache read,
+               single-token writes.
+
+    Every term is per device; mesh_shape = {"model": m, "data": d, "pod": p}.
+    """
+    m = mesh_shape.get("model", 1)
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    B, S = shape.global_batch, shape.seq_len
+    B_loc = max(B / dp, 1.0)
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    P = float(n_params)
+    bf2, f4 = 2.0, 4.0
+
+    def weights_pass(n_passes, gathered_over_data: bool):
+        shard = P * bf2 / m if gathered_over_data else P * bf2 / (m * dp)
+        return 2.0 * shard * n_passes  # write after gather + read by matmul
+
+    if shape.kind == "train":
+        w = weights_pass(3, gathered_over_data=True)
+        opt = (6 + 2) * P * f4 / (m * dp)          # p,m,v r+w  + grads r+w
+        act = 8 * L * 3 * B_loc * S * D * bf2 / m
+        logits = 2 * 2 * B * S * V * bf2 / (dp * m)
+        return w + opt + act + logits
+    if shape.kind == "prefill":
+        w = weights_pass(1, gathered_over_data=True)
+        act = 8 * L * B_loc * S * D * bf2 / m
+        logits = 2 * B * V * bf2 / (dp * m)
+        return w + act + logits
+    # decode / long_decode
+    gathered = rules_name != "serve_2d_stationary"
+    w = weights_pass(1, gathered_over_data=gathered)
+    KV, hd = getattr(cfg, "kv_heads_c", cfg.n_kv_heads), cfg.head_dim
+    cache_len = min(S, cfg.window) if cfg.window else S
+    if cfg.family == "rwkv":
+        Hh = D // 64
+        cache_total = L * B * (Hh * 64 * 64 * f4 + 2 * D * bf2)
+    elif cfg.family == "hybrid":
+        G = L // max(cfg.attn_every, 1)
+        cache_total = (G * B * cache_len * KV * hd * 2 * bf2
+                       + L * B * cfg.ssm_heads * cfg.ssm_head_dim
+                       * cfg.ssm_state * bf2)
+    elif cfg.family == "encdec":
+        cache_total = L * B * (cache_len + cache_len // 2) * KV * hd * 2 * bf2
+    else:
+        cache_total = L * B * cache_len * KV * hd * 2 * bf2
+    cache = cache_total / (dp * m)
+    logits = 2 * B * V * bf2 / (dp * m)
+    return w + cache + logits
+
+
+def summarize_cell(meta, shape, n_devices: int, ca: dict, mem: dict,
+                   colls: Dict[str, int], analytic_bytes: float | None = None) -> dict:
+    flops_dev = float(ca.get("flops", 0.0))
+    hlo_bytes_dev = float(ca.get("bytes accessed", 0.0))
+    bytes_dev = analytic_bytes if analytic_bytes is not None else hlo_bytes_dev
+    coll_dev = float(sum(colls.values()))
+    terms = roofline_terms(
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        coll_bytes_per_device=coll_dev,
+    )
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+    else:
+        tokens = shape.global_batch  # one new token per sequence
+    mf = model_flops(meta["n_active"], tokens, shape.kind)
+    useful = mf / max(flops_dev * n_devices, 1.0)
+    mfu_bound = mf / (n_devices * PEAK_FLOPS) / max(terms["bound_step_s"], 1e-30)
+    return {
+        **meta,
+        "n_devices": n_devices,
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": hlo_bytes_dev,
+        "analytic_hbm_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collectives": colls,
+        "model_flops_total": mf,
+        "useful_flops_ratio": useful,
+        "roofline_mfu_bound": mfu_bound,
+        **terms,
+        "memory": mem,
+    }

@@ -1,0 +1,71 @@
+"""Serving launcher: batched prefill + decode loop on CPU-scale configs.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+
+Demonstrates the full request path: batch prompts -> prefill (cache build)
+-> greedy decode loop with ring-buffer SWA caches where configured.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.api import get_model
+from repro.sharding.rules import shapes_from_defs
+
+
+def serve_batch(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0):
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    prompts = jnp.asarray(
+        rng.integers(1, cfg.vocab - 1, (batch, prompt_len)), jnp.int32)
+
+    total_len = prompt_len + gen
+    cdefs = model.cache_defs_fn(batch, total_len)
+    cache = jax.tree.map(
+        lambda d: jnp.zeros(d.shape, d.dtype), cdefs,
+        is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"),
+    )
+    decode = jax.jit(model.decode_step, donate_argnums=(3,))
+
+    # prefill via decode steps (works for every family incl. recurrent)
+    tok = prompts[:, 0]
+    t0 = time.time()
+    out_tokens = [tok]
+    for pos in range(total_len - 1):
+        logits, cache = decode(params, tok, jnp.int32(pos), cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = jnp.where(pos + 1 < prompt_len, prompts[:, pos + 1], nxt)
+        out_tokens.append(tok)
+    seqs = jnp.stack(out_tokens, axis=1)
+    dt = time.time() - t0
+    toks = batch * (total_len - 1)
+    return seqs, {"tokens": toks, "seconds": dt, "tok_per_s": toks / dt}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    seqs, stats = serve_batch(cfg, args.batch, args.prompt_len, args.gen)
+    print(f"generated {seqs.shape} tokens: {stats['tok_per_s']:.1f} tok/s "
+          f"({stats['seconds']:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every dry-run cell.
+
+``input_specs(arch, shape)`` returns (abstract inputs, input shardings,
+step-callable) — weak-type-correct, shardable, zero device allocation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, get_config
+from repro.models.api import ModelAPI, get_model
+from repro.optim.adamw import AdamWConfig, OptState, adamw_init, adamw_update
+from repro.sharding.rules import (
+    LONG_DECODE_RULES, PREFILL_RULES, SERVE_RULES, TRAIN_RULES, ShardingRules,
+    shapes_from_defs, specs_from_defs,
+)
+
+
+def rules_for(shape: ShapeConfig, override: ShardingRules | None = None) -> ShardingRules:
+    if override is not None:
+        return override
+    if shape.kind == "train":
+        return TRAIN_RULES
+    if shape.kind == "prefill":
+        return PREFILL_RULES
+    if shape.kind == "long_decode":
+        return LONG_DECODE_RULES
+    return SERVE_RULES
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeConfig, with_labels: bool):
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+    emb = lambda s: jax.ShapeDtypeStruct(s, jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        sv = int(S * cfg.frontend_frac)
+        st = S - sv
+        d = {"patches": emb((B, sv, cfg.d_model)), "tokens": tok((B, st))}
+        if with_labels:
+            d["labels"] = tok((B, st))
+    elif cfg.family == "encdec":
+        ss = S // 2
+        d = {"src_embeds": emb((B, ss, cfg.d_model)), "tokens": tok((B, S - ss))}
+        if with_labels:
+            d["labels"] = tok((B, S - ss))
+    else:
+        d = {"tokens": tok((B, S))}
+        if with_labels:
+            d["labels"] = tok((B, S))
+    return d
+
+
+def _batch_shardings(batch, rules: ShardingRules, mesh: Mesh):
+    def spec(name, v):
+        if v.ndim == 3:
+            return NamedSharding(mesh, rules.pspec(("batch", None, None), mesh))
+        if v.ndim == 2:
+            return NamedSharding(mesh, rules.pspec(("batch", None), mesh))
+        return NamedSharding(mesh, rules.pspec(("batch",), mesh))
+    return {k: spec(k, v) for k, v in batch.items()}
+
+
+# Default microbatch counts for the full-scale train_4k cells: chosen so the
+# per-microbatch activation footprint fits v5e HBM (16 GiB/chip).  Visible
+# cost: weights are re-gathered per microbatch under FSDP (collective term).
+TRAIN_ACCUM = {
+    # tuned per cell in EXPERIMENTS.md SSPerf: minimum accum that fits 16GiB
+    # (fewer microbatches => fewer FSDP weight re-gathers), except llama4
+    # where the MoE gather pattern inverts the trend (measured).
+    "mixtral-8x7b": 8, "llama4-scout-17b-a16e": 16, "qwen2-vl-72b": 4,
+    "zamba2-2.7b": 2, "rwkv6-7b": 4, "mistral-nemo-12b": 2,
+    "llama3.2-3b": 1, "stablelm-3b": 1, "h2o-danube-1.8b": 1,
+    "seamless-m4t-medium": 1,
+}
+
+
+def make_train_step(model: ModelAPI, opt_cfg: AdamWConfig, rules, mesh,
+                    accum: int = 1):
+    cfg = model.cfg
+
+    def train_step(params, opt_state, batch):
+        def lf(p, b):
+            # Cast the f32 master params to bf16 *inside* the grad scope so
+            # every FSDP all-gather moves bf16 (XLA otherwise hoists the
+            # gather above the cast and ships f32: 2x collective bytes).
+            # Grad of the cast converts cotangents back to f32 at the
+            # parameter boundary (bf16 gradient reduction).
+            pc = jax.tree.map(
+                lambda x: x.astype(jnp.bfloat16)
+                if x.dtype == jnp.float32 else x, p)
+            return model.loss_fn(pc, b, rules=rules, mesh=mesh)
+
+        if accum > 1:
+            def micro(carry, mb):
+                gsum, ce = carry
+                (_, m), g = jax.value_and_grad(lf, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), ce + m["ce"]), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (gsum, ce), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = ce / accum
+            metrics = {"ce": loss, "aux": jnp.float32(0)}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params, batch)
+        params, opt_state, om = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(model: ModelAPI, rules, mesh):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, rules=rules, mesh=mesh)
+    return prefill_step
+
+
+def make_decode_step(model: ModelAPI, rules, mesh):
+    def serve_step(params, tokens, pos, cache):
+        return model.decode_step(params, tokens, pos, cache, rules=rules, mesh=mesh)
+    return serve_step
+
+
+def build_cell(
+    arch: str, shape_name: str, mesh: Mesh,
+    *, rules: ShardingRules | None = None,
+    opt_cfg: AdamWConfig | None = None,
+    accum: int | None = None,
+    remat_policy: str | None = None,
+):
+    """Everything needed to lower one (arch x shape) cell on ``mesh``.
+
+    Returns dict with: fn, args (ShapeDtypeStructs), in_shardings,
+    out_shardings(None => infer), donate, meta.
+    """
+    import dataclasses as _dc
+
+    cfg_true = get_config(arch)
+    # Pad head/vocab computation dims to the model-axis size so GSPMD never
+    # resolves uneven shardings with global gathers (DESIGN.md §6).
+    cfg = _dc.replace(cfg_true, shard_pad=int(mesh.shape.get("model", 1)),
+                      **({"remat_policy": remat_policy} if remat_policy else {}))
+    shape = SHAPES[shape_name]
+    rules = rules_for(shape, rules)
+    model = get_model(cfg)
+    model_true = get_model(cfg_true)
+    pspecs = model.param_specs(rules, mesh)
+    pshapes = model.param_shapes()
+    meta = {
+        "arch": arch, "shape": shape_name, "rules": rules.name,
+        "n_params": model_true.n_params(), "n_active": model_true.n_active_params(),
+        "n_params_padded": model.n_params(),
+        "family": cfg.family,
+    }
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        accum = accum if accum is not None else TRAIN_ACCUM.get(arch, 1)
+        meta["accum"] = accum
+        meta["remat_policy"] = cfg.remat_policy
+        fn = make_train_step(model, opt_cfg, rules, mesh, accum=accum)
+        batch = _batch_specs(cfg, shape, with_labels=True)
+        opt_shapes = OptState(
+            m=pshapes, v=pshapes, step=jax.ShapeDtypeStruct((), jnp.int32)
+        )
+        opt_specs = OptState(
+            m=pspecs, v=pspecs,
+            step=NamedSharding(mesh, P()),
+        )
+        return dict(
+            fn=fn,
+            args=(pshapes, opt_shapes, batch),
+            in_shardings=(pspecs, opt_specs, _batch_shardings(batch, rules, mesh)),
+            donate_argnums=(0, 1),
+            meta=meta,
+        )
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(model, rules, mesh)
+        batch = _batch_specs(cfg, shape, with_labels=False)
+        return dict(
+            fn=fn,
+            args=(pshapes, batch),
+            in_shardings=(pspecs, _batch_shardings(batch, rules, mesh)),
+            donate_argnums=(),
+            meta=meta,
+        )
+
+    # decode / long_decode: serve_step with a full KV/state cache.
+    # Serving weights are bf16 (stationary shards; halves weight memory+reads).
+    pshapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        pshapes)
+    B, S = shape.global_batch, shape.seq_len
+    cdefs = model.cache_defs_fn(B, S)
+    cache_shapes = shapes_from_defs(cdefs)
+    cache_specs = specs_from_defs(cdefs, rules, mesh)
+    fn = make_decode_step(model, rules, mesh)
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return dict(
+        fn=fn,
+        args=(pshapes, tok, pos, cache_shapes),
+        in_shardings=(
+            pspecs,
+            NamedSharding(mesh, rules.pspec(("batch",), mesh)),
+            NamedSharding(mesh, P()),
+            cache_specs,
+        ),
+        donate_argnums=(3,),
+        meta=meta,
+    )

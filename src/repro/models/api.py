@@ -1,0 +1,71 @@
+"""Family-dispatching facade over the model zoo."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, lm
+from repro.sharding.rules import (
+    ShardingRules, TRAIN_RULES, count_params, init_from_defs,
+    shapes_from_defs, specs_from_defs,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    param_defs: Any
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    cache_defs_fn: Callable
+
+    def init(self, key: jax.Array):
+        return init_from_defs(self.param_defs, key)
+
+    def param_shapes(self):
+        return shapes_from_defs(self.param_defs)
+
+    def param_specs(self, rules: ShardingRules, mesh):
+        return specs_from_defs(self.param_defs, rules, mesh)
+
+    def n_params(self) -> int:
+        return count_params(self.param_defs)
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE discounts unused experts)."""
+        cfg = self.cfg
+        if not cfg.n_experts:
+            return self.n_params()
+        total = self.n_params()
+        E, K = cfg.n_experts, cfg.top_k
+        expert_leaf = 3 * cfg.d_model * cfg.expert_ff  # wi+wg+wo per expert
+        per_layer_unused = (E - K) * expert_leaf
+        return total - cfg.n_layers * per_layer_unused
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        return ModelAPI(
+            cfg=cfg,
+            param_defs=encdec.param_defs(cfg),
+            loss_fn=lambda p, b, **kw: encdec.loss_fn(p, b, cfg, **kw),
+            prefill=lambda p, b, **kw: (encdec.forward(p, b, cfg, **kw), None),
+            decode_step=lambda p, t, pos, c, **kw: encdec.decode_step(
+                p, t, pos, c, cfg, **kw),
+            cache_defs_fn=lambda batch, seq: encdec.cache_defs(
+                cfg, batch, seq, max(seq // 2, 1)),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        param_defs=lm.param_defs(cfg),
+        loss_fn=lambda p, b, **kw: lm.loss_fn(p, b, cfg, **kw),
+        prefill=lambda p, b, **kw: lm.prefill(p, b, cfg, **kw),
+        decode_step=lambda p, t, pos, c, **kw: lm.decode_step(
+            p, t, pos, c, cfg, **kw),
+        cache_defs_fn=lambda batch, seq: lm.cache_defs(cfg, batch, seq),
+    )

@@ -1,0 +1,195 @@
+"""GQA attention: blockwise-jnp path (memory-safe everywhere) + Pallas path.
+
+The blockwise path is online-softmax over KV tiles with the GQA grouped
+einsum (KV heads never materialized at Q-head width), causal and
+sliding-window masking, and works for self/cross attention, prefill and
+decode.  The Pallas kernel (repro.kernels.flash_attention) is the TPU fast
+path; `use_pallas=True` swaps it in (validated in interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import ParamDef
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg: ModelConfig, layers: tuple[int, ...] = (), d_model: int | None = None):
+    D = d_model or cfg.d_model
+    H, KV, hd = cfg.heads_c, cfg.kv_heads_c, cfg.head_dim
+    lx = ("layers",) * len(layers)
+    d = {
+        "wq": ParamDef(layers + (D, H, hd), lx + ("embed_fsdp", "heads", None)),
+        "wk": ParamDef(layers + (D, KV, hd), lx + ("embed_fsdp", "kv", None)),
+        "wv": ParamDef(layers + (D, KV, hd), lx + ("embed_fsdp", "kv", None)),
+        "wo": ParamDef(layers + (H, hd, D), lx + ("heads", None, "embed_fsdp")),
+    }
+    if cfg.qk_norm:
+        d["q_norm"] = ParamDef(layers + (hd,), lx + (None,), init="ones")
+        d["k_norm"] = ParamDef(layers + (hd,), lx + (None,), init="ones")
+    return d
+
+
+def _mask_block(
+    q_pos: jax.Array,     # [Sq]
+    k_pos: jax.Array,     # [Bk]
+    causal: bool,
+    window: Optional[int],
+    k_valid: Optional[jax.Array] = None,  # [Bk] bool (cache fill mask)
+) -> jax.Array:
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    if k_valid is not None:
+        m &= k_valid[None, :]
+    return m
+
+
+def _block_attn(q, k, v, q_pos, k_pos, *, causal, window, scale, k_valid=None):
+    """One (q-tile x kv-tile) online-softmax update step.
+
+    q: [B, Sq, KV, G, hd]   k/v: [B, Bk, KV, hd]
+    returns partial (m, l, acc) update terms.
+    """
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    mask = _mask_block(q_pos, k_pos, causal, window, k_valid)  # [Sq, Bk]
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.max(s, axis=-1)                                   # [B,KV,G,Sq]
+    p = jnp.exp(s - m_new[..., None])
+    l_new = jnp.sum(p, axis=-1)
+    acc_new = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v)
+    return m_new, l_new, acc_new
+
+
+def _combine(m1, l1, a1, m2, l2, a2):
+    m = jnp.maximum(m1, m2)
+    e1 = jnp.exp(m1 - m)
+    e2 = jnp.exp(m2 - m)
+    l = l1 * e1 + l2 * e2
+    a = a1 * e1[..., None].astype(a1.dtype) + a2 * e2[..., None].astype(a2.dtype)
+    return m, l, a
+
+
+def blockwise_attention(
+    q: jax.Array,              # [B, Sq, H, hd]
+    k: jax.Array,              # [B, Sk, KV, hd]
+    v: jax.Array,              # [B, Sk, KV, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: jax.Array | int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    k_valid: Optional[jax.Array] = None,   # [B? or broadcast, Sk] bool
+) -> jax.Array:
+    """Memory-safe attention; never materializes [Sq, Sk] scores."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, KV, G, hd)
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    # pad to tile multiples
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    if pq:
+        qg = jnp.pad(qg, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    kv_valid = jnp.arange(Sk + pk) < Sk
+    if k_valid is not None:
+        kv_valid = kv_valid & jnp.pad(k_valid.reshape(-1), (0, pk))
+    nq, nk = (Sq + pq) // block_q, (Sk + pk) // block_k
+
+    q_positions = q_offset + jnp.arange(Sq + pq)
+    k_positions = jnp.arange(Sk + pk)
+
+    qg = qg.reshape(B, nq, block_q, KV, G, hd)
+
+    def q_tile(carry, qi):
+        qt, qp = qi                                  # [B,block_q,KV,G,hd], [block_q]
+        m0 = jnp.full((B, KV, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, block_q, hd), qt.dtype)
+
+        # checkpoint the inner tile: backward recomputes per-tile scores
+        # instead of stacking [nq, nk, ...] score tensors (scan-of-scan remat)
+        @jax.checkpoint
+        def kv_tile(carry2, ki):
+            kt, vt, kp, kval = ki
+            m, l, a = carry2
+            m2, l2, a2 = _block_attn(
+                qt, kt, vt, qp, kp, causal=causal, window=window,
+                scale=scale, k_valid=kval,
+            )
+            return _combine(m, l, a, m2, l2, a2), None
+
+        ks = k.reshape(B, nk, block_k, KV, hd).swapaxes(0, 1)
+        vs = v.reshape(B, nk, block_k, KV, hd).swapaxes(0, 1)
+        kps = k_positions.reshape(nk, block_k)
+        kvs = kv_valid.reshape(nk, block_k)
+        (m, l, a), _ = jax.lax.scan(kv_tile, (m0, l0, a0), (ks, vs, kps, kvs))
+        out = a / jnp.maximum(l, 1e-30)[..., None].astype(a.dtype)
+        return carry, out                             # [B,KV,G,block_q,hd]
+
+    _, outs = jax.lax.scan(
+        q_tile, None,
+        (qg.swapaxes(0, 1), q_positions.reshape(nq, block_q)),
+    )
+    # outs: [nq, B, KV, G, block_q, hd] -> [B, Sq, H, hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq + pq, H, hd)
+    return out[:, :Sq]
+
+
+def decode_attention(
+    q: jax.Array,              # [B, 1, H, hd]
+    k_cache: jax.Array,        # [B, S, KV, hd]
+    v_cache: jax.Array,
+    *,
+    pos: jax.Array,            # i32[] current position (# valid cache entries - 1)
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Single-token decode: scores fit in memory; one fused softmax."""
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    s = s * (hd ** -0.5)
+    kpos = jnp.arange(S)
+    valid = kpos <= pos
+    if window is not None:
+        valid &= kpos > pos - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+def attend(
+    cfg: ModelConfig,
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool, window=None, q_offset=0, k_valid=None,
+) -> jax.Array:
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            block_q=cfg.block_q, block_k=cfg.block_k, interpret=True,
+        )
+    return blockwise_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        block_q=cfg.block_q, block_k=cfg.block_k, k_valid=k_valid,
+    )

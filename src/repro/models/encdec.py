@@ -1,0 +1,199 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, S_src, d_model]; the encoder is a
+bidirectional transformer over them, the decoder a causal transformer with
+cross-attention.  Same ParamDef/scan machinery as ``lm.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.attention import blockwise_attention
+from repro.models.layers import (
+    apply_mlp, apply_norm, apply_rope, cross_entropy, embed_defs,
+    embed_tokens, logits_from_hidden, mlp_defs, norm_defs,
+)
+from repro.sharding.rules import ParamDef, ShardingRules, TRAIN_RULES, constrain
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    enc_l, dec_l = cfg.enc_layers, cfg.n_layers
+    return {
+        "embed": embed_defs(cfg),
+        "frontend_proj": ParamDef((cfg.d_model, cfg.d_model), ("embed_fsdp", None)),
+        "encoder": {
+            "ln1": norm_defs(cfg, (enc_l,)),
+            "attn": attn.attn_defs(cfg, (enc_l,)),
+            "ln2": norm_defs(cfg, (enc_l,)),
+            "mlp": mlp_defs(cfg, (enc_l,)),
+        },
+        "enc_norm": norm_defs(cfg),
+        "decoder": {
+            "ln1": norm_defs(cfg, (dec_l,)),
+            "self_attn": attn.attn_defs(cfg, (dec_l,)),
+            "ln_x": norm_defs(cfg, (dec_l,)),
+            "cross_attn": attn.attn_defs(cfg, (dec_l,)),
+            "ln2": norm_defs(cfg, (dec_l,)),
+            "mlp": mlp_defs(cfg, (dec_l,)),
+        },
+        "final_norm": norm_defs(cfg),
+    }
+
+
+def cache_defs(cfg: ModelConfig, batch: int, tgt_len: int, src_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    KV, hd, L = cfg.kv_heads_c, cfg.head_dim, cfg.n_layers
+
+    def kv(length):
+        return {
+            "k": ParamDef((L, batch, length, KV, hd),
+                          ("layers", "cache_batch", "cache_seq", "kv", None),
+                          init="zeros", dtype=dt),
+            "v": ParamDef((L, batch, length, KV, hd),
+                          ("layers", "cache_batch", "cache_seq", "kv", None),
+                          init="zeros", dtype=dt),
+        }
+
+    return {"self": kv(tgt_len), "cross": kv(src_len)}
+
+
+def _proj_qkv(cfg, p, x, positions=None):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if positions is not None:
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+    return q, k, v
+
+
+def _out(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+def encode(params, src_embeds, cfg: ModelConfig, *, rules=TRAIN_RULES, mesh=None):
+    dt = jnp.dtype(cfg.dtype)
+    h = jnp.einsum(
+        "bsd,de->bse", src_embeds.astype(dt), params["frontend_proj"].astype(dt)
+    )
+    h = constrain(h, ("act_batch", "act_seq", "act_embed"), rules, mesh)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+
+    def body(carry, lp):
+        hh = carry
+        a = apply_norm(lp["ln1"], hh, cfg)
+        q, k, v = _proj_qkv(cfg, lp["attn"], a, positions)
+        o = blockwise_attention(
+            q, k, v, causal=False, block_q=cfg.block_q, block_k=cfg.block_k
+        )
+        hh = hh + _out(lp["attn"], o)
+        m = apply_norm(lp["ln2"], hh, cfg)
+        hh = hh + apply_mlp(lp["mlp"], m, cfg)
+        hh = constrain(hh, ("act_batch", "act_seq", "act_embed"), rules, mesh)
+        return hh, 0
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["encoder"])
+    return apply_norm(params["enc_norm"], h, cfg)
+
+
+def _decoder_block(cfg, lp, h, enc_out, positions, rules, mesh):
+    a = apply_norm(lp["ln1"], h, cfg)
+    q, k, v = _proj_qkv(cfg, lp["self_attn"], a, positions)
+    o = blockwise_attention(
+        q, k, v, causal=True, block_q=cfg.block_q, block_k=cfg.block_k
+    )
+    h = h + _out(lp["self_attn"], o)
+    x = apply_norm(lp["ln_x"], h, cfg)
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["cross_attn"]["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"].astype(dt))
+    o = blockwise_attention(
+        q, k, v, causal=False, block_q=cfg.block_q, block_k=cfg.block_k
+    )
+    h = h + _out(lp["cross_attn"], o)
+    m = apply_norm(lp["ln2"], h, cfg)
+    h = h + apply_mlp(lp["mlp"], m, cfg)
+    return constrain(h, ("act_batch", "act_seq", "act_embed"), rules, mesh)
+
+
+def forward(params, batch, cfg: ModelConfig, *, rules=TRAIN_RULES, mesh=None):
+    """batch: {"src_embeds": [B,S_src,D], "tokens": [B,S_tgt]}."""
+    enc_out = encode(params, batch["src_embeds"], cfg, rules=rules, mesh=mesh)
+    h = embed_tokens(params["embed"], batch["tokens"], cfg)
+    h = constrain(h, ("act_batch", "act_seq", "act_embed"), rules, mesh)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)[None]
+
+    def body(carry, lp):
+        return _decoder_block(cfg, lp, carry, enc_out, positions, rules, mesh), 0
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["decoder"])
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = logits_from_hidden(params["embed"], h, cfg)
+    logits = constrain(logits, ("batch", None, "vocab"), rules, mesh)
+    return logits
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, rules=TRAIN_RULES, mesh=None):
+    from repro.models.layers import chunked_lm_loss
+    enc_out = encode(params, batch["src_embeds"], cfg, rules=rules, mesh=mesh)
+    h = embed_tokens(params["embed"], batch["tokens"], cfg)
+    h = constrain(h, ("act_batch", "act_seq", "act_embed"), rules, mesh)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)[None]
+
+    def body(carry, lp):
+        return _decoder_block(cfg, lp, carry, enc_out, positions, rules, mesh), 0
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["decoder"])
+    h = apply_norm(params["final_norm"], h, cfg)
+    loss = chunked_lm_loss(params["embed"], h, batch["labels"], cfg,
+                           rules, mesh)
+    return loss, {"ce": loss, "aux": jnp.float32(0)}
+
+
+def decode_step(params, tokens, pos, cache, cfg: ModelConfig,
+                *, rules=TRAIN_RULES, mesh=None):
+    """One decoder token; cross K/V precomputed in ``cache['cross']``."""
+    h = embed_tokens(params["embed"], tokens[:, None], cfg)
+    positions = jnp.full((1, 1), pos, dtype=jnp.int32)
+
+    def body(carry, xs):
+        lp, sk, sv, xk, xv = xs
+        hh = carry
+        a = apply_norm(lp["ln1"], hh, cfg)
+        q, k, v = _proj_qkv(cfg, lp["self_attn"], a, positions)
+        sk = jax.lax.dynamic_update_slice_in_dim(sk, k, pos, axis=1)
+        sv = jax.lax.dynamic_update_slice_in_dim(sv, v, pos, axis=1)
+        o = attn.decode_attention(q, sk, sv, pos=pos)
+        hh = hh + _out(lp["self_attn"], o)
+        x = apply_norm(lp["ln_x"], hh, cfg)
+        q = jnp.einsum("bsd,dhk->bshk", x, lp["cross_attn"]["wq"].astype(x.dtype))
+        o = attn.decode_attention(q, xk, xv, pos=xk.shape[1] - 1)
+        hh = hh + _out(lp["cross_attn"], o)
+        m = apply_norm(lp["ln2"], hh, cfg)
+        hh = hh + apply_mlp(lp["mlp"], m, cfg)
+        return hh, (sk, sv)
+
+    h, (nsk, nsv) = jax.lax.scan(
+        body, h,
+        (params["decoder"], cache["self"]["k"], cache["self"]["v"],
+         cache["cross"]["k"], cache["cross"]["v"]),
+    )
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = logits_from_hidden(params["embed"], h, cfg)[:, 0]
+    return logits, {"self": {"k": nsk, "v": nsv}, "cross": cache["cross"]}

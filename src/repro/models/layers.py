@@ -1,0 +1,176 @@
+"""Shared neural building blocks (functional, pytree params)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_defs(cfg: ModelConfig, layers: tuple[int, ...] = ()):
+    d = {"scale": ParamDef(layers + (cfg.d_model,),
+                           ("layers",) * len(layers) + (None,), init="ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamDef(layers + (cfg.d_model,),
+                             ("layers",) * len(layers) + (None,), init="zeros")
+    return d
+
+
+def apply_norm(p, x: jax.Array, cfg: ModelConfig, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        out = xf * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_norm_simple(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, layers: tuple[int, ...] = (), d_ff: int | None = None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    lx = ("layers",) * len(layers)
+    if cfg.act == "swiglu":
+        return {
+            "wi": ParamDef(layers + (D, F), lx + ("embed_fsdp", "mlp")),
+            "wg": ParamDef(layers + (D, F), lx + ("embed_fsdp", "mlp")),
+            "wo": ParamDef(layers + (F, D), lx + ("mlp", "embed_fsdp")),
+        }
+    return {
+        "wi": ParamDef(layers + (D, F), lx + ("embed_fsdp", "mlp")),
+        "wo": ParamDef(layers + (F, D), lx + ("mlp", "embed_fsdp")),
+    }
+
+
+def apply_mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    if cfg.act == "swiglu":
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (RoPE / partial rotary / M-RoPE stub)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, rotary_pct: float, theta: float):
+    rot = int(head_dim * rotary_pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    inv, rot = rope_freqs(x.shape[-1], cfg.rotary_pct, cfg.rope_theta)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, rot/2]
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1.astype(x.dtype), out2.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg: ModelConfig):
+    d = {"tok": ParamDef((cfg.vocab_c, cfg.d_model), ("vocab", "embed_fsdp"),
+                         init="embed", scale=0.02)}
+    if not cfg.tie_embeddings:
+        d["unembed"] = ParamDef((cfg.d_model, cfg.vocab_c), ("embed_fsdp", "vocab"))
+    return d
+
+
+def embed_tokens(p, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    return p["tok"].astype(dt)[tokens]
+
+
+def logits_from_hidden(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, p["tok"].astype(dt))
+    return jnp.einsum("bsd,dv->bsv", x, p["unembed"].astype(dt))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE in f32; labels [B, S] int32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_lm_loss(
+    embed_p, h: jax.Array, labels: jax.Array, cfg: ModelConfig,
+    rules=None, mesh=None, *, chunk: int = 1024,
+) -> jax.Array:
+    """Fused unembed + CE, scanned over sequence chunks.
+
+    Never materializes the [B, S, V] logits (MaxText-style): per chunk the
+    [B, chunk, V] logits are computed, reduced to (lse, gold) and discarded;
+    the checkpoint makes backward recompute them chunk-by-chunk.  Cuts the
+    dominant train-memory term for large-vocab archs.
+    """
+    from repro.sharding.rules import constrain as _constrain
+
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (S + pad) // chunk
+    hs = h.reshape(B, nc, chunk, D).swapaxes(0, 1)
+    ls = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        hc, lc = inp                                  # [B, chunk, D], [B, chunk]
+        logits = logits_from_hidden(embed_p, hc, cfg)
+        logits = _constrain(logits, ("batch", None, "vocab"), rules, mesh)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)           # [B, chunk]
+        iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, 2)
+        gold = jnp.sum(jnp.where(iota == lc[..., None], lf, 0.0), axis=-1)
+        valid = (lc >= 0).astype(jnp.float32)
+        nll = (lse - gold) * valid
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(valid)), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)), (hs, ls))
+    return total / jnp.maximum(count, 1.0)

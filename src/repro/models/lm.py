@@ -1,0 +1,417 @@
+"""Decoder-only LM families: dense / moe / hybrid(zamba2) / rwkv / vlm.
+
+One declarative ``param_defs`` tree per family (stacked [L, ...] leaves for
+``lax.scan`` over layers — keeps HLO size and 512-way SPMD compile time
+O(1) in depth), plus three entry points used by the launcher:
+
+    loss_fn(params, batch)                 -> scalar loss   (train cells)
+    prefill(params, batch)                 -> (last_logits, cache)
+    decode_step(params, tokens, pos, cache)-> (logits, cache)
+
+All activations carry logical-axis sharding constraints resolved through a
+``ShardingRules`` table, so one model definition serves every mesh/layout.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_mlp, apply_norm, apply_rope, cross_entropy, embed_defs,
+    embed_tokens, logits_from_hidden, mlp_defs, norm_defs,
+)
+from repro.sharding.rules import ParamDef, ShardingRules, TRAIN_RULES, constrain
+
+
+# ---------------------------------------------------------------------------
+# parameter trees
+# ---------------------------------------------------------------------------
+
+def _block_defs(cfg: ModelConfig, layers: tuple[int, ...]):
+    d = {
+        "ln1": norm_defs(cfg, layers),
+        "attn": attn.attn_defs(cfg, layers),
+        "ln2": norm_defs(cfg, layers),
+    }
+    if cfg.n_experts:
+        d["moe"] = moe_mod.moe_defs(cfg, layers)
+    else:
+        d["mlp"] = mlp_defs(cfg, layers)
+    return d
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    fam = cfg.family
+    defs: Dict[str, Any] = {"embed": embed_defs(cfg), "final_norm": norm_defs(cfg)}
+    if fam in ("dense", "moe", "vlm"):
+        defs["blocks"] = _block_defs(cfg, (cfg.n_layers,))
+        if fam == "vlm":
+            defs["frontend_proj"] = ParamDef(
+                (cfg.d_model, cfg.d_model), ("embed_fsdp", None)
+            )
+    elif fam == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        defs["mamba"] = ssm_mod.ssm_defs(cfg, (G, cfg.attn_every))
+        defs["shared_attn"] = {
+            "ln1": norm_defs(cfg),
+            "attn": attn.attn_defs(cfg),
+            "ln2": norm_defs(cfg),
+            "mlp": mlp_defs(cfg),
+        }
+    elif fam == "rwkv":
+        defs["blocks"] = {
+            "ln1": norm_defs(cfg, (cfg.n_layers,)),
+            "ln2": norm_defs(cfg, (cfg.n_layers,)),
+            **rwkv_mod.rwkv_defs(cfg, (cfg.n_layers,)),
+        }
+    else:
+        raise ValueError(f"lm.py does not handle family {fam!r}")
+    return defs
+
+
+def cache_defs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Decode-cache ParamDef tree (axes drive dry-run cache sharding)."""
+    dt = jnp.dtype(cfg.dtype)
+    fam = cfg.family
+    KV, hd = cfg.kv_heads_c, cfg.head_dim
+    cache_len = min(seq, cfg.window) if cfg.window else seq
+
+    def kv(l_shape, l_axes):
+        return {
+            "k": ParamDef(l_shape + (batch, cache_len, KV, hd),
+                          l_axes + ("cache_batch", "cache_seq", "kv", None),
+                          init="zeros", dtype=dt),
+            "v": ParamDef(l_shape + (batch, cache_len, KV, hd),
+                          l_axes + ("cache_batch", "cache_seq", "kv", None),
+                          init="zeros", dtype=dt),
+        }
+
+    if fam in ("dense", "moe", "vlm"):
+        return kv((cfg.n_layers,), ("layers",))
+    if fam == "hybrid":
+        G, K = cfg.n_layers // cfg.attn_every, cfg.attn_every
+        H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        return {
+            "attn": kv((G,), ("layers",)),
+            "ssm_state": ParamDef((G, K, batch, H, P, N),
+                                  ("layers", "layers", "cache_batch", "state", None, None),
+                                  init="zeros", dtype=dt),
+            "conv": ParamDef((G, K, batch, ssm_mod.CONV_K - 1,
+                              cfg.d_inner + 2 * N),
+                             ("layers", "layers", "cache_batch", None, "mlp"),
+                             init="zeros", dtype=dt),
+        }
+    if fam == "rwkv":
+        H = cfg.d_model // 64
+        return {
+            "wkv": ParamDef((cfg.n_layers, batch, H, 64, 64),
+                            ("layers", "cache_batch", "state", None, None),
+                            init="zeros", dtype=jnp.float32),
+            "shift_att": ParamDef((cfg.n_layers, batch, cfg.d_model),
+                                  ("layers", "cache_batch", None), init="zeros", dtype=dt),
+            "shift_ffn": ParamDef((cfg.n_layers, batch, cfg.d_model),
+                                  ("layers", "cache_batch", None), init="zeros", dtype=dt),
+        }
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# transformer block (dense / moe / vlm share it)
+# ---------------------------------------------------------------------------
+
+def _attention_sublayer(cfg, p, h, positions, rules, mesh, *, cache=None,
+                        pos=None, window):
+    dt = h.dtype
+    B, S, D = h.shape
+    a = apply_norm(p["ln1"], h, cfg)
+    q = jnp.einsum("bsd,dhk->bshk", a, p["attn"]["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", a, p["attn"]["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", a, p["attn"]["wv"].astype(dt))
+    if cfg.qk_norm:
+        from repro.models.layers import rms_norm_simple
+        q = rms_norm_simple(q) * p["attn"]["q_norm"].astype(dt)
+        k = rms_norm_simple(k) * p["attn"]["k_norm"].astype(dt)
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    q = constrain(q, ("batch", None, "heads", None), rules, mesh)
+    k = constrain(k, ("batch", None, "kv", None), rules, mesh)
+
+    if cache is None:
+        o = attn.attend(cfg, q, k, v, causal=True, window=window)
+        new_cache = {"k": k, "v": v}
+    else:
+        ck, cv, cpos = cache["k"], cache["v"], pos
+        if cfg.window:
+            slot = cpos % ck.shape[1]            # ring buffer for SWA caches
+        else:
+            slot = cpos
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, slot, axis=1)
+        if cfg.window:
+            o = attn.decode_attention(q, ck, cv, pos=jnp.minimum(cpos, ck.shape[1] - 1))
+        else:
+            o = attn.decode_attention(q, ck, cv, pos=cpos, window=window)
+        new_cache = {"k": ck, "v": cv}
+    o = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(dt))
+    o = constrain(o, ("act_batch", "act_seq", "act_embed"), rules, mesh)
+    return h + o, new_cache
+
+
+def _block(cfg, p, h, positions, rules, mesh, *, cache=None, pos=None):
+    h, new_cache = _attention_sublayer(
+        cfg, p, h, positions, rules, mesh, cache=cache, pos=pos, window=cfg.window
+    )
+    m = apply_norm(p["ln2"], h, cfg)
+    if cfg.n_experts:
+        y, aux = moe_mod.apply_moe(p["moe"], m, cfg, rules, mesh)
+    else:
+        y, aux = apply_mlp(p["mlp"], m, cfg), jnp.float32(0)
+    y = constrain(y, ("act_batch", "act_seq", "act_embed"), rules, mesh)
+    h = h + y
+    h = constrain(h, ("act_batch", "act_seq", "act_embed"), rules, mesh)
+    return h, new_cache, aux
+
+
+def _rwkv_block(cfg, p, h, rules, mesh, *, cache=None):
+    a = apply_norm(p["ln1"], h, cfg)
+    y, c_att = rwkv_mod.apply_time_mix(p["time_mix"], a, cfg, cache=cache)
+    h = h + y
+    m = apply_norm(p["ln2"], h, cfg)
+    y, c_ffn = rwkv_mod.apply_channel_mix(p["channel_mix"], m, cfg, cache=cache)
+    h = h + y
+    h = constrain(h, ("act_batch", "act_seq", "act_embed"), rules, mesh)
+    new_cache = None if cache is None else {**c_att, **c_ffn}
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full forward passes
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat:
+        pol = (jax.checkpoint_policies.checkpoint_dots
+               if cfg.remat_policy == "dots"
+               else jax.checkpoint_policies.nothing_saveable)
+        return jax.checkpoint(fn, policy=pol)
+    return fn
+
+
+def _stack_forward(cfg, params, h, positions, rules, mesh, collect_cache: bool):
+    """Scan over layers for dense/moe/vlm; returns (h, cache_tree, aux)."""
+
+    def body(carry, lp):
+        h, aux = carry
+        h, kv, a = _block(cfg, lp, h, positions, rules, mesh)
+        return (h, aux + a), (kv if collect_cache else 0)
+
+    body = _maybe_remat(cfg, body)
+    (h, aux), caches = jax.lax.scan(body, (h, jnp.float32(0)), params["blocks"])
+    return h, (caches if collect_cache else None), aux
+
+
+def _hybrid_forward(cfg, params, h, positions, rules, mesh, collect_cache: bool):
+    shared = params["shared_attn"]
+
+    def group(carry, gp):
+        h, aux = carry
+
+        def mamba_layer(hh, mp):
+            o, _ = ssm_mod.apply_ssm(mp, hh, cfg)
+            hh = constrain(hh + o, ("act_batch", "act_seq", "act_embed"),
+                           rules, mesh)
+            return hh, 0
+
+        h, _ = jax.lax.scan(mamba_layer, h, gp)
+        h, kv, a = _block(cfg, shared, h, positions, rules, mesh)
+        return (h, aux + a), (kv if collect_cache else 0)
+
+    group = _maybe_remat(cfg, group)
+    (h, aux), caches = jax.lax.scan(group, (h, jnp.float32(0)), params["mamba"])
+    return h, (caches if collect_cache else None), aux
+
+
+def _rwkv_forward(cfg, params, h, rules, mesh):
+    def body(carry, lp):
+        return _rwkv_block(cfg, lp, carry, rules, mesh)[0], 0
+
+    body = _maybe_remat(cfg, body)
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    return h, None, jnp.float32(0)
+
+
+def _embed_inputs(cfg, params, batch, rules, mesh):
+    """Token (+frontend) embedding; returns (h, positions, n_frontend)."""
+    tokens = batch["tokens"]
+    h = embed_tokens(params["embed"], tokens, cfg)
+    n_front = 0
+    if cfg.family == "vlm" and "patches" in batch:
+        dtp = h.dtype
+        pat = jnp.einsum(
+            "bsd,de->bse", batch["patches"].astype(dtp),
+            params["frontend_proj"].astype(dtp),
+        )
+        h = jnp.concatenate([pat, h], axis=1)
+        n_front = batch["patches"].shape[1]
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    h = constrain(h, ("act_batch", "act_seq", "act_embed"), rules, mesh)
+    return h, positions, n_front
+
+
+def _backbone(params, batch, cfg: ModelConfig, *, rules, mesh, collect_cache):
+    """Embed + blocks + final norm; returns (h_text, cache, aux)."""
+    h, positions, n_front = _embed_inputs(cfg, params, batch, rules, mesh)
+    if cfg.family in ("dense", "moe", "vlm"):
+        h, cache, aux = _stack_forward(
+            cfg, params, h, positions, rules, mesh, collect_cache
+        )
+    elif cfg.family == "hybrid":
+        h, cache, aux = _hybrid_forward(
+            cfg, params, h, positions, rules, mesh, collect_cache
+        )
+    elif cfg.family == "rwkv":
+        h, cache, aux = _rwkv_forward(cfg, params, h, rules, mesh)
+    else:
+        raise ValueError(cfg.family)
+    h = apply_norm(params["final_norm"], h, cfg)
+    if n_front:
+        h = h[:, n_front:]
+    return h, cache, aux
+
+
+def forward(
+    params, batch, cfg: ModelConfig,
+    *, rules: ShardingRules = TRAIN_RULES, mesh=None, collect_cache=False,
+    last_only: bool = False,
+):
+    """Full-sequence forward. Returns (logits, cache, aux).
+
+    ``last_only`` computes logits for the final position only (prefill never
+    pays the [B, S, V] unembed).
+    """
+    h, cache, aux = _backbone(params, batch, cfg, rules=rules, mesh=mesh,
+                              collect_cache=collect_cache)
+    if last_only:
+        h = h[:, -1:]
+    logits = logits_from_hidden(params["embed"], h, cfg)
+    logits = constrain(logits, ("batch", None, "vocab"), rules, mesh)
+    return logits, cache, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, rules=TRAIN_RULES, mesh=None):
+    from repro.models.layers import chunked_lm_loss
+    h, _, aux = _backbone(params, batch, cfg, rules=rules, mesh=mesh,
+                          collect_cache=False)
+    loss = chunked_lm_loss(params["embed"], h, batch["labels"], cfg,
+                           rules, mesh)
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch, cfg: ModelConfig, *, rules=TRAIN_RULES, mesh=None):
+    """Process a full prompt; emit last-position logits + decode cache.
+
+    For attention families the per-layer K/V tensors are the cache (SWA
+    archs keep the trailing ``window``); recurrent families re-run a short
+    recurrence to produce their state (cache collection for them comes from
+    the decode path; prefill here returns final logits only).
+    """
+    logits, cache, _ = forward(
+        params, batch, cfg, rules=rules, mesh=mesh,
+        collect_cache=cfg.family in ("dense", "moe", "vlm", "hybrid"),
+        last_only=True,
+    )
+    return logits[:, -1], cache
+
+
+def decode_step(params, tokens, pos, cache, cfg: ModelConfig,
+                *, rules=TRAIN_RULES, mesh=None):
+    """One decode step. tokens: i32[B]; pos: i32 scalar; cache: pytree."""
+    h = embed_tokens(params["embed"], tokens[:, None], cfg)
+    h = constrain(h, ("act_batch", None, "act_embed"), rules, mesh)
+    positions = jnp.full((1, 1), pos, dtype=jnp.int32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            lp, ck, cv = xs
+            hh, new_cache, _ = _block(
+                cfg, lp, carry, positions, rules, mesh,
+                cache={"k": ck, "v": cv}, pos=pos,
+            )
+            return hh, (new_cache["k"], new_cache["v"])
+
+        h, (nk, nv) = jax.lax.scan(
+            body, h, (params["blocks"], cache["k"], cache["v"])
+        )
+        new_cache = {"k": nk, "v": nv}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(carry, xs):
+            gp, ck, cv, sst, scv = xs
+            hh = carry
+
+            def mamba_layer(c, xs2):
+                mp, st_i, cv_i = xs2
+                o, nc = ssm_mod.apply_ssm(
+                    mp, c, cfg, cache={"ssm_state": st_i, "conv": cv_i}
+                )
+                return c + o, (nc["ssm_state"], nc["conv"])
+
+            hh, (nst, ncv) = jax.lax.scan(mamba_layer, hh, (gp, sst, scv))
+            hh, kv, _ = _block(
+                cfg, shared, hh, positions, rules, mesh,
+                cache={"k": ck, "v": cv}, pos=pos,
+            )
+            return hh, (kv["k"], kv["v"], nst, ncv)
+
+        h, (nk, nv, nst, ncv) = jax.lax.scan(
+            group, h,
+            (params["mamba"], cache["attn"]["k"], cache["attn"]["v"],
+             cache["ssm_state"], cache["conv"]),
+        )
+        new_cache = {"attn": {"k": nk, "v": nv}, "ssm_state": nst, "conv": ncv}
+
+    elif cfg.family == "rwkv":
+        def body(carry, xs):
+            lp, wkv, sa, sf = xs
+            hh = carry
+            a = apply_norm(lp["ln1"], hh, cfg)
+            y, ca = rwkv_mod.apply_time_mix(
+                lp["time_mix"], a, cfg, cache={"wkv": wkv, "shift_att": sa}
+            )
+            hh = hh + y
+            m = apply_norm(lp["ln2"], hh, cfg)
+            y, cf = rwkv_mod.apply_channel_mix(
+                lp["channel_mix"], m, cfg, cache={"shift_ffn": sf}
+            )
+            hh = hh + y
+            return hh, (ca["wkv"], ca["shift_att"], cf["shift_ffn"])
+
+        h, (nw, nsa, nsf) = jax.lax.scan(
+            body, h,
+            (params["blocks"], cache["wkv"], cache["shift_att"],
+             cache["shift_ffn"]),
+        )
+        new_cache = {"wkv": nw, "shift_att": nsa, "shift_ffn": nsf}
+    else:
+        raise ValueError(cfg.family)
+
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = logits_from_hidden(params["embed"], h, cfg)[:, 0]
+    logits = constrain(logits, ("act_batch", "vocab"), rules, mesh)
+    return logits, new_cache

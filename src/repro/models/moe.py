@@ -1,0 +1,140 @@
+"""Mixture-of-Experts layer: top-k routing + capacity-bounded dispatch.
+
+Dispatch is *data-local*: tokens are routed within their own batch row
+(vmapped), so the scatter/gather never crosses the data axis — the baseline
+layout keeps experts TP-sharded on their ffn dim ("mlp" -> model) and pays
+zero all-to-all.  Expert-parallel (experts -> data axis, all-to-all
+dispatch) is a hillclimb variant (EXPERIMENTS.md §Perf).
+
+Capacity C = ceil(S*k*cf/E) per (row, expert); overflow tokens are dropped
+(standard Switch behaviour) and the aux load-balance loss pushes the router
+toward uniformity.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import mlp_defs, apply_mlp
+from repro.sharding.rules import ParamDef
+
+
+def moe_defs(cfg: ModelConfig, layers: tuple[int, ...] = ()):
+    D, F, E = cfg.d_model, cfg.expert_ff, cfg.n_experts
+    lx = ("layers",) * len(layers)
+    d = {
+        "router": ParamDef(layers + (D, E), lx + ("embed_fsdp", None)),
+        "wi": ParamDef(layers + (E, D, F), lx + ("experts", "embed_fsdp", "mlp")),
+        "wg": ParamDef(layers + (E, D, F), lx + ("experts", "embed_fsdp", "mlp")),
+        "wo": ParamDef(layers + (E, F, D), lx + ("experts", "mlp", "embed_fsdp")),
+    }
+    if cfg.n_shared_experts:
+        d["shared"] = mlp_defs(cfg, layers, d_ff=cfg.expert_ff * cfg.n_shared_experts)
+    return d
+
+
+def _capacity(S: int, cfg: ModelConfig) -> int:
+    return max(int(math.ceil(S * cfg.top_k * cfg.capacity_factor / cfg.n_experts)), 1)
+
+
+def apply_moe(p, x: jax.Array, cfg: ModelConfig, rules=None,
+              mesh=None) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    Explicitly batched dispatch (no vmap/scatter over hidden): the token
+    gather is a ``repeat``, the combine is a reshape-sum, and the only
+    scatter carries an iota batch index — all of which GSPMD shards on the
+    batch dim given the constraints below (a vmapped scatter made it
+    replicate the global batch: 84 GiB/device on mixtral train).
+    """
+    from repro.sharding.rules import constrain
+
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(S, cfg)
+    dt = x.dtype
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_val, gate_idx = jax.lax.top_k(probs, K)           # [B, S, K]
+    gate_val = gate_val / jnp.maximum(gate_val.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))                       # [E]
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = E * jnp.sum(me * ce)
+
+    # --- group-local dispatch (GShard semantics) --------------------------
+    # Capacity is per (batch row x sequence shard): dispatch never crosses
+    # the act_seq sharding (no all-gather of the sequence) and the
+    # spmd_axis_name'd vmaps tell GSPMD the scatter/gather are parallel on
+    # the mapped dims (a plain batched scatter made it gather the *global*
+    # [B, S*K, D] tensor every layer).
+    seq_ax = rules.physical("act_seq", mesh) if (rules and mesh) else None
+    bat_ax = rules.physical("act_batch", mesh) if (rules and mesh) else None
+    shards = 1
+    if seq_ax is not None:
+        sz = (mesh.shape[seq_ax] if isinstance(seq_ax, str)
+              else int(np.prod([mesh.shape[a] for a in seq_ax])))
+        if S % sz == 0 and S >= sz:
+            shards = sz
+    # One-hot dispatch matmul cost is O(S_g^2) per group: cap the group at
+    # ~1024 tokens even when act_seq is unsharded (prefill), keeping the
+    # group count a multiple of the seq-shard count so dispatch never
+    # crosses shards.
+    nG = shards
+    while S % (nG * 2) == 0 and S // nG > 1024:
+        nG *= 2
+    S_g = S // nG
+    C = _capacity(S_g, cfg)
+    T = S_g * K
+    # expert weights: gathered once per layer under FSDP training rules
+    # (moe_wD=None), or kept D-sharded stationary when serving (moe_wD=data)
+    wi = constrain(p["wi"].astype(dt), ("experts", "moe_wD", "mlp"), rules, mesh)
+    wg = constrain(p["wg"].astype(dt), ("experts", "moe_wD", "mlp"), rules, mesh)
+    wo = constrain(p["wo"].astype(dt), ("experts", "mlp", "moe_wD"), rules, mesh)
+
+    def row(xr, er, gr):
+        """One (row x group): xr [S_g, D]; er/gr [S_g, K]."""
+        ef = er.reshape(T)
+        gf = gr.reshape(T).astype(dt)
+        pos = jnp.zeros((T,), jnp.int32)
+        for ee in range(E):   # unrolled: avoids a [T, E] cumsum tensor
+            m_e = ef == ee
+            pos = jnp.where(m_e, jnp.cumsum(m_e.astype(jnp.int32)) - 1, pos)
+        keep = pos < C
+        slot = jnp.where(keep, ef * C + pos, E * C)         # E*C => dropped
+        xt = jnp.repeat(xr, K, axis=0)                      # [T, D]
+        # one-hot matmul dispatch/combine (GShard): ~+2k/E FLOPs overhead,
+        # but pure dots — shards perfectly where a scatter made GSPMD
+        # re-gather globally.  Out-of-range slots produce all-zero rows,
+        # which IS the capacity-drop semantics.
+        disp = jax.nn.one_hot(slot, E * C, dtype=dt)        # [T, E*C]
+        buf = jnp.einsum("te,td->ed", disp, xt).reshape(E, C, D)
+        hh = jnp.einsum("ecd,edf->ecf", buf, wi)
+        gg = jnp.einsum("ecd,edf->ecf", buf, wg)
+        yy = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gg) * hh, wo)
+        picked = jnp.einsum("te,ed->td", disp, yy.reshape(E * C, D))
+        picked = picked * gf[:, None]
+        return picked.reshape(S_g, K, D).sum(axis=1)        # [S_g, D]
+
+    xg = x.reshape(B, nG, S_g, D)
+    eg = gate_idx.reshape(B, nG, S_g, K)
+    gg_ = gate_val.reshape(B, nG, S_g, K)
+    inner = jax.vmap(row, spmd_axis_name=seq_ax) if nG > 1 else jax.vmap(row)
+    outer = (jax.vmap(inner, spmd_axis_name=bat_ax) if bat_ax is not None
+             else jax.vmap(inner))
+    y = outer(xg, eg, gg_).reshape(B, S, D)
+    y = constrain(y, ("act_batch", "act_seq", "act_embed"), rules, mesh)
+
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(p["shared"], x, cfg)
+    return y, aux

@@ -1,0 +1,185 @@
+"""RWKV6 "Finch" block: data-dependent per-channel decay linear attention.
+
+Time-mix recurrence per head (key dim K == value dim V == head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+with w_t in (0,1) produced by a low-rank data-dependent projection (the
+Finch contribution).  Training uses the chunked closed form (factorized
+decay products, f32); decode uses the O(1) recurrence.  Channel-mix is the
+standard RWKV squared-relu FFN.  Chunk math mirrors repro.kernels.linattn_scan.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm_simple
+from repro.sharding.rules import ParamDef
+
+LORA_R = 64
+
+
+def rwkv_defs(cfg: ModelConfig, layers: tuple[int, ...] = ()):
+    D = cfg.d_model
+    F = cfg.d_ff
+    lx = ("layers",) * len(layers)
+    tm = {
+        # token-shift mixing coefficients for r/k/v/g/w
+        "mu": ParamDef(layers + (5, D), lx + (None, None), init="zeros"),
+        "wr": ParamDef(layers + (D, D), lx + ("embed_fsdp", "heads")),
+        "wk": ParamDef(layers + (D, D), lx + ("embed_fsdp", "heads")),
+        "wv": ParamDef(layers + (D, D), lx + ("embed_fsdp", "heads")),
+        "wg": ParamDef(layers + (D, D), lx + ("embed_fsdp", "heads")),
+        "wo": ParamDef(layers + (D, D), lx + ("heads", "embed_fsdp")),
+        # data-dependent decay (low-rank) + base
+        "w0": ParamDef(layers + (D,), lx + (None,), init="zeros"),
+        "wa": ParamDef(layers + (D, LORA_R), lx + ("embed_fsdp", None)),
+        "wb": ParamDef(layers + (LORA_R, D), lx + (None, "heads")),
+        "u": ParamDef(layers + (D,), lx + (None,), init="zeros"),
+        "ln_scale": ParamDef(layers + (D,), lx + (None,), init="ones"),
+    }
+    cm = {
+        "mu": ParamDef(layers + (2, D), lx + (None, None), init="zeros"),
+        "wk": ParamDef(layers + (D, F), lx + ("embed_fsdp", "mlp")),
+        "wv": ParamDef(layers + (F, D), lx + ("mlp", "embed_fsdp")),
+        "wr": ParamDef(layers + (D, D), lx + ("embed_fsdp", None)),
+    }
+    return {"time_mix": tm, "channel_mix": cm}
+
+
+def _token_shift(x: jax.Array, x_prev: Optional[jax.Array]):
+    """Shifted sequence: z_t = x_{t-1} (x_prev seeds t=0). Returns (z, last)."""
+    if x.shape[1] == 1 and x_prev is not None:
+        return x_prev[:, None, :], x[:, 0]
+    z = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_prev is not None:
+        z = z.at[:, 0].set(x_prev)
+    return z, x[:, -1]
+
+
+def _mix(x, z, mu):
+    return x + (z - x) * mu[None, None, :]
+
+
+def wkv_chunked(r, k, v, logw, u, chunk: int):
+    """Chunked WKV. r/k/v/logw: [B, S, H, K]; u: [H, K].
+
+    Returns y [B, S, H, K], final state [B, H, K, K] (key dim first).
+    """
+    B, S, H, K = r.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (S + pad) // Q
+    resh = lambda a: a.reshape(B, nc, Q, H, K).swapaxes(0, 1)
+    rs, ks, vs, lws = resh(r), resh(k), resh(v), resh(logw)
+
+    @jax.checkpoint   # recompute per-chunk [Q,Q,H,K] decay tensors in backward
+    def chunk_step(state, inp):
+        rq, kq, vq, lwq = (a.astype(jnp.float32) for a in inp)
+        E = jnp.cumsum(lwq, axis=1)                      # inclusive log-decay
+        Eex = E - lwq                                    # exclusive (through t-1)
+        # intra-chunk pairwise decays in log space (exponent <= 0 for t > s:
+        # unconditionally stable; the factored exp(+E)*exp(-E) trick is not)
+        mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)    # strictly past
+        seg = Eex[:, :, None] - E[:, None]               # [B, Q, Q, H, K]
+        seg = jnp.where(mask[None, :, :, None, None], seg, -jnp.inf)
+        att = jnp.einsum("bqhk,bshk,bqshk->bhqs", rq, kq, jnp.exp(seg))
+        r_dec = rq * jnp.exp(Eex)                        # Eex <= 0: stable
+        diag = jnp.einsum("bqhk,hk,bqhk->bqh", rq, u.astype(jnp.float32), kq)
+        y = jnp.einsum("bhqs,bshk->bqhk", att, vq)
+        y = y + diag[..., None] * vq
+        y = y + jnp.einsum("bqhk,bhkv->bqhv", r_dec, state)
+        # state' = diag(prod w) state + sum_s (prod_{>s} w) k_s v_s^T
+        Eq = E[:, -1]                                    # [B, H, K]
+        kw = kq * jnp.exp(Eq[:, None] - E)
+        state = jnp.exp(Eq)[..., None] * state + jnp.einsum(
+            "bshk,bshv->bhkv", kw, vq
+        )
+        return state, y
+
+    state0 = jnp.zeros((B, H, K, K), jnp.float32)
+    state, ys = jax.lax.scan(chunk_step, state0, (rs, ks, vs, lws))
+    y = ys.swapaxes(0, 1).reshape(B, S + pad, H, K)[:, :S]
+    return y.astype(r.dtype), state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """One-token recurrence. r/k/v/logw: [B, H, K]; state [B, H, K, K]."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    y = jnp.einsum("bhk,bhkv->bhv", rf, state + u.astype(jnp.float32)[None, :, :, None] * kv)
+    state = w[..., None] * state + kv
+    return y.astype(r.dtype), state
+
+
+def apply_time_mix(
+    p, x: jax.Array, cfg: ModelConfig,
+    *, cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    hd = 64
+    H = D // hd
+    dt = x.dtype
+    z, last = _token_shift(x, None if cache is None else cache["shift_att"])
+    mu = p["mu"].astype(dt)
+    xr, xk, xv, xg, xw = (_mix(x, z, mu[i]) for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt)).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt)).reshape(B, S, H, hd)
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt))
+    lora = jnp.einsum(
+        "bsd,dr,re->bse", jnp.tanh(xw.astype(jnp.float32)),
+        p["wa"].astype(jnp.float32), p["wb"].astype(jnp.float32),
+    )
+    logw = -jnp.exp(p["w0"].astype(jnp.float32)[None, None] + lora)  # < 0
+    logw = logw.reshape(B, S, H, hd)
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+
+    if cache is None:
+        y, _ = wkv_chunked(r, k, v, logw.astype(jnp.float32), u, cfg.rwkv_chunk)
+        new_cache = None
+    else:
+        y, st = wkv_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0], u, cache["wkv"])
+        y = y[:, None]
+        new_cache = {"wkv": st, "shift_att": last}
+
+    y = rms_norm_simple(y.reshape(B, S, D)) * p["ln_scale"].astype(dt)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dt))
+    return out, new_cache
+
+
+def apply_channel_mix(
+    p, x: jax.Array, cfg: ModelConfig,
+    *, cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    dt = x.dtype
+    z, last = _token_shift(x, None if cache is None else cache["shift_ffn"])
+    mu = p["mu"].astype(dt)
+    xk, xr = _mix(x, z, mu[0]), _mix(x, z, mu[1])
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dt))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)))
+    out = r * kv
+    return out, (None if cache is None else {"shift_ffn": last})
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    D = cfg.d_model
+    hd = 64
+    H = D // hd
+    return {
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "shift_att": jnp.zeros((batch, D), dtype),
+        "shift_ffn": jnp.zeros((batch, D), dtype),
+    }

@@ -1,0 +1,174 @@
+"""Mamba2 / SSD block (zamba2 backbone), chunked-scan formulation.
+
+State-space recurrence per head h (state N, head dim P):
+    S_t = a_t * S_{t-1} + x_t (dt_t B_t)^T        a_t = exp(dt_t * A_h)
+    y_t = C_t . S_t + D_h * x_t
+
+Computed chunk-parallel (Dao & Gu 2024): intra-chunk attention-like matmul
+with decay mask + inter-chunk state carried by ``lax.scan`` — the same
+split the Pallas ``linattn_scan`` kernel tiles for VMEM on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm_simple
+from repro.sharding.rules import ParamDef
+
+CONV_K = 4  # depthwise causal conv width (mamba2 default)
+
+
+def ssm_defs(cfg: ModelConfig, layers: tuple[int, ...] = ()):
+    D, DI, H, P, N = (cfg.d_model, cfg.d_inner, cfg.ssm_heads,
+                      cfg.ssm_head_dim, cfg.ssm_state)
+    conv_dim = DI + 2 * N
+    lx = ("layers",) * len(layers)
+    return {
+        # in_proj emits [z (DI) | xBC (DI+2N) | dt (H)]
+        "w_in": ParamDef(layers + (D, 2 * DI + 2 * N + H), lx + ("embed_fsdp", "mlp")),
+        "conv_w": ParamDef(layers + (CONV_K, conv_dim), lx + (None, "mlp")),
+        "conv_b": ParamDef(layers + (conv_dim,), lx + ("mlp",), init="zeros"),
+        "A_log": ParamDef(layers + (H,), lx + (None,), init="zeros"),
+        "D_skip": ParamDef(layers + (H,), lx + (None,), init="ones"),
+        "dt_bias": ParamDef(layers + (H,), lx + (None,), init="zeros"),
+        "norm_scale": ParamDef(layers + (DI,), lx + ("mlp",), init="ones"),
+        "w_out": ParamDef(layers + (DI, D), lx + ("mlp", "embed_fsdp")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    DI, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :DI]
+    xBC = proj[..., DI:2 * DI + 2 * N]
+    dt = proj[..., 2 * DI + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv over seq. xBC: [B, S, Cd]; w: [K, Cd].
+
+    Returns (out, new_conv_state[K-1 last inputs]).
+    """
+    B, S, Cd = xBC.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, CONV_K - 1, Cd), xBC.dtype)
+    xp = jnp.concatenate([conv_state, xBC], axis=1)        # [B, S+K-1, Cd]
+    out = sum(
+        xp[:, i:i + S] * w[i][None, None, :] for i in range(CONV_K)
+    ) + b[None, None, :]
+    out = jax.nn.silu(out)
+    new_state = xp[:, -(CONV_K - 1):]
+    return out, new_state
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunk-parallel SSD scan.
+
+    x: [B, S, H, P]; dt: [B, S, H] (>0); A: [H] (<0); Bm/Cm: [B, S, N].
+    Returns y [B, S, H, P], final state [B, H, P, N].
+    """
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // Q
+
+    def resh(a, tail):
+        return a.reshape((Bb, nc, Q) + tail).swapaxes(0, 1)  # [nc, B, Q, ...]
+
+    xs, dts = resh(x, (H, P)), resh(dt, (H,))
+    Bs, Cs = resh(Bm, (N,)), resh(Cm, (N,))
+    la = jnp.einsum("h,cbqh->cbqh", A, dts)                  # log decay per step
+
+    @jax.checkpoint   # recompute per-chunk [Q,Q,H] decay mats in backward
+    def chunk_step(state, inp):
+        xq, dq, bq, cq, laq = inp                            # [B,Q,H,P] etc.
+        L = jnp.cumsum(laq, axis=1)                          # [B, Q, H] inclusive
+        # intra-chunk: M[t,i] = exp(L_t - L_i) * (C_t.B_i) * dt_i  (i <= t)
+        seg = L[:, :, None, :] - L[:, None, :, :]            # [B, Q, Q, H]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        seg = jnp.where(mask[None, :, :, None], seg, -jnp.inf)
+        cb = jnp.einsum("bqn,bin->bqi", cq, bq)              # [B, Q, Q]
+        M = jnp.exp(seg) * cb[..., None] * dq[:, None, :, :]  # [B,Q,Q,H]
+        y_intra = jnp.einsum("bqih,bihp->bqhp", M.astype(xq.dtype), xq)
+        # inter-chunk: y += exp(L_t) * C_t . state
+        y_inter = jnp.einsum(
+            "bqh,bqn,bhpn->bqhp", jnp.exp(L).astype(xq.dtype), cq, state
+        )
+        # state update: S' = exp(L_Q) S + sum_i exp(L_Q - L_i) x_i (dt_i B_i)^T
+        Lq = L[:, -1]                                        # [B, H]
+        w_i = jnp.exp(Lq[:, None] - L) * dq                  # [B, Q, H]
+        ds = jnp.einsum("bqh,bqhp,bqn->bhpn", w_i.astype(xq.dtype), xq, bq)
+        state = jnp.exp(Lq)[:, :, None, None].astype(state.dtype) * state + ds
+        return state, y_intra + y_inter
+
+    state0 = jnp.zeros((Bb, H, P, N), x.dtype)
+    state, ys = jax.lax.scan(chunk_step, state0, (xs, dts, Bs, Cs, la))
+    y = ys.swapaxes(0, 1).reshape(Bb, S + pad, H, P)[:, :S]
+    return y, state
+
+
+def apply_ssm(
+    p, x: jax.Array, cfg: ModelConfig,
+    *, cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Mamba2 block. x: [B, S, D].  With ``cache`` (decode): S==1 recurrent."""
+    B, S, D = x.shape
+    H, P, N, DI = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.d_inner
+    dt_f = x.dtype
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(dt_f))
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+
+    if cache is None:
+        xBC, _ = _causal_conv(xBC, p["conv_w"].astype(dt_f), p["conv_b"].astype(dt_f))
+        new_cache = None
+    else:
+        xBC, conv_state = _causal_conv(
+            xBC, p["conv_w"].astype(dt_f), p["conv_b"].astype(dt_f),
+            conv_state=cache["conv"],
+        )
+        new_cache = {"conv": conv_state}
+
+    xin = xBC[..., :DI].reshape(B, S, H, P)
+    Bm = xBC[..., DI:DI + N]
+    Cm = xBC[..., DI + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # [H], negative
+
+    if cache is None:
+        y, _ = _ssd_chunked(xin, dt.astype(dt_f), A, Bm, Cm, cfg.ssm_chunk)
+    else:
+        # single-step recurrence
+        st = cache["ssm_state"]                               # [B, H, P, N]
+        a = jnp.exp(dt[:, 0] * A[None, :])                    # [B, H]
+        dBx = jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, 0].astype(dt_f), xin[:, 0], Bm[:, 0]
+        )
+        st = a[:, :, None, None].astype(st.dtype) * st + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], st)[:, None]  # [B, 1, H, P]
+        new_cache["ssm_state"] = st
+
+    y = y + xin * p["D_skip"].astype(dt_f)[None, None, :, None]
+    y = y.reshape(B, S, DI)
+    y = rms_norm_simple(y * jax.nn.silu(z)) * p["norm_scale"].astype(dt_f)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_f))
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "ssm_state": jnp.zeros((batch, H, P, N), dtype),
+        "conv": jnp.zeros((batch, CONV_K - 1, cfg.d_inner + 2 * N), dtype),
+    }

@@ -1,0 +1,7 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, OptState, adamw_init, adamw_update, global_norm,
+    cosine_schedule,
+)
+from repro.optim.compression import (  # noqa: F401
+    CompressionState, compress_gradients, compression_init,
+)

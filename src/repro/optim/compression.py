@@ -1,0 +1,63 @@
+"""int8 gradient compression with error feedback (1-bit-Adam-style residual).
+
+On a real multi-pod deployment this wraps the cross-pod (DCN) gradient
+all-reduce: quantize -> reduce int8 payload (4x fewer bytes) -> dequantize,
+with the quantization residual carried into the next step so the compressed
+SGD direction is unbiased in the long run (error-feedback guarantee).
+
+In the single-controller SPMD program the reduction itself is implicit in
+the backward pass, so we expose the compression as a gradient transform
+applied at the reduction point; tests verify (a) the error-feedback
+telescoping property and (b) convergence parity on a convex problem.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CompressionState:
+    residual: Any  # error-feedback buffer, same tree as grads
+
+
+def compression_init(params) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    )
+
+
+def _quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_gradients(
+    grads, state: CompressionState,
+) -> Tuple[Any, CompressionState, dict]:
+    """Returns (dequantized grads, new residual state, metrics)."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, scale = _quantize_int8(gf)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), gf - deq
+
+    out = jax.tree.map(one, grads, state.residual)
+    newg = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    newr = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = sum(jnp.sum(jnp.abs(r)) for r in jax.tree.leaves(newr))
+    return newg, CompressionState(residual=newr), {"ef_l1": err}
+
+
+def payload_bytes(grads, compressed: bool) -> int:
+    """Collective payload accounting for EXPERIMENTS.md (f32 vs int8+scale)."""
+    n = sum(x.size for x in jax.tree.leaves(grads))
+    return n + 4 * len(jax.tree.leaves(grads)) if compressed else 4 * n

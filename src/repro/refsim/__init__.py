@@ -1,0 +1,10 @@
+"""CQsim-analogue reference simulator (pure Python, heap-based).
+
+The paper validates its SST component against CQsim; we reproduce that
+methodology by validating the JAX engine against this independently-written
+event-driven simulator with identical pinned semantics (DESIGN.md §8).
+It is also the asymptotically-efficient CPU path for million-job traces.
+"""
+
+from repro.refsim.sim import ReferenceSimulator, simulate_reference  # noqa: F401
+# workflow reference imported lazily in repro.refsim.workflow

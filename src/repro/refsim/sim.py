@@ -1,0 +1,197 @@
+"""Heap-based event-driven cluster scheduling simulator (CQsim analogue).
+
+Implements exactly the semantics pinned in DESIGN.md §8 / repro.core:
+completions, then arrivals, then a scheduling pass that repeatedly applies
+the policy selector until it blocks.  O(E log E) via a completion heap, but
+the scheduling pass scans the waiting queue (like CQsim's list scan).
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.jobs import BACKFILL, BESTFIT, FCFS, LJF, PREEMPT, SJF
+
+_POL = {"fcfs": FCFS, "sjf": SJF, "ljf": LJF, "bestfit": BESTFIT,
+        "backfill": BACKFILL, "preempt": PREEMPT}
+
+
+@dataclass
+class _Job:
+    idx: int
+    submit: int
+    runtime: int
+    estimate: int
+    nodes: int
+    priority: int = 0
+    start: int = -1
+    finish: int = -1
+    remaining: int = -1
+
+
+@dataclass
+class ReferenceSimulator:
+    total_nodes: int
+    policy: str = "fcfs"
+    jobs: List[_Job] = field(default_factory=list)
+
+    def load(self, submit, runtime, nodes, estimate=None, priority=None):
+        submit = np.asarray(submit, dtype=np.int64)
+        submit = submit - (submit.min() if len(submit) else 0)
+        runtime = np.maximum(np.asarray(runtime, dtype=np.int64), 1)
+        estimate = (
+            np.maximum(np.asarray(estimate, dtype=np.int64), 1)
+            if estimate is not None else runtime.copy()
+        )
+        nodes = np.minimum(np.maximum(np.asarray(nodes, dtype=np.int64), 1),
+                           self.total_nodes)
+        priority = (np.asarray(priority, dtype=np.int64) if priority is not None
+                    else np.zeros(len(submit), dtype=np.int64))
+        order = np.lexsort((np.arange(len(submit)), submit))
+        self.jobs = [
+            _Job(i, int(submit[o]), int(runtime[o]), int(estimate[o]),
+                 int(nodes[o]), int(priority[o]), remaining=int(runtime[o]))
+            for i, o in enumerate(order)
+        ]
+        return self
+
+    # ---- policy selectors (mirror repro.core.policies) ---------------------
+
+    def _select(self, waiting: List[_Job], running: List[_Job], free: int,
+                clock: int) -> Optional[_Job]:
+        if not waiting:
+            return None
+        pol = self.policy
+        if pol in ("fcfs", "sjf", "ljf"):
+            if pol == "fcfs":
+                head = min(waiting, key=lambda j: j.idx)
+            elif pol == "sjf":
+                head = min(waiting, key=lambda j: (j.estimate, j.idx))
+            else:
+                head = min(waiting, key=lambda j: (-j.estimate, j.idx))
+            return head if head.nodes <= free else None
+        if pol == "bestfit":
+            feas = [j for j in waiting if j.nodes <= free]
+            if not feas:
+                return None
+            return min(feas, key=lambda j: (free - j.nodes, j.idx))
+        if pol == "backfill":
+            head = min(waiting, key=lambda j: j.idx)
+            if head.nodes <= free:
+                return head
+            # shadow via estimates of running jobs
+            rel = sorted(
+                (max(j.start + j.estimate, clock + 1), j.idx, j.nodes)
+                for j in running
+            )
+            cum, shadow, extra = free, None, free
+            for t, _idx, n in rel:
+                cum += n
+                if cum >= head.nodes:
+                    shadow, extra = t, cum - head.nodes
+                    break
+            if shadow is None:
+                shadow, extra = None, free  # unreachable if nodes<=total
+            cands = [
+                j for j in waiting
+                if j is not head and j.nodes <= free
+                and ((shadow is not None and clock + j.estimate <= shadow)
+                     or j.nodes <= min(free, extra))
+            ]
+            return min(cands, key=lambda j: j.idx) if cands else None
+        if pol == "preempt":
+            # queue order (priority, submit-rank); head may reclaim nodes
+            # from strictly-lower-priority running jobs (engine mirror)
+            head = min(waiting, key=lambda j: (j.priority, j.idx))
+            reclaimable = sum(j.nodes for j in running
+                              if j.priority > head.priority)
+            return head if head.nodes <= free + reclaimable else None
+        raise ValueError(f"unknown policy {pol!r}")
+
+    # ---- event loop ---------------------------------------------------------
+
+    def run(self) -> Dict[str, np.ndarray]:
+        assert self.policy in _POL, self.policy
+        jobs = self.jobs
+        n = len(jobs)
+        arrivals = list(range(n))  # already sorted by (submit, idx)
+        ai = 0
+        waiting: List[_Job] = []
+        heap: List[tuple] = []  # (finish, idx)
+        running: Dict[int, _Job] = {}
+        free = self.total_nodes
+        clock = 0
+        n_events = 0
+
+        while ai < n or heap:
+            while heap and (heap[0][1] not in running
+                            or running[heap[0][1]].finish != heap[0][0]):
+                heapq.heappop(heap)   # stale entry from a preemption
+            t_arr = jobs[arrivals[ai]].submit if ai < n else None
+            t_fin = heap[0][0] if heap else None
+            clock = min(x for x in (t_arr, t_fin) if x is not None)
+            n_events += 1
+            # completions first (skip heap entries stale after preemption)
+            while heap and heap[0][0] <= clock:
+                fin, idx = heapq.heappop(heap)
+                j = running.get(idx)
+                if j is None or j.finish != fin:
+                    continue  # stale: the job was preempted and re-queued
+                del running[idx]
+                free += j.nodes
+            # arrivals
+            while ai < n and jobs[arrivals[ai]].submit <= clock:
+                waiting.append(jobs[arrivals[ai]])
+                ai += 1
+            # scheduling pass
+            while True:
+                j = self._select(waiting, list(running.values()), free, clock)
+                if j is None:
+                    break
+                if j.nodes > free:  # preempt policy: suspend victims
+                    victims = sorted(
+                        (v for v in running.values()
+                         if v.priority > j.priority),
+                        key=lambda v: (-v.priority, -v.idx))
+                    need = j.nodes - free
+                    for v in victims:
+                        if need <= 0:
+                            break
+                        need -= v.nodes
+                        free += v.nodes
+                        v.remaining = max(v.finish - clock, 1)
+                        v.finish = -1
+                        del running[v.idx]
+                        waiting.append(v)
+                waiting.remove(j)
+                if j.start < 0:
+                    j.start = clock   # first dispatch only
+                j.finish = clock + j.remaining
+                free -= j.nodes
+                running[j.idx] = j
+                heapq.heappush(heap, (j.finish, j.idx))
+
+        out = {
+            "submit": np.array([j.submit for j in jobs], dtype=np.int64),
+            "runtime": np.array([j.runtime for j in jobs], dtype=np.int64),
+            "nodes": np.array([j.nodes for j in jobs], dtype=np.int64),
+            "start": np.array([j.start for j in jobs], dtype=np.int64),
+            "finish": np.array([j.finish for j in jobs], dtype=np.int64),
+        }
+        out["wait"] = out["start"] - out["submit"]
+        out["done"] = out["start"] >= 0
+        out["valid"] = np.ones(n, dtype=bool)
+        out["makespan"] = int(out["finish"].max(initial=0))
+        out["n_events"] = n_events
+        return out
+
+
+def simulate_reference(trace, policy: str, *, total_nodes: int):
+    sim = ReferenceSimulator(total_nodes=total_nodes, policy=policy)
+    sim.load(trace["submit"], trace["runtime"], trace["nodes"],
+             trace.get("estimate"), trace.get("priority"))
+    return sim.run()

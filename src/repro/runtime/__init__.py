@@ -1,0 +1,2 @@
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401

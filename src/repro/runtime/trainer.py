@@ -1,0 +1,178 @@
+"""Fault-tolerant training loop.
+
+Checkpoint/restart semantics: the data stream is a pure function of the step
+counter (repro.data), so (params, opt_state, data step) restored from the
+last checkpoint resumes the *exact* gradient sequence.  Failures (real or
+injected) roll back to the last checkpoint and replay; straggler decisions
+are logged via StragglerMonitor.  Gradient int8 compression (error feedback)
+is applied at the reduction point when enabled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.store import CheckpointManager, latest_step
+from repro.configs.base import ModelConfig
+from repro.models.api import get_model
+from repro.optim.adamw import AdamWConfig, OptState, adamw_init, adamw_update
+from repro.optim.compression import (
+    CompressionState, compress_gradients, compression_init,
+)
+from repro.runtime.straggler import StragglerMonitor
+from repro.sharding.rules import TRAIN_RULES
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 2
+    async_ckpt: bool = False
+    log_every: int = 10
+    compress_grads: bool = False
+    accum: int = 1                      # gradient accumulation microbatches
+    inject_failure_at: Optional[int] = None
+    max_restarts: int = 3
+    seed: int = 0
+
+
+class _InjectedFailure(RuntimeError):
+    pass
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, opt_cfg: AdamWConfig,
+                 tcfg: TrainerConfig, dataset, *, mesh=None,
+                 rules=TRAIN_RULES, log: Callable[[str], None] = print):
+        self.model = get_model(model_cfg)
+        self.cfg = model_cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.ds = dataset
+        self.mesh = mesh
+        self.rules = rules
+        self.log = log
+        self.monitor = StragglerMonitor(1)
+        self.history: list[Dict[str, float]] = []
+        self.restarts = 0
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _build(self):
+        model, cfg = self.model, self.cfg
+        rules, mesh = self.rules, self.mesh
+        opt_cfg = self.opt_cfg
+        accum = self.tcfg.accum
+        compress = self.tcfg.compress_grads
+
+        def loss_fn(params, batch):
+            return model.loss_fn(params, batch, rules=rules, mesh=mesh)
+
+        def train_step(params, opt_state, comp_state, batch):
+            if accum > 1:
+                def micro(carry, mb):
+                    acc, = carry
+                    (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, mb)
+                    return (jax.tree.map(jnp.add, acc, g),), m["ce"]
+
+                zeros = jax.tree.map(jnp.zeros_like, params)
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((accum, -1) + x.shape[1:]), batch)
+                (gsum,), ces = jax.lax.scan(micro, (zeros,), mbs)
+                grads = jax.tree.map(lambda g: g / accum, gsum)
+                metrics = {"ce": jnp.mean(ces), "aux": jnp.float32(0)}
+                loss = metrics["ce"]
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            if compress:
+                grads, comp_state, cm = compress_gradients(grads, comp_state)
+                metrics = {**metrics, **cm}
+            params, opt_state, om = adamw_update(grads, opt_state, params,
+                                                 opt_cfg)
+            return params, opt_state, comp_state, {
+                "loss": loss, **metrics, **om}
+
+        self._step_fn = jax.jit(train_step, donate_argnums=(0, 1, 2))
+
+    # ------------------------------------------------------------------
+    def _init_state(self):
+        params = self.model.init(jax.random.PRNGKey(self.tcfg.seed))
+        opt = adamw_init(params)
+        comp = compression_init(params) if self.tcfg.compress_grads else \
+            CompressionState(residual=jnp.zeros(()))
+        return params, opt, comp
+
+    def _restore_or_init(self, mgr: Optional[CheckpointManager]):
+        params, opt, comp = self._init_state()
+        start = 0
+        if mgr and latest_step(mgr.ckpt_dir) is not None:
+            (params, opt, comp), step, extra = mgr.restore((params, opt, comp))
+            start = int(extra.get("data_step", step))
+            self.log(f"[trainer] restored checkpoint step={step}")
+        return params, opt, comp, start
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        tcfg = self.tcfg
+        mgr = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep,
+                                 async_save=tcfg.async_ckpt)
+               if tcfg.ckpt_dir else None)
+        params, opt, comp, start = self._restore_or_init(mgr)
+        self.ds.state.step = start
+        step = start
+        injected = False
+
+        while step < tcfg.steps:
+            try:
+                batch = next(self.ds)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                if (tcfg.inject_failure_at is not None
+                        and step == tcfg.inject_failure_at and not injected):
+                    injected = True
+                    raise _InjectedFailure(f"injected fault at step {step}")
+                t0 = time.time()
+                params, opt, comp, metrics = self._step_fn(
+                    params, opt, comp, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                for d in self.monitor.update(dt):
+                    self.log(f"[straggler] step={d.step} rank={d.rank} "
+                             f"ratio={d.ratio:.2f} action={d.action}")
+                self.history.append({"step": step, "loss": loss, "dt": dt})
+                if step % tcfg.log_every == 0:
+                    self.log(f"[trainer] step={step} loss={loss:.4f} "
+                             f"({dt*1000:.0f} ms)")
+                step += 1
+                self.ds.state.step = step
+                if mgr and step % tcfg.ckpt_every == 0:
+                    mgr.save(step, (params, opt, comp),
+                             extra={"data_step": step})
+            except _InjectedFailure as e:
+                self.log(f"[trainer] FAILURE: {e}; restarting from checkpoint")
+                self.restarts += 1
+                if self.restarts > tcfg.max_restarts:
+                    raise
+                if mgr:
+                    mgr.wait()
+                params, opt, comp, step = self._restore_or_init(mgr)
+                self.ds.state.step = step
+
+        if mgr:
+            mgr.save(step, (params, opt, comp), extra={"data_step": step})
+            mgr.wait()
+        return {
+            "final_loss": self.history[-1]["loss"] if self.history else None,
+            "history": self.history,
+            "restarts": self.restarts,
+            "straggler": self.monitor.summary(),
+        }

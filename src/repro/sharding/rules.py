@@ -1,0 +1,270 @@
+"""Logical-axis sharding rules (MaxText-style) + parameter definition trees.
+
+Every parameter/activation dimension carries a *logical* axis name; a
+``ShardingRules`` table maps logical names to physical mesh axes.  Swapping
+rule tables re-lays-out the whole model without touching model code — this
+is how the dry-run explores baseline vs. hillclimbed shardings and how the
+same model serves under train (FSDP+TP), serve (2D-TP) and long-context
+(sequence-sharded KV cache) regimes.
+
+Defaults (DESIGN.md §6):
+  - ``fsdp``   -> "data":   ZeRO-3-style parameter sharding axis
+  - ``tensor`` -> "model":  Megatron-style tensor parallel axis
+  - batch      -> ("pod","data") when the pod axis exists
+
+Uneven dims (e.g. 40 heads over a 16-way axis) are allowed: GSPMD pads
+internally (verified on this container; waste shows up in the roofline
+utilization ratio and is hillclimb material).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping logical axis name -> mesh axis (or tuple of mesh axes)."""
+
+    rules: Mapping[str, Any]
+    name: str = "custom"
+
+    def physical(self, logical: Optional[str], mesh: Mesh):
+        if logical is None:
+            return None
+        phys = self.rules.get(logical, None)
+        if phys is None:
+            return None
+        if isinstance(phys, str):
+            return phys if phys in mesh.axis_names else None
+        present = tuple(a for a in phys if a in mesh.axis_names)
+        return present if present else None
+
+    def pspec(self, axes: Sequence[Optional[str]], mesh: Mesh) -> P:
+        return P(*[self.physical(a, mesh) for a in axes])
+
+
+# Training: FSDP over "data" (+ pure DP over "pod"), TP over "model".
+TRAIN_RULES = ShardingRules(
+    name="train_fsdp_tp",
+    rules={
+        "batch": ("pod", "data"),
+        "cache_batch": ("pod", "data"),
+        "act_batch": ("pod", "data"),
+        "act_seq": "model",       # scan-carry activations: sequence-sharded (SP)
+        "act_embed": None,
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "embed_fsdp": "data",     # parameter dim sharded ZeRO-3 style
+        "experts": None,          # baseline: TP-within-expert
+        "moe_wD": None,           # expert weights gathered over data at use
+                                  # (stationary-expert variant measured WORSE:
+                                  #  GSPMD re-gathers rows per shard; see §Perf)
+        "cache_seq": None,
+        "state": None,
+    },
+)
+
+# Prefill: no backward pass => no per-layer activation checkpoints, so the
+# carry can keep the sequence unsharded — removing the act_seq<->heads
+# reshard (and its per-tile all-to-alls) from every layer.
+PREFILL_RULES = ShardingRules(
+    name="prefill_seq_unsharded",
+    rules={**TRAIN_RULES.rules, "act_seq": None},
+)
+
+# Training without FSDP: weights replicated over "data" (fit-permitting),
+# killing the per-layer/per-microbatch weight all-gathers (hillclimb rules).
+TRAIN_TP_REPLICATED = ShardingRules(
+    name="train_tp_replicated",
+    rules={**TRAIN_RULES.rules, "embed_fsdp": None},
+)
+
+# Serving (decode): weights STATIONARY, fully 2-D sharded (model x data); the
+# residual stream is D-sharded over "data" so every matmul contracts against
+# a local weight shard + small partial-sum all-reduce — no weight gathers.
+# The KV cache (the big state) stays (batch x kv-heads)-sharded.
+SERVE_RULES = ShardingRules(
+    name="serve_2d_stationary",
+    rules={
+        "batch": ("pod", "data"),      # attention activations / cache side
+        "cache_batch": ("pod", "data"),
+        "act_batch": None,             # residual batch replicated (tiny at S=1)
+        "act_seq": None,
+        "act_embed": "data",           # residual stream D-dim sharded
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "embed_fsdp": "data",          # stationary: never gathered
+        "experts": None,
+        "moe_wD": "data",              # expert weights stay D-sharded (stationary)
+        "cache_seq": None,
+        "state": None,
+    },
+)
+
+# Long-context decode (batch=1): KV cache sequence-sharded over "data".
+LONG_DECODE_RULES = ShardingRules(
+    name="long_decode_seqshard",
+    rules={
+        "batch": None,
+        "cache_batch": None,
+        "act_batch": None,
+        "act_seq": None,
+        "act_embed": "data",
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "embed_fsdp": "data",
+        "experts": None,
+        "moe_wD": "data",
+        "cache_seq": "data",
+        "state": "data",          # rwkv/ssm recurrent state heads spread on data
+    },
+)
+
+RULE_SETS = {r.name: r for r in (TRAIN_RULES, TRAIN_TP_REPLICATED,
+                                 PREFILL_RULES, SERVE_RULES,
+                                 LONG_DECODE_RULES)}
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], rules: ShardingRules,
+                     mesh: Mesh) -> P:
+    return rules.pspec(axes, mesh)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]], rules: ShardingRules,
+              mesh: Optional[Mesh]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op without a mesh)."""
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, rules.pspec(axes, mesh))
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter definition trees
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declarative parameter: shape + logical axes + initializer.
+
+    The same def tree yields (a) concrete initialized arrays, (b) pure
+    ShapeDtypeStructs for the allocation-free dry-run, (c) PartitionSpecs —
+    guaranteed structurally consistent because they share one source.
+    """
+
+    shape: Tuple[int, ...]
+    axes: Axes
+    init: str = "normal"      # normal | zeros | ones | embed
+    scale: Optional[float] = None
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def _leaf_init(d: ParamDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init in ("normal", "embed"):
+        # fan-in scaling on the contracting dim; embeds scale by 1.0
+        if d.scale is not None:
+            s = d.scale
+        elif d.init == "embed":
+            s = 1.0
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            s = fan_in ** -0.5
+        return (jax.random.normal(key, d.shape, jnp.float32) * s).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def init_from_defs(defs, key: jax.Array):
+    """Initialize a pytree of ParamDefs into arrays (deterministic per path)."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_leaf_init(d, k) for d, k in zip(leaves, keys)]
+    )
+
+
+def shapes_from_defs(defs):
+    """ShapeDtypeStruct tree — dry-run stand-in, zero allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    names = (phys,) if isinstance(phys, str) else tuple(phys)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def repair_pspec(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Divisibility-aware spec repair for jit *input* shardings.
+
+    ``with_sharding_constraint`` tolerates uneven dims (GSPMD pads), but
+    ``in_shardings`` require exact divisibility.  When a dim is not
+    divisible by its assigned mesh axis (e.g. 8 KV heads over a 16-way
+    model axis) we drop the assignment and re-place the axis on the
+    right-most free dim that IS divisible (typically head_dim) — the
+    tensor stays fully distributed, just along a different dim.
+    """
+    phys = list(spec) + [None] * (len(shape) - len(spec))
+    out, dropped = [], []
+    for dim, p in zip(shape, phys):
+        if p is None:
+            out.append(None)
+        elif dim % _axis_size(mesh, p) == 0:
+            out.append(p)
+        else:
+            out.append(None)
+            dropped.append(p)
+    for p in dropped:
+        for i in range(len(out) - 1, -1, -1):
+            if out[i] is None and shape[i] % _axis_size(mesh, p) == 0:
+                out[i] = p
+                break
+    return P(*out)
+
+
+def specs_from_defs(defs, rules: ShardingRules, mesh: Mesh):
+    """NamedSharding tree matching the def tree (divisibility-repaired)."""
+    return jax.tree.map(
+        lambda d: NamedSharding(
+            mesh, repair_pspec(d.shape, rules.pspec(d.axes, mesh), mesh)
+        ),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def count_params(defs) -> int:
+    return sum(
+        int(np.prod(d.shape))
+        for d in jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    )

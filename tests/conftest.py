@@ -1,0 +1,15 @@
+import os
+import sys
+
+# Library code must see the real (1-device) CPU host; only launch/dryrun.py
+# sets the 512-device flag, in its own process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,110 @@
+"""Per-kernel shape/dtype sweeps, interpret=True, allclose vs ref oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.linattn_scan.ops import linattn
+from repro.kernels.linattn_scan.ref import linattn_reference
+from repro.kernels.queue_select.ops import queue_select
+from repro.kernels.queue_select.ref import queue_select_reference
+
+KEY = jax.random.PRNGKey(42)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,hd", [
+    (2, 256, 256, 4, 2, 64),
+    (1, 128, 384, 8, 8, 128),
+    (2, 200, 200, 4, 1, 64),     # unaligned seq -> padding path
+    (1, 1, 256, 8, 2, 64),       # decode-style single query
+    (2, 64, 512, 4, 4, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 96), (False, None)])
+def test_flash_attention_sweep(B, Sq, Sk, H, KV, hd, dtype, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, hd), dtype)
+    qoff = Sk - Sq if Sq <= Sk else 0
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_offset=qoff, block_q=128, block_k=128,
+                          interpret=True)
+    ref = attention_reference(q, k, v, causal=causal, window=window,
+                              q_offset=qoff)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_matches_model_blockwise():
+    from repro.models.attention import blockwise_attention
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 160, 8, 64))
+    k = jax.random.normal(ks[1], (2, 160, 4, 64))
+    v = jax.random.normal(ks[2], (2, 160, 4, 64))
+    a = flash_attention(q, k, v, causal=True, interpret=True)
+    b = blockwise_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+@pytest.mark.parametrize("B,H,S,K,chunk", [
+    (2, 3, 64, 16, 16),
+    (1, 2, 128, 64, 32),
+    (2, 1, 100, 32, 32),     # unaligned -> padding path
+    (1, 4, 256, 64, 128),    # long chunk: stability regression test
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_linattn_sweep(B, H, S, K, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    r = (jax.random.normal(ks[0], (B, H, S, K)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, H, S, K)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, H, S, K)) * 0.5).astype(dtype)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, S, K)) * 0.5)
+    u = jax.random.normal(ks[4], (H, K)) * 0.5
+    y = linattn(r, k, v, logw.astype(dtype), u, chunk=chunk, interpret=True)
+    ref = linattn_reference(r, k, v, logw.astype(dtype), u)
+    scale = float(jnp.max(jnp.abs(ref.astype(jnp.float32)))) + 1e-6
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    err = float(jnp.max(jnp.abs(y.astype(jnp.float32) - ref.astype(jnp.float32))))
+    assert err / scale < tol, (err, scale)
+
+
+def test_linattn_steep_decay_stability():
+    """Steep data-dependent decays used to overflow the factored chunk form."""
+    B, H, S, K = 1, 2, 256, 32
+    ks = jax.random.split(KEY, 3)
+    r = jax.random.normal(ks[0], (B, H, S, K))
+    k = jax.random.normal(ks[1], (B, H, S, K))
+    v = jax.random.normal(ks[2], (B, H, S, K))
+    logw = jnp.full((B, H, S, K), -6.0)   # near-instant forgetting
+    u = jnp.zeros((H, K))
+    y = linattn(r, k, v, logw, u, chunk=128, interpret=True)
+    assert bool(jnp.isfinite(y).all())
+    ref = linattn_reference(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("N,tile", [(7, 8), (100, 32), (1024, 256),
+                                    (5000, 1024), (65536, 2048)])
+@pytest.mark.parametrize("feas_rate", [0.0, 0.05, 0.5, 1.0])
+def test_queue_select_sweep(N, tile, feas_rate, rng):
+    scores = rng.integers(0, 10_000, N).astype(np.int32)
+    feas = (rng.random(N) < feas_rate).astype(np.int32)
+    out = np.asarray(queue_select(jnp.asarray(scores), jnp.asarray(feas),
+                                  tile=tile, interpret=True))
+    ref = np.asarray(queue_select_reference(jnp.asarray(scores),
+                                            jnp.asarray(feas)))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_queue_select_ties_pick_lowest_index(rng):
+    scores = np.zeros(256, np.int32)
+    feas = np.zeros(256, np.int32)
+    feas[[40, 7, 200]] = 1
+    out = np.asarray(queue_select(jnp.asarray(scores), jnp.asarray(feas),
+                                  tile=64, interpret=True))
+    assert out[0] == 7

@@ -1,0 +1,79 @@
+"""Hypothesis property tests: system invariants of the DES engine."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics
+from repro.core.engine import simulate_np
+from repro.core.jobs import POLICY_IDS
+
+POLICIES = list(POLICY_IDS)
+
+
+def trace_strategy(max_jobs=40):
+    n = st.integers(3, max_jobs)
+
+    @st.composite
+    def build(draw):
+        k = draw(n)
+        seed = draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        return {
+            "submit": rng.integers(0, 200, k),
+            "runtime": rng.integers(1, 100, k),
+            "nodes": rng.integers(1, 17, k),
+            "estimate": rng.integers(1, 200, k),
+        }
+    return build()
+
+
+@settings(max_examples=25, deadline=None)
+@given(trace=trace_strategy(), policy=st.sampled_from(POLICIES),
+       total_nodes=st.sampled_from([4, 16, 64]))
+def test_invariants(trace, policy, total_nodes):
+    out = simulate_np(trace, policy, total_nodes=total_nodes)
+    v = out["valid"]
+    assert out["done"][v].all(), "every job completes"
+    # jobs never start before submission
+    assert (out["start"][v] >= out["submit"][v]).all()
+    # finish = start + runtime
+    np.testing.assert_array_equal(
+        out["finish"][v], out["start"][v] + out["runtime"][v])
+    # node capacity never exceeded at any instant
+    t, occ = metrics.occupancy_series(out)
+    assert (occ <= total_nodes).all()
+    assert (occ >= 0).all()
+    # makespan bound
+    assert out["makespan"] >= int((out["submit"][v] + out["runtime"][v]).max())
+
+
+@settings(max_examples=10, deadline=None)
+@given(trace=trace_strategy(20), policy=st.sampled_from(POLICIES))
+def test_determinism(trace, policy):
+    a = simulate_np(trace, policy, total_nodes=16)
+    b = simulate_np(trace, policy, total_nodes=16)
+    np.testing.assert_array_equal(a["start"], b["start"])
+
+
+@settings(max_examples=15, deadline=None)
+@given(trace=trace_strategy(30))
+def test_work_conservation_across_policies(trace):
+    """Total node-seconds executed is policy-invariant."""
+    totals = []
+    for policy in POLICIES:
+        out = simulate_np(trace, policy, total_nodes=32)
+        v = out["valid"]
+        totals.append(int((out["nodes"][v] * out["runtime"][v]).sum()))
+    assert len(set(totals)) == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(trace=trace_strategy(25))
+def test_single_node_jobs_fcfs_equals_bestfit_waits(trace):
+    """With uniform 1-node jobs every policy that never blocks idles equally:
+    BestFit degenerates to FCFS."""
+    trace = dict(trace)
+    trace["nodes"] = np.ones_like(trace["nodes"])
+    a = simulate_np(trace, "fcfs", total_nodes=4)
+    b = simulate_np(trace, "bestfit", total_nodes=4)
+    np.testing.assert_array_equal(a["start"], b["start"])

@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests for the whole system."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import metrics
+from repro.core.engine import simulate_np
+from repro.refsim import simulate_reference
+from repro.traces import das2_like
+
+
+def test_paper_fig3_occupancy_pipeline():
+    """Fig 3(a) path: simulate -> occupancy series, ours vs reference."""
+    trace = das2_like(400, seed=21)
+    ours = simulate_np(trace, "fcfs", total_nodes=400)
+    ref = simulate_reference(trace, "fcfs", total_nodes=400)
+    t1, occ1 = metrics.occupancy_series(ours)
+    t2, occ2 = metrics.occupancy_series(ref)
+    grid = np.linspace(0, max(t1.max(), t2.max()), 200)
+    s1 = metrics.sample_series(t1, occ1, grid)
+    s2 = metrics.sample_series(t2, occ2, grid)
+    np.testing.assert_allclose(s1, s2)
+
+
+def test_paper_fig4b_policy_ordering():
+    """Fig 4(b): backfill utilization >= plain FCFS on a congested trace."""
+    trace = das2_like(800, seed=5)
+    trace["submit"] = trace["submit"] // 3  # congest
+    res = {p: metrics.summary(simulate_np(trace, p, total_nodes=400), 400)
+           for p in ("fcfs", "backfill", "sjf", "ljf", "bestfit")}
+    assert res["backfill"]["avg_wait"] <= res["fcfs"]["avg_wait"]
+    assert res["backfill"]["utilization"] >= res["fcfs"]["utilization"] - 1e-9
+    assert res["sjf"]["avg_bounded_slowdown"] <= res["ljf"]["avg_bounded_slowdown"]
+
+
+def test_end_to_end_train_example(tmp_path):
+    """examples/train path: reduced model, loss decreases."""
+    from repro.launch.train import main
+    out = main([
+        "--arch", "llama3.2-3b", "--reduced", "--steps", "15",
+        "--batch", "4", "--seq", "32", "--ckpt-dir", str(tmp_path),
+    ])
+    hist = out["history"]
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_end_to_end_serve_example():
+    from repro.launch.serve import serve_batch
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    seqs, stats = serve_batch(cfg, batch=2, prompt_len=8, gen=4)
+    assert seqs.shape == (2, 12)
+    assert stats["tok_per_s"] > 0
+
+
+def test_fleet_cost_model_roundtrip():
+    """Roofline-derived job costs feed the DES (schedule_fleet path)."""
+    from repro.launch.roofline import PEAK_FLOPS, model_flops
+    step_s = model_flops(int(3e9), 256 * 4096, "train") / (256 * PEAK_FLOPS)
+    assert 0.001 < step_s < 10.0
+    trace = {
+        "submit": np.zeros(4, np.int64),
+        "runtime": np.full(4, max(int(step_s * 1000), 1), np.int64),
+        "nodes": np.full(4, 256, np.int64),
+    }
+    out = simulate_np(trace, "fcfs", total_nodes=512)
+    assert out["done"][:4].all()

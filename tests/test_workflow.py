@@ -1,0 +1,122 @@
+"""Workflow engine: reference validation, dependency/resource invariants,
+JSON I/O (paper §3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.workflow import (
+    WF_POLICY_IDS, critical_path_length, make_taskset, simulate_workflow,
+    workflow_result_np,
+)
+from repro.refsim.workflow import simulate_workflow_reference
+from repro.traces import workflows as W
+
+POOLS = np.array([16, 16384])
+GENS = {
+    "chain": lambda s: W.chain(15),
+    "forkjoin": lambda s: W.fork_join(6, 3, seed=s),
+    "montage": lambda s: W.montage_like(12, seed=s),
+    "sipht": lambda s: W.sipht_like(20, seed=s),
+    "galactic": lambda s: W.galactic_like(3, 8, seed=s),
+    "random": lambda s: W.random_layered(80, 8, seed=s),
+}
+
+
+def run_both(wf, policy, pools=POOLS, priority=None):
+    ts = make_taskset(wf["exec_time"], wf["resources"], wf["dep_pairs"],
+                      priority=priority)
+    st_ = simulate_workflow(ts, pools, WF_POLICY_IDS[policy])
+    ours = workflow_result_np(ts, st_)
+    ref = simulate_workflow_reference(
+        wf["exec_time"], wf["resources"], wf["dep_pairs"], pools, policy,
+        priority=priority)
+    return ours, ref, ts
+
+
+@pytest.mark.parametrize("gen", list(GENS))
+@pytest.mark.parametrize("policy", ["fcfs", "fcfs_fit", "cpath"])
+def test_exact_match_vs_reference(gen, policy):
+    wf = GENS[gen](5)
+    prio = (critical_path_length(wf["exec_time"], wf["dep_pairs"])
+            if policy == "cpath" else None)
+    ours, ref, _ = run_both(wf, policy, priority=prio)
+    n = len(ref["start"])
+    assert ours["done"][:n].all()
+    np.testing.assert_array_equal(ours["start"][:n], ref["start"])
+    np.testing.assert_array_equal(ours["finish"][:n], ref["finish"])
+
+
+@pytest.mark.parametrize("gen", list(GENS))
+def test_dependencies_respected(gen):
+    wf = GENS[gen](9)
+    ours, _, _ = run_both(wf, "fcfs_fit")
+    start, finish = ours["start"], ours["finish"]
+    for t, d in wf["dep_pairs"]:
+        assert start[t] >= finish[d], f"task {t} started before dep {d} done"
+
+
+def test_resource_bounds_never_exceeded():
+    wf = W.random_layered(60, 6, seed=3)
+    ours, _, ts = run_both(wf, "fcfs_fit")
+    n = len(wf["exec_time"])
+    res = np.asarray(ts.resources)[:n]
+    events = sorted(set(ours["start"][:n]) | set(ours["finish"][:n]))
+    for t in events:
+        running = (ours["start"][:n] <= t) & (t < ours["finish"][:n])
+        used = res[running].sum(axis=0)
+        assert (used <= POOLS).all(), f"pool exceeded at t={t}: {used}"
+
+
+def test_cycle_detection():
+    with pytest.raises(ValueError, match="cycle"):
+        make_taskset([10, 10, 10], [[1, 1]] * 3, [(0, 1), (1, 2), (2, 0)])
+    with pytest.raises(ValueError, match="self"):
+        make_taskset([10], [[1, 1]], [(0, 0)])
+
+
+def test_json_roundtrip_paper_format():
+    wf = W.montage_like(8, seed=1)
+    js = W.to_json(wf, POOLS)
+    wf2, pools2, policy = W.from_json(js)
+    np.testing.assert_array_equal(wf["exec_time"], wf2["exec_time"])
+    np.testing.assert_array_equal(wf["resources"], wf2["resources"])
+    assert sorted(wf["dep_pairs"]) == sorted(wf2["dep_pairs"])
+    np.testing.assert_array_equal(pools2, POOLS)
+    assert policy == "Static"
+
+
+def test_paper_listing2_example_parses():
+    """The exact workflow from the paper's Listing 2."""
+    doc = """
+    {"tasks": [
+      {"id": 1, "execution_time": 100, "resources": {"cpu": 2, "memory": 1024}, "dependencies": []},
+      {"id": 2, "execution_time": 150, "resources": {"cpu": 1, "memory": 512}, "dependencies": [1]},
+      {"id": 3, "execution_time": 200, "resources": {"cpu": 1, "memory": 512}, "dependencies": [1]},
+      {"id": 4, "execution_time": 300, "resources": {"cpu": 2, "memory": 1024}, "dependencies": [2, 3]}],
+     "resources_available": {"cpu": 10, "memory": 8192},
+     "scheduling_policy": "Static", "preemption": false}
+    """
+    wf, pools, _ = W.from_json(doc)
+    ours, ref, _ = run_both(wf, "fcfs", pools=pools)
+    # diamond DAG: 1 -> (2 || 3) -> 4
+    assert ours["makespan"] == 100 + 200 + 300
+    np.testing.assert_array_equal(ours["start"][:4], ref["start"])
+
+
+def test_cpath_no_worse_than_fcfs_on_makespan_montage():
+    wf = W.montage_like(20, seed=4)
+    prio = critical_path_length(wf["exec_time"], wf["dep_pairs"])
+    a, _, _ = run_both(wf, "fcfs_fit")
+    b, _, _ = run_both(wf, "cpath", priority=prio)
+    assert b["makespan"] <= a["makespan"] * 1.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(10, 60))
+def test_random_dags_complete_and_match(seed, n):
+    wf = W.random_layered(n, max(n // 8, 2), seed=seed)
+    ours, ref, _ = run_both(wf, "fcfs_fit")
+    m = len(ref["start"])
+    assert ours["done"][:m].all()
+    np.testing.assert_array_equal(ours["start"][:m], ref["start"])
