@@ -4,6 +4,10 @@ Prints ``name,us_per_call,derived`` CSV rows; artifacts land in results/.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig5       # substring filter
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI dry pass: run the
+                                                       # tiny smoke() variant
+                                                       # of benches that have
+                                                       # one, skip the rest
 """
 
 from __future__ import annotations
@@ -14,27 +18,35 @@ import traceback
 
 from benchmarks import (
     des_throughput, fig3_occupancy, fig4_policies, fig4_wait, fig5_scaling,
-    fig6_workflow_scaling, fig7_workflow_wait, roofline_table,
+    fig6_workflow_scaling, fig7_workflow_wait, fig_alloc, roofline_table,
 )
 
 BENCHES = [
-    ("fig3_occupancy", fig3_occupancy.main),
-    ("fig4_wait", fig4_wait.main),
-    ("fig4_policies", fig4_policies.main),
-    ("fig5_scaling", fig5_scaling.main),
-    ("fig6_workflow_scaling", fig6_workflow_scaling.main),
-    ("fig7_workflow_wait", fig7_workflow_wait.main),
-    ("des_throughput", des_throughput.main),
-    ("roofline_table", roofline_table.main),
+    ("fig3_occupancy", fig3_occupancy),
+    ("fig4_wait", fig4_wait),
+    ("fig4_policies", fig4_policies),
+    ("fig5_scaling", fig5_scaling),
+    ("fig6_workflow_scaling", fig6_workflow_scaling),
+    ("fig7_workflow_wait", fig7_workflow_wait),
+    ("fig_alloc", fig_alloc),
+    ("des_throughput", des_throughput),
+    ("roofline_table", roofline_table),
 ]
 
 
 def main() -> int:
-    pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    args = [a for a in args if a != "--smoke"]
+    pattern = args[0] if args else ""
     print("name,us_per_call,derived")
     failed = []
-    for name, fn in BENCHES:
+    for name, mod in BENCHES:
         if pattern and pattern not in name:
+            continue
+        fn = getattr(mod, "smoke", None) if smoke else mod.main
+        if fn is None:
+            print(f"# {name} skipped (no smoke variant)", flush=True)
             continue
         t0 = time.time()
         try:

@@ -1,0 +1,37 @@
+"""Topology-aware node allocation (DESIGN.md §11).
+
+The seed engine tracked one scalar free-node counter; this subsystem gives
+the machine a concrete shape.  A static :class:`Machine` pytree describes
+the topology (linear racks, 2-D mesh rows, dragonfly groups), ``SimState``
+carries a per-node occupancy map, and four placement strategies decide which
+nodes each job gets:
+
+====================  =====================================================
+``simple``            first-fit scattered — timing-identical to the seed
+                      scalar counter (the bit-for-bit compatibility mode)
+``contiguous``        best-fit contiguous block; blocks under fragmentation
+``spread``            round-robin across groups (maximizes span)
+``topo``              pack fewest groups (minimizes span)
+====================  =====================================================
+
+An optional :class:`Contention` model dilates job runtime per extra group
+spanned, so the same trace under different allocators yields different
+makespans.  Everything is jit-able and the strategy id is a traced int —
+``repro.core.parallel.simulate_alloc_sweep`` vmaps over strategies exactly
+like policy sweeps.
+"""
+
+from repro.alloc.contention import Contention, dilate, dilate_host
+from repro.alloc.machine import Machine, dragonfly, linear, mesh2d
+from repro.alloc.strategies import (
+    ALLOC_IDS, ALLOC_NAMES, CONTIGUOUS, SIMPLE, SPREAD, TOPO,
+    alloc_fingerprint, alloc_id, free_count, group_span, largest_free_run,
+    place, placeable_cap,
+)
+
+__all__ = [
+    "ALLOC_IDS", "ALLOC_NAMES", "CONTIGUOUS", "SIMPLE", "SPREAD", "TOPO",
+    "Contention", "Machine", "alloc_fingerprint", "alloc_id", "dilate",
+    "dilate_host", "dragonfly", "free_count", "group_span",
+    "largest_free_run", "linear", "mesh2d", "place", "placeable_cap",
+]

@@ -1,0 +1,106 @@
+"""Static machine topologies for the node-allocation subsystem (DESIGN.md §11).
+
+The paper's SST component models the machine as interconnected node
+components; here the whole machine is one static pytree of per-node arrays,
+so a jitted simulation specializes on the topology *shape* while group
+membership and coordinates stay device-resident data.
+
+Invariants every builder maintains (the vectorized strategies rely on them):
+
+- node ids are ``0..N-1`` in a fixed linear order (the "cable order"),
+- ``group`` ids are nondecreasing along node index, i.e. each group is one
+  contiguous id range (true of linear racks, mesh rows, dragonfly groups),
+- ``group_start[i]`` / ``group_size[i]`` describe node *i*'s group extent,
+  allowing O(1) per-node segment lookups via plain gathers,
+- ``N * n_groups < 2**30`` so the lexicographic sort keys used by the
+  ``spread``/``topo`` strategies stay inside int32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    """Static per-node topology description (see module docstring)."""
+
+    group: jax.Array        # i32[N] group id, nondecreasing along node index
+    group_start: jax.Array  # i32[N] first node id of this node's group
+    group_size: jax.Array   # i32[N] number of nodes in this node's group
+    coord: jax.Array        # i32[N, 2] (row, col)-style coordinates (hop metrics)
+    n_groups: jax.Array     # i32 scalar
+
+    @property
+    def n_nodes(self) -> int:
+        return self.group.shape[-1]
+
+    def to_host(self) -> dict:
+        """Numpy view for the reference simulator / offline metrics."""
+        return {
+            "group": np.asarray(self.group),
+            "group_start": np.asarray(self.group_start),
+            "group_size": np.asarray(self.group_size),
+            "coord": np.asarray(self.coord),
+            "n_groups": int(self.n_groups),
+        }
+
+
+def _from_groups(group: np.ndarray, coord: np.ndarray) -> Machine:
+    n = group.shape[0]
+    if n == 0:
+        raise ValueError("machine must have at least one node")
+    if (np.diff(group) < 0).any():
+        raise ValueError("group ids must be nondecreasing along node index")
+    n_groups = int(group.max()) + 1
+    if n >= 2 ** 15 or n * n_groups >= 2 ** 30:
+        raise ValueError(
+            f"machine too large for int32 sort keys (N={n}, groups={n_groups}); "
+            "all placement keys must stay below the 2**30 sentinel"
+        )
+    # first index of each node's group and the group extent
+    first_of = np.zeros(n_groups, dtype=np.int64)
+    counts = np.zeros(n_groups, dtype=np.int64)
+    for g in range(n_groups):
+        idx = np.nonzero(group == g)[0]
+        first_of[g] = idx[0] if len(idx) else 0
+        counts[g] = len(idx)
+    return Machine(
+        group=jnp.asarray(group, dtype=jnp.int32),
+        group_start=jnp.asarray(first_of[group], dtype=jnp.int32),
+        group_size=jnp.asarray(counts[group], dtype=jnp.int32),
+        coord=jnp.asarray(coord, dtype=jnp.int32),
+        n_groups=jnp.int32(n_groups),
+    )
+
+
+def linear(n_nodes: int, *, group_size: int = 8) -> Machine:
+    """1-D chain of nodes partitioned into contiguous racks of ``group_size``."""
+    ids = np.arange(n_nodes, dtype=np.int64)
+    group = ids // max(int(group_size), 1)
+    coord = np.stack([np.zeros_like(ids), ids], axis=1)
+    return _from_groups(group, coord)
+
+
+def mesh2d(rows: int, cols: int) -> Machine:
+    """``rows x cols`` mesh in row-major cable order; each row is one group
+    (the row is the locality domain: intra-row hops are cheap)."""
+    ids = np.arange(rows * cols, dtype=np.int64)
+    r, c = ids // cols, ids % cols
+    coord = np.stack([r, c], axis=1)
+    return _from_groups(r, coord)
+
+
+def dragonfly(n_groups: int, nodes_per_group: int) -> Machine:
+    """Dragonfly-style machine: all-to-all connected groups of
+    ``nodes_per_group`` nodes; inter-group traffic pays the global-link tax
+    (the contention model charges per distinct group spanned)."""
+    ids = np.arange(n_groups * nodes_per_group, dtype=np.int64)
+    g, k = ids // nodes_per_group, ids % nodes_per_group
+    coord = np.stack([g, k], axis=1)
+    return _from_groups(g, coord)

@@ -1,0 +1,190 @@
+"""Vectorized node-placement strategies (DESIGN.md §11.2).
+
+Each strategy answers two questions against the per-node occupancy map
+``owner`` (i32[N], ``-1`` = free, else owning job row):
+
+1. *feasibility* — can a ``need``-node job be placed at all?  Collapsed to a
+   single scalar ``placeable_cap``: a job fits iff ``need <= cap``.  For the
+   count-based strategies the cap is the free-node count (identical to the
+   seed scalar counter); for ``contiguous`` it is the largest free run.
+2. *placement* — which concrete nodes does the job get?  ``place`` returns a
+   bool[N] mask with exactly ``need`` set bits whenever ``need`` free nodes
+   exist.
+
+Pinned tie-breaking, mirrored bit-for-bit by ``repro.alloc.host`` (and hence
+``repro.refsim``):
+
+- ``simple``     first-fit scattered: the ``need`` lowest-id free nodes.
+- ``contiguous`` best-fit block: the maximal free run minimizing
+                 (run length, start id); take its first ``need`` nodes.
+                 Falls back to ``simple`` when no run fits (reachable only
+                 via the preempt policy, whose reclaim check is count-based).
+- ``spread``     round-robin over groups: order free nodes by
+                 (rank-within-group, group id, node id), take ``need``.
+- ``topo``       pack fewest groups: order groups by (free count desc,
+                 group id), nodes within a group by id, take ``need``.
+
+Strategy ids are dense ints so ``place``/``placeable_cap`` dispatch through
+``lax.switch`` on a *traced* id — an ensemble can ``vmap`` over strategies
+exactly like it vmaps over scheduling policies.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.alloc.machine import Machine
+
+SIMPLE = 0
+CONTIGUOUS = 1
+SPREAD = 2
+TOPO = 3
+
+ALLOC_NAMES = {SIMPLE: "simple", CONTIGUOUS: "contiguous", SPREAD: "spread",
+               TOPO: "topo"}
+ALLOC_IDS = {v: k for k, v in ALLOC_NAMES.items()}
+
+_BIG = jnp.int32(2 ** 30 - 1)
+
+
+def alloc_id(strategy) -> int:
+    if isinstance(strategy, str):
+        try:
+            return ALLOC_IDS[strategy.lower()]
+        except KeyError:
+            raise ValueError(
+                f"unknown allocation strategy {strategy!r}; "
+                f"known: {sorted(ALLOC_IDS)}") from None
+    return int(strategy)
+
+
+# ---------------------------------------------------------------------------
+# occupancy-map scalars
+# ---------------------------------------------------------------------------
+
+
+def free_count(owner: jax.Array) -> jax.Array:
+    return jnp.sum((owner < 0).astype(jnp.int32))
+
+
+def largest_free_run(owner: jax.Array) -> jax.Array:
+    """Length of the longest run of consecutive free nodes (fragmentation)."""
+    free = owner < 0
+    n = owner.shape[0]
+    ii = jnp.arange(n, dtype=jnp.int32)
+    prev_busy = jax.lax.cummax(jnp.where(free, jnp.int32(-1), ii))
+    run_len = jnp.where(free, ii - prev_busy, 0)
+    return jnp.max(run_len).astype(jnp.int32)
+
+
+def placeable_cap(strategy: jax.Array, owner: jax.Array) -> jax.Array:
+    """Largest job size placeable right now: ``need <= cap`` ⇔ feasible."""
+    return jax.lax.switch(
+        jnp.clip(strategy, 0, 3),
+        (free_count, largest_free_run, free_count, free_count),
+        owner,
+    )
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+
+def _take_first(order: jax.Array, free: jax.Array, need: jax.Array) -> jax.Array:
+    """Mask of the first ``need`` *free* rows of ``order`` (a permutation that
+    sorts free nodes first by preference key)."""
+    n = order.shape[0]
+    take = jnp.arange(n, dtype=jnp.int32) < need
+    return jnp.zeros((n,), bool).at[order].set(take) & free
+
+
+def _place_simple(machine: Machine, owner: jax.Array, need: jax.Array) -> jax.Array:
+    free = owner < 0
+    rank = jnp.cumsum(free.astype(jnp.int32))
+    return free & (rank <= need)
+
+
+def _place_contiguous(machine: Machine, owner: jax.Array, need: jax.Array) -> jax.Array:
+    free = owner < 0
+    n = owner.shape[0]
+    ii = jnp.arange(n, dtype=jnp.int32)
+    prev_busy = jax.lax.cummax(jnp.where(free, jnp.int32(-1), ii))
+    run_start = prev_busy + 1
+    run_len = jnp.where(free, ii - prev_busy, 0)
+    nxt_free = jnp.concatenate([free[1:], jnp.zeros((1,), bool)])
+    run_end = free & ~nxt_free
+    feasible = run_end & (run_len >= need)
+    # best fit: minimize (total run length, start id); key is collision-free
+    # because a run is identified by its start
+    key = jnp.where(feasible, run_len * jnp.int32(n + 1) + run_start, _BIG)
+    best = jnp.argmin(key)
+    found = jnp.any(feasible)
+    start = run_start[best]
+    block = (ii >= start) & (ii < start + need)
+    return jnp.where(found, block, _place_simple(machine, owner, need))
+
+
+def _group_base(machine: Machine, csum: jax.Array) -> jax.Array:
+    """Per-node cumulative count just *before* the node's group starts."""
+    gs = machine.group_start
+    return jnp.where(gs > 0, csum[jnp.maximum(gs - 1, 0)], 0)
+
+
+def _place_spread(machine: Machine, owner: jax.Array, need: jax.Array) -> jax.Array:
+    free = owner < 0
+    csum = jnp.cumsum(free.astype(jnp.int32))
+    rank_in_group = csum - _group_base(machine, csum)  # 1-based among free
+    g = machine.n_groups
+    key = jnp.where(free, (rank_in_group - 1) * g + machine.group, _BIG)
+    order = jnp.argsort(key, stable=True)  # stable ⇒ ties broken by node id
+    return _take_first(order, free, need)
+
+
+def _place_topo(machine: Machine, owner: jax.Array, need: jax.Array) -> jax.Array:
+    free = owner < 0
+    n = owner.shape[0]
+    csum = jnp.cumsum(free.astype(jnp.int32))
+    base = _group_base(machine, csum)
+    last = machine.group_start + machine.group_size - 1
+    group_free = csum[last] - base  # per-node: free nodes in my whole group
+    key = jnp.where(free, (jnp.int32(n) - group_free) * machine.n_groups
+                    + machine.group, _BIG)
+    order = jnp.argsort(key, stable=True)  # stable ⇒ within-group by node id
+    return _take_first(order, free, need)
+
+
+_PLACERS = (_place_simple, _place_contiguous, _place_spread, _place_topo)
+
+
+def place(strategy: jax.Array, machine: Machine, owner: jax.Array,
+          need: jax.Array) -> jax.Array:
+    """Choose ``need`` free nodes; guaranteed to succeed iff they exist."""
+    return jax.lax.switch(
+        jnp.clip(strategy, 0, 3), _PLACERS, machine, owner, need
+    )
+
+
+# ---------------------------------------------------------------------------
+# locality score + fingerprints
+# ---------------------------------------------------------------------------
+
+
+def group_span(machine: Machine, mask: jax.Array) -> jax.Array:
+    """Number of distinct topology groups the allocation touches (the
+    locality score; the contention model charges per extra group)."""
+    csum = jnp.cumsum(mask.astype(jnp.int32))
+    within = csum - _group_base(machine, csum)
+    first_in_group = mask & (within == 1)
+    return jnp.sum(first_in_group.astype(jnp.int32))
+
+
+def alloc_fingerprint(mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(lowest node id, sum of 1-based node ids) — a cheap exact-equality
+    witness for cross-engine node-map validation (DESIGN.md §11.4)."""
+    n = mask.shape[0]
+    ii = jnp.arange(n, dtype=jnp.int32)
+    first = jnp.min(jnp.where(mask, ii, _BIG))
+    asum = jnp.sum(jnp.where(mask, ii + 1, 0)).astype(jnp.int32)
+    return first, asum

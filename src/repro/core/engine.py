@@ -1,6 +1,6 @@
 """The discrete-event engine (paper §2.2, Algorithm 1) as a jit-able loop.
 
-Event semantics, pinned identically in ``repro.refsim``:
+Event semantics, pinned identically in ``repro.refsim`` (DESIGN.md §8):
 
   1. advance clock to min(next arrival, next completion),
   2. process *all* completions with finish <= clock (reclaim nodes),
@@ -10,53 +10,95 @@ Event semantics, pinned identically in ``repro.refsim``:
 
 Each event consumes at least one arrival or completion, so the loop runs at
 most ``2*J + 1`` iterations; ``max_events`` is a safety cap on top.
+
+Node allocation (DESIGN.md §11): with a ``Machine`` the engine additionally
+maintains the per-node occupancy map.  Completions free the completing
+jobs' nodes, starts place concrete nodes via the chosen strategy, and the
+policy fit checks use ``placeable_cap`` — for the count-based strategies
+that cap *is* the scalar free counter, so ``alloc="simple"`` with
+contention off reproduces the seed scalar-counter schedule bit-for-bit.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import alloc as _alloc
 from repro.core import policies
 from repro.core.jobs import (
     DONE, INF_TIME, PENDING, RUNNING, WAITING,
     JobSet, SimResult, SimState, result_from_state,
 )
-import jax.numpy as jnp  # noqa: F811  (used by preemption helpers)
+
+# An allocation context is either None (seed scalar-counter mode) or the
+# pytree tuple (machine, strategy_i32, contention); its None-ness is static
+# at trace time, so the scalar path compiles with zero allocation overhead.
+AllocCtx = tuple
 
 
-def _start_job(jobs: JobSet, state: SimState, idx: jax.Array) -> SimState:
+def _release_nodes(state_owner: jax.Array, released: jax.Array,
+                   capacity: int) -> jax.Array:
+    """Free every node whose owning job row is in the ``released`` mask."""
+    own = state_owner
+    hit = (own >= 0) & released[jnp.clip(own, 0, capacity - 1)]
+    return jnp.where(hit, jnp.int32(-1), own)
+
+
+def _start_job(jobs: JobSet, state: SimState, idx: jax.Array,
+               ctx: Optional[AllocCtx]) -> SimState:
     """Allocate nodes to job ``idx`` and schedule its completion event.
 
     Uses ``state.remaining`` (== runtime unless previously preempted) and
-    records only the FIRST start time (dispatch-latency metric).
+    records only the FIRST start time (dispatch-latency metric).  With an
+    allocation context, concrete nodes are placed by the strategy, the
+    occupancy map and allocation fingerprints update, and contention dilates
+    the remaining runtime by the allocation's group span.
     """
     start = state.clock
-    fin = start + state.remaining[idx]
+    if ctx is None:
+        dil_rem = state.remaining[idx]
+    else:
+        machine, strategy, con = ctx
+        mask = _alloc.place(strategy, machine, state.node_owner, jobs.nodes[idx])
+        span = _alloc.group_span(machine, mask)
+        first, asum = _alloc.alloc_fingerprint(mask)
+        dil_rem = _alloc.dilate(con, state.remaining[idx], span)
+        state = dataclasses.replace(
+            state,
+            node_owner=jnp.where(mask, idx, state.node_owner),
+            alloc_first=state.alloc_first.at[idx].set(first),
+            alloc_span=state.alloc_span.at[idx].set(span),
+            alloc_sum=state.alloc_sum.at[idx].set(asum),
+        )
+    fin = start + dil_rem
     rsv = start + jobs.estimate[idx]
-    first = jnp.minimum(state.start[idx], start)
-    return SimState(
-        clock=state.clock,
+    first_start = jnp.minimum(state.start[idx], start)
+    return dataclasses.replace(
+        state,
         jstate=state.jstate.at[idx].set(RUNNING),
-        start=state.start.at[idx].set(first),
+        start=state.start.at[idx].set(first_start),
         finish=state.finish.at[idx].set(fin),
         rsv_finish=state.rsv_finish.at[idx].set(rsv),
-        remaining=state.remaining,
         free=state.free - jobs.nodes[idx],
-        n_events=state.n_events,
     )
 
 
-def _preempt_for(jobs: JobSet, state: SimState, idx: jax.Array) -> SimState:
+def _preempt_for(jobs: JobSet, state: SimState, idx: jax.Array,
+                 ctx: Optional[AllocCtx]) -> SimState:
     """Suspend the minimal set of strictly-lower-priority running jobs so
     that job ``idx`` fits (paper §5 future work: preemption capability).
 
     Victims are chosen most-preemptible-first: (priority desc, row desc).
     Suspended jobs keep their elapsed work (remaining shrinks) and return to
-    WAITING with their original submit time/FCFS rank.
+    WAITING with their original submit time/FCFS rank.  Victims release
+    their concrete nodes; the reclaim test is free-count based, so under the
+    ``contiguous`` strategy the subsequent placement may fall back to
+    scattered first-fit (DESIGN.md §11.2).
     """
     J = jobs.capacity
     need = jobs.nodes[idx] - state.free
@@ -76,19 +118,29 @@ def _preempt_for(jobs: JobSet, state: SimState, idx: jax.Array) -> SimState:
     new_remaining = jnp.where(
         victim, jnp.maximum(state.finish - state.clock, 1), state.remaining
     )
-    return SimState(
-        clock=state.clock,
+    node_owner = (state.node_owner if ctx is None
+                  else _release_nodes(state.node_owner, victim, J))
+    return dataclasses.replace(
+        state,
         jstate=jnp.where(victim, WAITING, state.jstate),
-        start=state.start,
         finish=jnp.where(victim, INF_TIME, state.finish),
         rsv_finish=jnp.where(victim, INF_TIME, state.rsv_finish),
         remaining=new_remaining,
         free=state.free + freed,
-        n_events=state.n_events,
+        node_owner=node_owner,
     )
 
 
-def _schedule_pass(policy: jax.Array, jobs: JobSet, state: SimState) -> SimState:
+def _select(policy: jax.Array, jobs: JobSet, state: SimState,
+            ctx: Optional[AllocCtx]) -> jax.Array:
+    """Policy selection under the active allocation feasibility cap."""
+    cap = (state.free if ctx is None
+           else _alloc.placeable_cap(ctx[1], state.node_owner))
+    return policies.select(policy, jobs, state, cap)
+
+
+def _schedule_pass(policy: jax.Array, jobs: JobSet, state: SimState,
+                   ctx: Optional[AllocCtx]) -> SimState:
     """Start jobs until the policy blocks (Algorithm 1 lines 16-21)."""
 
     def cond(carry):
@@ -100,19 +152,20 @@ def _schedule_pass(policy: jax.Array, jobs: JobSet, state: SimState) -> SimState
         st = jax.lax.cond(
             jobs.nodes[idx] <= st.free,
             lambda s: s,
-            lambda s: _preempt_for(jobs, s, idx),  # preempt policy only
+            lambda s: _preempt_for(jobs, s, idx, ctx),  # preempt policy only
             st,
         )
-        st = _start_job(jobs, st, idx)
-        return st, policies.select(policy, jobs, st)
+        st = _start_job(jobs, st, idx, ctx)
+        return st, _select(policy, jobs, st, ctx)
 
     state, _ = jax.lax.while_loop(
-        cond, body, (state, policies.select(policy, jobs, state))
+        cond, body, (state, _select(policy, jobs, state, ctx))
     )
     return state
 
 
-def _event_step(policy: jax.Array, jobs: JobSet, state: SimState) -> SimState:
+def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
+                ctx: Optional[AllocCtx] = None) -> SimState:
     pending = state.jstate == PENDING
     running = state.jstate == RUNNING
 
@@ -124,49 +177,126 @@ def _event_step(policy: jax.Array, jobs: JobSet, state: SimState) -> SimState:
     completed = running & (state.finish <= clock)
     freed = jnp.sum(jnp.where(completed, jobs.nodes, 0)).astype(jnp.int32)
     jstate = jnp.where(completed, DONE, state.jstate)
+    node_owner = (state.node_owner if ctx is None
+                  else _release_nodes(state.node_owner, completed, jobs.capacity))
 
     # arrivals
     arrived = (jstate == PENDING) & (jobs.submit <= clock)
     jstate = jnp.where(arrived, WAITING, jstate)
 
-    state = SimState(
+    state = dataclasses.replace(
+        state,
         clock=clock,
         jstate=jstate,
-        start=state.start,
-        finish=state.finish,
-        rsv_finish=state.rsv_finish,
-        remaining=state.remaining,
         free=state.free + freed,
         n_events=state.n_events + 1,
+        node_owner=node_owner,
     )
-    return _schedule_pass(policy, jobs, state)
+    state = _schedule_pass(policy, jobs, state, ctx)
+    if ctx is None:
+        return state
+    # fragmentation log: one (clock, free, largest-free-block) row per event
+    slot = state.n_events - 1
+    return dataclasses.replace(
+        state,
+        ev_time=state.ev_time.at[slot].set(state.clock, mode="drop"),
+        ev_free=state.ev_free.at[slot].set(state.free, mode="drop"),
+        ev_lfb=state.ev_lfb.at[slot].set(
+            _alloc.largest_free_run(state.node_owner), mode="drop"),
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("max_events",))
+def make_alloc_ctx(machine, strategy, contention,
+                   total_nodes=None) -> Optional[AllocCtx]:
+    """Canonicalize user-facing allocation arguments into an ``AllocCtx``.
+
+    Raises when allocation arguments are inconsistent: ``alloc``/
+    ``contention`` without a ``machine`` would be silently ignored, and a
+    ``machine`` whose size disagrees with a *concrete* ``total_nodes`` would
+    corrupt the occupancy map (a traced ``total_nodes`` skips that check —
+    the caller owns it in sweep code).
+    """
+    if machine is None:
+        if strategy is not None or contention is not None:
+            raise ValueError(
+                "alloc/contention require machine=; without a Machine the "
+                "simulation runs in scalar-counter mode and would silently "
+                "ignore them")
+        return None
+    if total_nodes is not None:
+        try:
+            concrete = int(total_nodes)
+        except (TypeError, jax.errors.TracerArrayConversionError,
+                jax.errors.ConcretizationTypeError):
+            concrete = None
+        if concrete is not None and concrete != machine.n_nodes:
+            raise ValueError(
+                f"machine has {machine.n_nodes} nodes but "
+                f"total_nodes={concrete}")
+    strategy = _alloc.SIMPLE if strategy is None else strategy
+    strategy = jnp.asarray(_alloc.alloc_id(strategy)
+                           if isinstance(strategy, (str, int)) else strategy,
+                           dtype=jnp.int32)
+    if contention is None:
+        con = _alloc.Contention.off()
+    elif isinstance(contention, tuple):  # (num, den), as refsim accepts
+        con = _alloc.Contention.make(*contention)
+    else:
+        con = contention
+    return (machine, strategy, con)
+
+
 def simulate(
     jobs: JobSet,
     policy: jax.Array | int,
     total_nodes: jax.Array | int,
     *,
+    machine=None,
+    alloc: jax.Array | int | str | None = None,
+    contention=None,
     max_events: Optional[int] = None,
 ) -> SimResult:
     """Run the full job-scheduling simulation for one cluster.
 
-    Pure function of its inputs (``policy`` and ``total_nodes`` are traced,
-    so the same executable serves every policy/machine size); ``vmap``-able
-    over ``jobs`` leaves, ``policy`` and/or ``total_nodes`` for ensemble
-    simulation (see ``repro.core.parallel``).
+    Pure function of its inputs (``policy``, ``total_nodes``, the allocation
+    ``alloc`` strategy id and ``contention`` parameters are traced, so the
+    same executable serves every policy/machine-size/allocator combination);
+    ``vmap``-able over ``jobs`` leaves, ``policy``, ``total_nodes``,
+    ``alloc`` and/or ``contention`` for ensemble simulation (see
+    ``repro.core.parallel``).
+
+    Without ``machine`` the engine runs in the seed scalar-counter mode.
+    With ``machine`` (a ``repro.alloc.Machine`` whose ``n_nodes`` must equal
+    ``total_nodes``) each start places concrete nodes under the ``alloc``
+    strategy and the result carries allocation fingerprints plus the
+    per-event fragmentation log.
     """
-    policy = jnp.asarray(policy, dtype=jnp.int32)
+    ctx = make_alloc_ctx(machine, alloc, contention, total_nodes)
+    return _simulate_jit(
+        jobs, jnp.asarray(policy, dtype=jnp.int32),
+        jnp.asarray(total_nodes, dtype=jnp.int32), ctx, max_events=max_events,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("max_events",))
+def _simulate_jit(
+    jobs: JobSet,
+    policy: jax.Array,
+    total_nodes: jax.Array,
+    ctx: Optional[AllocCtx],
+    *,
+    max_events: Optional[int] = None,
+) -> SimResult:
     cap = max_events if max_events is not None else 6 * jobs.capacity + 8
-    state = SimState.init(jobs, total_nodes)
+    machine = ctx[0] if ctx is not None else None
+    state = SimState.init(jobs, total_nodes, machine=machine, event_log=cap)
 
     def cond(st: SimState):
         unfinished = jnp.any((st.jstate != DONE))
         return unfinished & (st.n_events < cap)
 
     state = jax.lax.while_loop(
-        cond, lambda st: _event_step(policy, jobs, st), state
+        cond, lambda st: _event_step(policy, jobs, st, ctx), state
     )
     return result_from_state(jobs, state)
 
@@ -185,6 +315,7 @@ def simulate_window(
     state: SimState,
     t_hi: jax.Array,
     max_events: jax.Array | int,
+    ctx: Optional[AllocCtx] = None,
 ) -> SimState:
     """Process every event with timestamp <= ``t_hi`` (conservative window).
 
@@ -196,10 +327,13 @@ def simulate_window(
     def cond(st: SimState):
         return (next_event_time(jobs, st) <= t_hi) & (st.n_events < max_events)
 
-    return jax.lax.while_loop(cond, lambda st: _event_step(policy, jobs, st), state)
+    return jax.lax.while_loop(
+        cond, lambda st: _event_step(policy, jobs, st, ctx), state
+    )
 
 
-def simulate_np(trace, policy, *, total_nodes: int, capacity: int | None = None):
+def simulate_np(trace, policy, *, total_nodes: int, capacity: int | None = None,
+                machine=None, alloc: int | str | None = None, contention=None):
     """Host convenience wrapper: dict-of-numpy trace -> numpy result dict."""
     import numpy as np
     from repro.core.jobs import make_jobset
@@ -210,9 +344,10 @@ def simulate_np(trace, policy, *, total_nodes: int, capacity: int | None = None)
         capacity=capacity, total_nodes=total_nodes,
     )
     pol = policies_id(policy)
-    res = simulate(jobs, pol, total_nodes)
+    res = simulate(jobs, pol, total_nodes, machine=machine, alloc=alloc,
+                   contention=contention)
     ok = np.asarray(res.done)
-    return {
+    out = {
         "submit": np.asarray(jobs.submit),
         "nodes": np.asarray(jobs.nodes),
         "runtime": np.asarray(jobs.runtime),
@@ -224,6 +359,15 @@ def simulate_np(trace, policy, *, total_nodes: int, capacity: int | None = None)
         "done": ok,
         "valid": np.asarray(jobs.valid),
     }
+    if machine is not None:
+        n_ev = out["n_events"]
+        out["alloc_first"] = np.asarray(res.alloc_first)
+        out["alloc_span"] = np.asarray(res.alloc_span)
+        out["alloc_sum"] = np.asarray(res.alloc_sum)
+        out["ev_time"] = np.asarray(res.ev_time)[:n_ev]
+        out["ev_free"] = np.asarray(res.ev_free)[:n_ev]
+        out["ev_lfb"] = np.asarray(res.ev_lfb)[:n_ev]
+    return out
 
 
 def policies_id(policy) -> int:

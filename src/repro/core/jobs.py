@@ -13,7 +13,6 @@ keeps every ``clock + estimate`` addition overflow-free).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -148,7 +147,18 @@ def make_jobset(
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SimState:
-    """Mutable (functionally) simulation state for one cluster."""
+    """Mutable (functionally) simulation state for one cluster.
+
+    The allocation fields (DESIGN.md §11) are zero-size placeholders when the
+    simulation runs in seed scalar-counter mode (no ``Machine``): the pytree
+    structure is identical in both modes, only leaf shapes differ.
+    ``node_owner`` is the per-node occupancy map (-1 = free, else owning job
+    row); ``alloc_first``/``alloc_span``/``alloc_sum`` fingerprint each job's
+    latest allocation (lowest node id, distinct topology groups spanned, sum
+    of 1-based node ids) for cross-engine node-map validation; the ``ev_*``
+    ring records (clock, free nodes, largest free contiguous run) per event
+    for fragmentation metrics.
+    """
 
     clock: jax.Array        # i32 scalar
     jstate: jax.Array       # i32[J] in {PENDING, WAITING, RUNNING, DONE}
@@ -158,10 +168,20 @@ class SimState:
     remaining: jax.Array    # i32[J] runtime left (preemption suspends work)
     free: jax.Array         # i32 scalar, nodes currently free
     n_events: jax.Array     # i32 scalar, events processed
+    node_owner: jax.Array   # i32[N] owning job row per node (-1 free); [0] w/o machine
+    alloc_first: jax.Array  # i32[J] lowest node id of latest allocation (-1 = never)
+    alloc_span: jax.Array   # i32[J] group span of latest allocation (locality score)
+    alloc_sum: jax.Array    # i32[J] sum of 1-based node ids of latest allocation
+    ev_time: jax.Array      # i32[L] event clock log (-1 = unused slot); [0] w/o machine
+    ev_free: jax.Array      # i32[L] free nodes after each event
+    ev_lfb: jax.Array       # i32[L] largest free contiguous block after each event
 
     @classmethod
-    def init(cls, jobs: JobSet, total_nodes: int) -> "SimState":
+    def init(cls, jobs: JobSet, total_nodes: int, machine=None,
+             event_log: int = 0) -> "SimState":
         J = jobs.capacity
+        N = machine.n_nodes if machine is not None else 0
+        L = int(event_log) if machine is not None else 0
         inf = jnp.full((J,), INF_TIME, dtype=jnp.int32)
         jstate = jnp.where(jobs.valid, jnp.int32(PENDING), jnp.int32(DONE))
         return cls(
@@ -173,20 +193,37 @@ class SimState:
             remaining=jobs.runtime,
             free=jnp.int32(total_nodes),
             n_events=jnp.int32(0),
+            node_owner=jnp.full((N,), -1, dtype=jnp.int32),
+            alloc_first=jnp.full((J,), -1, dtype=jnp.int32),
+            alloc_span=jnp.zeros((J,), dtype=jnp.int32),
+            alloc_sum=jnp.zeros((J,), dtype=jnp.int32),
+            ev_time=jnp.full((L,), -1, dtype=jnp.int32),
+            ev_free=jnp.zeros((L,), dtype=jnp.int32),
+            ev_lfb=jnp.zeros((L,), dtype=jnp.int32),
         )
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SimResult:
-    """Per-job outcome; every paper metric derives from these arrays."""
+    """Per-job outcome; every paper metric derives from these arrays.
 
-    start: jax.Array      # i32[J]
-    finish: jax.Array     # i32[J]
-    wait: jax.Array       # i32[J] start - submit
-    makespan: jax.Array   # i32 scalar
-    n_events: jax.Array   # i32 scalar
-    done: jax.Array       # bool[J] job reached DONE (False => engine hit event cap)
+    The ``alloc_*`` / ``ev_*`` fields are zero-size or inert (-1 / 0) unless
+    the simulation ran with a ``Machine`` (DESIGN.md §11).
+    """
+
+    start: jax.Array        # i32[J]
+    finish: jax.Array       # i32[J]
+    wait: jax.Array         # i32[J] start - submit
+    makespan: jax.Array     # i32 scalar
+    n_events: jax.Array     # i32 scalar
+    done: jax.Array         # bool[J] job reached DONE (False => engine hit event cap)
+    alloc_first: jax.Array  # i32[J] lowest node id of final allocation (-1 = none)
+    alloc_span: jax.Array   # i32[J] topology groups spanned by final allocation
+    alloc_sum: jax.Array    # i32[J] sum of 1-based node ids (node-map witness)
+    ev_time: jax.Array      # i32[L] per-event clock (-1 = unused slot)
+    ev_free: jax.Array      # i32[L] per-event free-node count
+    ev_lfb: jax.Array       # i32[L] per-event largest free contiguous block
 
 
 def result_from_state(jobs: JobSet, state: SimState) -> SimResult:
@@ -199,4 +236,10 @@ def result_from_state(jobs: JobSet, state: SimState) -> SimResult:
         makespan=jnp.max(fin).astype(jnp.int32),
         n_events=state.n_events,
         done=(state.jstate == DONE) & jobs.valid,
+        alloc_first=state.alloc_first,
+        alloc_span=state.alloc_span,
+        alloc_sum=state.alloc_sum,
+        ev_time=state.ev_time,
+        ev_free=state.ev_free,
+        ev_lfb=state.ev_lfb,
     )

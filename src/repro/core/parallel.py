@@ -26,10 +26,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import alloc as _alloc
 from repro.core.engine import simulate, simulate_window
 from repro.core.jobs import (
     DONE, INF_TIME, PENDING, WAITING,
-    JobSet, SimResult, SimState, result_from_state,
+    JobSet, SimResult, SimState,
 )
 
 # ---------------------------------------------------------------------------
@@ -47,6 +48,9 @@ def simulate_ensemble(
     policies_b,
     total_nodes_b,
     *,
+    machine=None,
+    alloc_b=None,
+    contention=None,
     mesh: Optional[Mesh] = None,
     max_events: Optional[int] = None,
 ) -> SimResult:
@@ -56,22 +60,75 @@ def simulate_ensemble(
     are i32[B].  With a mesh, B must divide evenly across the ``sim`` axis;
     each device advances its ensemble members fully independently (zero
     cross-device communication — the embarrassingly-parallel mode).
+
+    Allocation sweep axis (DESIGN.md §11): with ``machine`` (one static
+    topology broadcast to all members) ``alloc_b`` is an i32[B] of placement
+    strategy ids — strategy is ensemble data, exactly like policy.
     """
     policies_b = jnp.asarray(policies_b, dtype=jnp.int32)
     total_nodes_b = jnp.asarray(total_nodes_b, dtype=jnp.int32)
-    fn = jax.vmap(functools.partial(simulate, max_events=max_events))
+    if machine is None:
+        if alloc_b is not None or contention is not None:
+            raise ValueError(
+                "alloc_b/contention require machine=; without a Machine the "
+                "ensemble runs in scalar-counter mode and would silently "
+                "ignore them")
+        fn = jax.vmap(functools.partial(simulate, max_events=max_events))
+        args = (jobs_b, policies_b, total_nodes_b)
+    else:
+        bad = np.asarray(total_nodes_b) != machine.n_nodes
+        if bad.any():
+            raise ValueError(
+                f"machine has {machine.n_nodes} nodes but total_nodes_b "
+                f"contains {sorted(set(np.asarray(total_nodes_b)[bad].tolist()))}")
+        if alloc_b is None:
+            alloc_b = jnp.zeros_like(policies_b)
+        alloc_b = jnp.asarray(
+            [_alloc.alloc_id(a) for a in alloc_b] if isinstance(alloc_b, (list, tuple))
+            else alloc_b, dtype=jnp.int32)
+        fn = jax.vmap(
+            lambda j, p, t, a: simulate(
+                j, p, t, machine=machine, alloc=a, contention=contention,
+                max_events=max_events)
+        )
+        args = (jobs_b, policies_b, total_nodes_b, alloc_b)
     if mesh is None:
-        return jax.jit(fn)(jobs_b, policies_b, total_nodes_b)
+        return jax.jit(fn)(*args)
 
     axis = mesh.axis_names[0]
     shard = NamedSharding(mesh, P(axis))
-    jobs_b = jax.device_put(jobs_b, shard)
-    policies_b = jax.device_put(policies_b, shard)
-    total_nodes_b = jax.device_put(total_nodes_b, shard)
-    out_shard = jax.tree.map(
-        lambda _: shard, jax.eval_shape(fn, jobs_b, policies_b, total_nodes_b)
+    args = tuple(jax.device_put(a, shard) for a in args)
+    out_shard = jax.tree.map(lambda _: shard, jax.eval_shape(fn, *args))
+    return jax.jit(fn, out_shardings=out_shard)(*args)
+
+
+def simulate_alloc_sweep(
+    jobs: JobSet,
+    policy,
+    total_nodes,
+    machine,
+    strategies=("simple", "contiguous", "spread", "topo"),
+    *,
+    contention=None,
+    mesh: Optional[Mesh] = None,
+    max_events: Optional[int] = None,
+) -> SimResult:
+    """Run ONE trace under every allocation strategy as a batched ensemble.
+
+    Returns a ``SimResult`` whose leaves have leading dim ``len(strategies)``
+    in the order given — the "same trace, different allocators, different
+    makespans" scenario family from DESIGN.md §11.
+    """
+    B = len(strategies)
+    jobs_b = stack_jobsets([jobs] * B)
+    policies_b = jnp.full((B,), int(policy), dtype=jnp.int32)
+    total_nodes_b = jnp.full((B,), int(total_nodes), dtype=jnp.int32)
+    alloc_b = jnp.asarray([_alloc.alloc_id(s) for s in strategies],
+                          dtype=jnp.int32)
+    return simulate_ensemble(
+        jobs_b, policies_b, total_nodes_b, machine=machine, alloc_b=alloc_b,
+        contention=contention, mesh=mesh, max_events=max_events,
     )
-    return jax.jit(fn, out_shardings=out_shard)(jobs_b, policies_b, total_nodes_b)
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,14 @@ Semantics (pinned identically in ``repro.refsim`` for validation):
   running jobs) and start the first FCFS-ordered waiting job that fits now
   and either completes by the shadow or uses only the shadow's extra nodes.
 
+Allocation awareness (DESIGN.md §11.2): every "fits now" test compares
+against ``cap``, the engine-supplied placement-feasibility cap — the free
+*count* for scattered strategies (identical to the seed scalar counter),
+the largest free *contiguous run* under the ``contiguous`` strategy.
+Backfill's shadow math and the preempt reclaim test deliberately stay
+free-count based (user estimates and reclaim totals don't know node
+geometry); both engines pin this identically.
+
 A heap is the natural CPU data structure here; on SPMD hardware we instead
 use masked O(J) reductions, which vmap/shard cleanly (see DESIGN.md §2).
 """
@@ -46,42 +54,43 @@ def _first_index(mask: jax.Array) -> jax.Array:
     return jnp.where(jnp.any(mask), idx.astype(jnp.int32), jnp.int32(-1))
 
 
-def _blocking_head(jobs: JobSet, state: SimState, key: jax.Array) -> jax.Array:
+def _blocking_head(jobs: JobSet, state: SimState, key: jax.Array,
+                   cap: jax.Array) -> jax.Array:
     waiting = state.jstate == WAITING
     head = _lex_argmin(key, waiting)
-    fits = jobs.nodes[jnp.maximum(head, 0)] <= state.free
+    fits = jobs.nodes[jnp.maximum(head, 0)] <= cap
     return jnp.where((head >= 0) & fits, head, jnp.int32(-1))
 
 
-def select_fcfs(jobs: JobSet, state: SimState) -> jax.Array:
+def select_fcfs(jobs: JobSet, state: SimState, cap: jax.Array) -> jax.Array:
     # FCFS key = (submit, row); row order of an initial JobSet is already
     # (submit, id), and keying on submit keeps FCFS correct after the
     # multi-cluster engine migrates jobs into arbitrary free rows.
-    return _blocking_head(jobs, state, jobs.submit)
+    return _blocking_head(jobs, state, jobs.submit, cap)
 
 
-def select_sjf(jobs: JobSet, state: SimState) -> jax.Array:
-    return _blocking_head(jobs, state, jobs.estimate)
+def select_sjf(jobs: JobSet, state: SimState, cap: jax.Array) -> jax.Array:
+    return _blocking_head(jobs, state, jobs.estimate, cap)
 
 
-def select_ljf(jobs: JobSet, state: SimState) -> jax.Array:
-    return _blocking_head(jobs, state, -jobs.estimate)
+def select_ljf(jobs: JobSet, state: SimState, cap: jax.Array) -> jax.Array:
+    return _blocking_head(jobs, state, -jobs.estimate, cap)
 
 
-def select_bestfit(jobs: JobSet, state: SimState) -> jax.Array:
+def select_bestfit(jobs: JobSet, state: SimState, cap: jax.Array) -> jax.Array:
     waiting = state.jstate == WAITING
-    feasible = waiting & (jobs.nodes <= state.free)
+    feasible = waiting & (jobs.nodes <= cap)
     leftover = state.free - jobs.nodes
     return _lex_argmin(leftover, feasible)
 
 
-def select_backfill(jobs: JobSet, state: SimState) -> jax.Array:
+def select_backfill(jobs: JobSet, state: SimState, cap: jax.Array) -> jax.Array:
     J = jobs.capacity
     waiting = state.jstate == WAITING
     head = _lex_argmin(jobs.submit, waiting)
     head_safe = jnp.maximum(head, 0)
     head_need = jobs.nodes[head_safe]
-    head_fits = head_need <= state.free
+    head_fits = head_need <= cap
 
     def blocked(_):
         # ---- shadow computation over running jobs (walltime estimates) ---
@@ -124,7 +133,7 @@ def select_backfill(jobs: JobSet, state: SimState) -> jax.Array:
 
         # ---- backfill candidates -----------------------------------------
         idxs = jnp.arange(J, dtype=jnp.int32)
-        fits_now = jobs.nodes <= state.free
+        fits_now = jobs.nodes <= cap
         ends_by_shadow = (state.clock + jobs.estimate) <= shadow
         within_extra = jobs.nodes <= jnp.minimum(state.free, extra)
         cand = (waiting & fits_now & (idxs != head_safe)
@@ -142,13 +151,16 @@ def select_backfill(jobs: JobSet, state: SimState) -> jax.Array:
     )
 
 
-def select_preempt(jobs: JobSet, state: SimState) -> jax.Array:
+def select_preempt(jobs: JobSet, state: SimState, cap: jax.Array) -> jax.Array:
     """Priority scheduling with preemption (paper §5 future work).
 
     Queue order: (priority, submit, row).  The head starts if it fits in
     free nodes OR if enough nodes can be reclaimed from strictly-lower-
     priority running jobs; the engine's ``_preempt_for`` suspends the
-    minimal victim set before the start.
+    minimal victim set before the start.  The reclaim test is free-count
+    based by design (``cap`` is unused): placement after preemption falls
+    back to scattered first-fit if the strategy cannot honor its shape
+    (DESIGN.md §11.2), so count feasibility is exact.
     """
     waiting = state.jstate == WAITING
     # lexicographic (priority, submit): both bounded by INF_TIME < 2**30;
@@ -170,6 +182,13 @@ _SELECTORS = (select_fcfs, select_sjf, select_ljf, select_bestfit,
 assert tuple(sorted((FCFS, SJF, LJF, BESTFIT, BACKFILL))) == tuple(range(5))
 
 
-def select(policy: jax.Array, jobs: JobSet, state: SimState) -> jax.Array:
-    """Dispatch on (possibly traced) policy id — vmap-able over policies."""
-    return jax.lax.switch(jnp.clip(policy, 0, 5), _SELECTORS, jobs, state)
+def select(policy: jax.Array, jobs: JobSet, state: SimState,
+           cap: jax.Array | None = None) -> jax.Array:
+    """Dispatch on (possibly traced) policy id — vmap-able over policies.
+
+    ``cap`` is the placement-feasibility cap (defaults to the scalar free
+    counter, i.e. seed semantics); the engine passes ``placeable_cap`` when
+    an allocation context is active.
+    """
+    cap = state.free if cap is None else cap
+    return jax.lax.switch(jnp.clip(policy, 0, 5), _SELECTORS, jobs, state, cap)

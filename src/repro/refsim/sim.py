@@ -4,6 +4,13 @@ Implements exactly the semantics pinned in DESIGN.md §8 / repro.core:
 completions, then arrivals, then a scheduling pass that repeatedly applies
 the policy selector until it blocks.  O(E log E) via a completion heap, but
 the scheduling pass scans the waiting queue (like CQsim's list scan).
+
+Node allocation (DESIGN.md §11): given a ``repro.alloc.Machine`` this
+simulator maintains the same per-node occupancy map as the JAX engine,
+places nodes through the ``repro.alloc.host`` mirrors (identical
+tie-breaking), applies the same contention dilation, and reports the same
+allocation fingerprints — the host-side oracle for bit-exact validation of
+starts, finishes *and* node maps.
 """
 
 from __future__ import annotations
@@ -14,6 +21,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.alloc import contention as _con
+from repro.alloc import host as _host
 from repro.core.jobs import BACKFILL, BESTFIT, FCFS, LJF, PREEMPT, SJF
 
 _POL = {"fcfs": FCFS, "sjf": SJF, "ljf": LJF, "bestfit": BESTFIT,
@@ -31,12 +40,18 @@ class _Job:
     start: int = -1
     finish: int = -1
     remaining: int = -1
+    alloc_first: int = -1
+    alloc_span: int = 0
+    alloc_sum: int = 0
 
 
 @dataclass
 class ReferenceSimulator:
     total_nodes: int
     policy: str = "fcfs"
+    machine: object = None          # repro.alloc.Machine or its to_host() dict
+    alloc: str = "simple"
+    contention: object = None       # repro.alloc.Contention, (num, den), or None
     jobs: List[_Job] = field(default_factory=list)
 
     def load(self, submit, runtime, nodes, estimate=None, priority=None):
@@ -59,10 +74,29 @@ class ReferenceSimulator:
         ]
         return self
 
+    # ---- allocation helpers (mirror repro.alloc) ---------------------------
+
+    def _mach_host(self) -> Optional[Dict[str, np.ndarray]]:
+        if self.machine is None:
+            return None
+        if isinstance(self.machine, dict):
+            return self.machine
+        return self.machine.to_host()
+
+    def _alpha(self) -> tuple[int, int]:
+        con = self.contention
+        if con is None:
+            return 0, 1
+        if isinstance(con, tuple):
+            return int(con[0]), int(con[1])
+        if int(np.asarray(con.enabled)) == 0:
+            return 0, 1
+        return int(np.asarray(con.alpha_num)), int(np.asarray(con.alpha_den))
+
     # ---- policy selectors (mirror repro.core.policies) ---------------------
 
     def _select(self, waiting: List[_Job], running: List[_Job], free: int,
-                clock: int) -> Optional[_Job]:
+                cap: int, clock: int) -> Optional[_Job]:
         if not waiting:
             return None
         pol = self.policy
@@ -73,17 +107,17 @@ class ReferenceSimulator:
                 head = min(waiting, key=lambda j: (j.estimate, j.idx))
             else:
                 head = min(waiting, key=lambda j: (-j.estimate, j.idx))
-            return head if head.nodes <= free else None
+            return head if head.nodes <= cap else None
         if pol == "bestfit":
-            feas = [j for j in waiting if j.nodes <= free]
+            feas = [j for j in waiting if j.nodes <= cap]
             if not feas:
                 return None
             return min(feas, key=lambda j: (free - j.nodes, j.idx))
         if pol == "backfill":
             head = min(waiting, key=lambda j: j.idx)
-            if head.nodes <= free:
+            if head.nodes <= cap:
                 return head
-            # shadow via estimates of running jobs
+            # shadow via estimates of running jobs (free-count based, pinned)
             rel = sorted(
                 (max(j.start + j.estimate, clock + 1), j.idx, j.nodes)
                 for j in running
@@ -98,14 +132,15 @@ class ReferenceSimulator:
                 shadow, extra = None, free  # unreachable if nodes<=total
             cands = [
                 j for j in waiting
-                if j is not head and j.nodes <= free
+                if j is not head and j.nodes <= cap
                 and ((shadow is not None and clock + j.estimate <= shadow)
                      or j.nodes <= min(free, extra))
             ]
             return min(cands, key=lambda j: j.idx) if cands else None
         if pol == "preempt":
             # queue order (priority, submit-rank); head may reclaim nodes
-            # from strictly-lower-priority running jobs (engine mirror)
+            # from strictly-lower-priority running jobs (engine mirror);
+            # reclaim feasibility is free-count based by design
             head = min(waiting, key=lambda j: (j.priority, j.idx))
             reclaimable = sum(j.nodes for j in running
                               if j.priority > head.priority)
@@ -127,6 +162,19 @@ class ReferenceSimulator:
         clock = 0
         n_events = 0
 
+        mach = self._mach_host()
+        alpha_num, alpha_den = self._alpha()
+        owner = (np.full(self.total_nodes, -1, dtype=np.int64)
+                 if mach is not None else None)
+        ev_time: List[int] = []
+        ev_free: List[int] = []
+        ev_lfb: List[int] = []
+
+        def cap_now() -> int:
+            if owner is None:
+                return free
+            return _host.placeable_cap_host(self.alloc, owner)
+
         while ai < n or heap:
             while heap and (heap[0][1] not in running
                             or running[heap[0][1]].finish != heap[0][0]):
@@ -143,13 +191,16 @@ class ReferenceSimulator:
                     continue  # stale: the job was preempted and re-queued
                 del running[idx]
                 free += j.nodes
+                if owner is not None:
+                    owner[owner == idx] = -1
             # arrivals
             while ai < n and jobs[arrivals[ai]].submit <= clock:
                 waiting.append(jobs[arrivals[ai]])
                 ai += 1
             # scheduling pass
             while True:
-                j = self._select(waiting, list(running.values()), free, clock)
+                j = self._select(waiting, list(running.values()), free,
+                                 cap_now(), clock)
                 if j is None:
                     break
                 if j.nodes > free:  # preempt policy: suspend victims
@@ -166,14 +217,28 @@ class ReferenceSimulator:
                         v.remaining = max(v.finish - clock, 1)
                         v.finish = -1
                         del running[v.idx]
+                        if owner is not None:
+                            owner[owner == v.idx] = -1
                         waiting.append(v)
                 waiting.remove(j)
                 if j.start < 0:
                     j.start = clock   # first dispatch only
-                j.finish = clock + j.remaining
+                dilated = j.remaining
+                if owner is not None:
+                    ids = _host.place_host(self.alloc, mach, owner, j.nodes)
+                    owner[ids] = j.idx
+                    j.alloc_span = _host.group_span_host(mach, ids)
+                    j.alloc_first, j.alloc_sum = _host.fingerprint_host(ids)
+                    dilated = _con.dilate_host(alpha_num, alpha_den,
+                                               j.remaining, j.alloc_span)
+                j.finish = clock + dilated
                 free -= j.nodes
                 running[j.idx] = j
                 heapq.heappush(heap, (j.finish, j.idx))
+            if owner is not None:
+                ev_time.append(clock)
+                ev_free.append(free)
+                ev_lfb.append(_host.largest_free_run_host(owner))
 
         out = {
             "submit": np.array([j.submit for j in jobs], dtype=np.int64),
@@ -187,11 +252,24 @@ class ReferenceSimulator:
         out["valid"] = np.ones(n, dtype=bool)
         out["makespan"] = int(out["finish"].max(initial=0))
         out["n_events"] = n_events
+        if mach is not None:
+            out["alloc_first"] = np.array(
+                [j.alloc_first for j in jobs], dtype=np.int64)
+            out["alloc_span"] = np.array(
+                [j.alloc_span for j in jobs], dtype=np.int64)
+            out["alloc_sum"] = np.array(
+                [j.alloc_sum for j in jobs], dtype=np.int64)
+            out["ev_time"] = np.array(ev_time, dtype=np.int64)
+            out["ev_free"] = np.array(ev_free, dtype=np.int64)
+            out["ev_lfb"] = np.array(ev_lfb, dtype=np.int64)
         return out
 
 
-def simulate_reference(trace, policy: str, *, total_nodes: int):
-    sim = ReferenceSimulator(total_nodes=total_nodes, policy=policy)
+def simulate_reference(trace, policy: str, *, total_nodes: int, machine=None,
+                       alloc: str = "simple", contention=None):
+    sim = ReferenceSimulator(total_nodes=total_nodes, policy=policy,
+                             machine=machine, alloc=alloc,
+                             contention=contention)
     sim.load(trace["submit"], trace["runtime"], trace["nodes"],
              trace.get("estimate"), trace.get("priority"))
     return sim.run()

@@ -1,0 +1,45 @@
+"""Optional-hypothesis shim (see ISSUE 1 satellite: seed collection fix).
+
+``from _hypothesis_compat import given, settings, st`` works whether or not
+hypothesis is installed.  When it is missing, ``@given(...)`` replaces the
+property test with a ``pytest.importorskip``-style skip at run time, so
+deterministic tests in the same module still collect and run.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis is absent
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: every attribute lookup and
+        call returns another stub, so module-level strategy construction
+        (``st.integers(...)``, ``@st.composite`` builders) parses fine."""
+
+        def __getattr__(self, _name):
+            return self
+
+        def __call__(self, *_args, **_kwargs):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def decorate(_fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():
+                pytest.importorskip("hypothesis")
+            skipped.__name__ = _fn.__name__
+            skipped.__doc__ = _fn.__doc__
+            return skipped
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+        return decorate

@@ -5,6 +5,7 @@ import sys
 # sets the 512-device flag, in its own process.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))  # _hypothesis_compat shim
 
 import numpy as np
 import pytest

@@ -1,0 +1,335 @@
+"""Topology-aware node allocation (DESIGN.md §11).
+
+Covers the three acceptance claims of ISSUE 1:
+
+1. ``alloc="simple"`` with contention off reproduces the seed scalar-counter
+   schedule bit-for-bit on the validation traces,
+2. ``contiguous`` vs ``spread`` on a dragonfly machine produce measurably
+   different locality/fragmentation metrics,
+3. the JAX engine matches the reference simulator exactly — starts, finishes
+   *and* node-map fingerprints — under every strategy (property-style sweep
+   over random traces x strategies x policies x contention).
+
+Plus unit tests pinning each strategy's placement on hand-built machines.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import alloc
+from repro.alloc import host
+from repro.core import metrics
+from repro.core.engine import simulate_np
+from repro.core.jobs import POLICY_IDS, make_jobset
+from repro.core.parallel import simulate_alloc_sweep
+from repro.refsim import simulate_reference
+from repro.traces import das2_like, sdsc_sp2_like
+
+STRATEGIES = ["simple", "contiguous", "spread", "topo"]
+POLICIES = ["fcfs", "sjf", "ljf", "bestfit", "backfill", "preempt"]
+
+
+def place_ids(strategy, machine, owner, need):
+    mask = np.asarray(alloc.place(
+        jnp.int32(alloc.alloc_id(strategy)), machine,
+        jnp.asarray(owner, dtype=jnp.int32), jnp.int32(need)))
+    return np.nonzero(mask)[0]
+
+
+# ---------------------------------------------------------------------------
+# unit placement on hand-built machines
+# ---------------------------------------------------------------------------
+
+
+def test_simple_takes_lowest_free_ids():
+    m = alloc.linear(8, group_size=4)
+    owner = np.array([0, -1, -1, 3, -1, -1, -1, 5])
+    np.testing.assert_array_equal(place_ids("simple", m, owner, 3), [1, 2, 4])
+
+
+def test_contiguous_best_fit_block():
+    m = alloc.linear(10, group_size=5)
+    # runs: [1,2] (len 2), [4,5,6] (len 3), [8,9] (len 2)
+    owner = np.array([0, -1, -1, 1, -1, -1, -1, 2, -1, -1])
+    # need 2: best fit = first run of exactly len 2 -> nodes 1,2
+    np.testing.assert_array_equal(place_ids("contiguous", m, owner, 2), [1, 2])
+    # need 3: only the middle run fits
+    np.testing.assert_array_equal(place_ids("contiguous", m, owner, 3), [4, 5, 6])
+
+
+def test_contiguous_tie_breaks_by_start():
+    m = alloc.linear(8, group_size=8)
+    owner = np.array([-1, -1, 9, -1, -1, 9, -1, -1])  # three len-2 runs
+    np.testing.assert_array_equal(place_ids("contiguous", m, owner, 2), [0, 1])
+
+
+def test_spread_round_robins_groups():
+    m = alloc.dragonfly(3, 3)  # groups {0,1,2},{3,4,5},{6,7,8}
+    owner = np.full(9, -1)
+    # one node per group first, in group order, lowest id within group
+    np.testing.assert_array_equal(place_ids("spread", m, owner, 3), [0, 3, 6])
+    np.testing.assert_array_equal(place_ids("spread", m, owner, 5), [0, 1, 3, 4, 6])
+
+
+def test_topo_packs_fullest_groups_first():
+    m = alloc.dragonfly(3, 3)
+    owner = np.full(9, -1)
+    owner[0] = 7          # group 0 has 2 free, groups 1,2 have 3 free
+    # need 4: fill group 1 (3 free, lowest id among fullest), spill into group 2
+    np.testing.assert_array_equal(place_ids("topo", m, owner, 4), [3, 4, 5, 6])
+
+
+def test_placeable_cap_contiguous_blocks_on_fragmentation():
+    owner = jnp.asarray(np.array([-1, 0, -1, 1, -1, 2, -1, 3]), dtype=jnp.int32)
+    assert int(alloc.placeable_cap(jnp.int32(alloc.SIMPLE), owner)) == 4
+    assert int(alloc.placeable_cap(jnp.int32(alloc.CONTIGUOUS), owner)) == 1
+
+
+def test_group_span_counts_distinct_groups():
+    m = alloc.dragonfly(4, 2)
+    mask = jnp.asarray(np.array([True, False, False, True, False, False, True, True]))
+    assert int(alloc.group_span(m, mask)) == 3
+
+
+def test_jax_placement_matches_host_mirror_random_maps():
+    m = alloc.mesh2d(4, 4)
+    mh = m.to_host()
+    rng = np.random.default_rng(11)
+    for _ in range(60):
+        owner = np.where(rng.random(16) < 0.45,
+                         rng.integers(0, 6, 16), -1).astype(np.int32)
+        free = host.free_count_host(owner)
+        if free == 0:
+            continue
+        need = int(rng.integers(1, free + 1))
+        for s in STRATEGIES:
+            np.testing.assert_array_equal(
+                place_ids(s, m, owner, need), host.place_host(s, mh, owner, need),
+                err_msg=f"strategy={s} owner={owner} need={need}")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: simple == seed scalar counter, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["fcfs", "sjf", "ljf", "bestfit", "backfill"])
+@pytest.mark.parametrize("trace_fn,nodes,machine_fn", [
+    (das2_like, 400, lambda: alloc.linear(400, group_size=16)),
+    (sdsc_sp2_like, 128, lambda: alloc.dragonfly(16, 8)),
+])
+def test_simple_reproduces_scalar_counter_bit_for_bit(policy, trace_fn, nodes,
+                                                      machine_fn):
+    trace = trace_fn(300, seed=7)
+    scalar = simulate_np(trace, policy, total_nodes=nodes)
+    mapped = simulate_np(trace, policy, total_nodes=nodes,
+                         machine=machine_fn(), alloc="simple")
+    np.testing.assert_array_equal(mapped["start"], scalar["start"])
+    np.testing.assert_array_equal(mapped["finish"], scalar["finish"])
+    assert mapped["makespan"] == scalar["makespan"]
+    assert mapped["n_events"] == scalar["n_events"]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: JAX engine == refsim under every strategy (node maps included)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_exact_match_vs_reference_all_policies(strategy):
+    m = alloc.dragonfly(4, 4)
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        n = 50
+        trace = {
+            "submit": rng.integers(0, 120, n),
+            "runtime": rng.integers(1, 50, n),
+            "nodes": rng.integers(1, 10, n),
+            "estimate": rng.integers(1, 100, n),
+            "priority": rng.integers(0, 3, n),
+        }
+        for policy in POLICIES:
+            ours = simulate_np(trace, policy, total_nodes=16, machine=m,
+                               alloc=strategy)
+            ref = simulate_reference(trace, policy, total_nodes=16, machine=m,
+                                     alloc=strategy)
+            assert ours["done"][:n].all(), (strategy, policy, seed)
+            for k in ("start", "finish", "alloc_first", "alloc_span",
+                      "alloc_sum"):
+                np.testing.assert_array_equal(
+                    ours[k][:n], ref[k],
+                    err_msg=f"{k} strategy={strategy} policy={policy} seed={seed}")
+            # per-event fragmentation log is pinned too
+            assert ours["n_events"] == ref["n_events"]
+            for k in ("ev_time", "ev_free", "ev_lfb"):
+                np.testing.assert_array_equal(ours[k], ref[k])
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_exact_match_vs_reference_with_contention(strategy):
+    m = alloc.dragonfly(4, 4)
+    con = alloc.Contention.make(1, 5)   # +20% per extra group spanned
+    rng = np.random.default_rng(99)
+    n = 40
+    trace = {
+        "submit": rng.integers(0, 100, n),
+        "runtime": rng.integers(1, 40, n),
+        "nodes": rng.integers(1, 9, n),
+        "estimate": rng.integers(1, 80, n),
+        "priority": rng.integers(0, 3, n),
+    }
+    for policy in ("fcfs", "backfill", "preempt"):
+        ours = simulate_np(trace, policy, total_nodes=16, machine=m,
+                           alloc=strategy, contention=con)
+        ref = simulate_reference(trace, policy, total_nodes=16, machine=m,
+                                 alloc=strategy, contention=con)
+        for k in ("start", "finish", "alloc_span", "alloc_sum"):
+            np.testing.assert_array_equal(
+                ours[k][:n], ref[k],
+                err_msg=f"{k} strategy={strategy} policy={policy}")
+
+
+# ---------------------------------------------------------------------------
+# contention semantics
+# ---------------------------------------------------------------------------
+
+
+def test_contention_dilates_by_span_exactly():
+    # 6-node job on a dragonfly of 2-node groups must span 3 groups
+    m = alloc.dragonfly(4, 2)
+    trace = {"submit": np.array([0]), "runtime": np.array([100]),
+             "nodes": np.array([6]), "estimate": np.array([100])}
+    con = alloc.Contention.make(1, 10)  # +10% per extra group
+    out = simulate_np(trace, "fcfs", total_nodes=8, machine=m, alloc="topo",
+                      contention=con)
+    assert out["alloc_span"][0] == 3
+    # dilated = 100 + (100 * 1 * 2) // 10 = 120
+    assert out["finish"][0] - out["start"][0] == 120
+
+
+def test_contention_dilation_saturates_without_overflow():
+    """Extreme alpha x span x remaining stays positive, saturates at the
+    trace-horizon bound, and matches the host mirror bit-for-bit
+    (DESIGN.md §11.3)."""
+    for num, rem, span in ((50, 2_000_000, 30), (1000, 2 ** 29, 2 ** 14),
+                           (1, 100, 3)):
+        con = alloc.Contention.make(num, 1)
+        j = int(alloc.dilate(con, jnp.int32(rem), jnp.int32(span)))
+        h = alloc.dilate_host(num, 1, rem, span)
+        assert j == h, (num, rem, span)
+        assert 0 < j <= 2 ** 30 - 1
+
+
+def test_alloc_args_require_machine():
+    trace = {"submit": np.array([0]), "runtime": np.array([5]),
+             "nodes": np.array([1])}
+    with pytest.raises(ValueError):
+        simulate_np(trace, "fcfs", total_nodes=8, alloc="contiguous")
+    with pytest.raises(ValueError):
+        simulate_np(trace, "fcfs", total_nodes=8,
+                    contention=alloc.Contention.make(1, 5))
+
+
+def test_contention_off_is_identity():
+    m = alloc.dragonfly(4, 4)
+    trace = sdsc_sp2_like(150, seed=5)
+    trace = {k: v for k, v in trace.items()}
+    trace["nodes"] = np.minimum(trace["nodes"], 16)
+    a = simulate_np(trace, "backfill", total_nodes=16, machine=m, alloc="spread")
+    b = simulate_np(trace, "backfill", total_nodes=16, machine=m, alloc="spread",
+                    contention=alloc.Contention.off())
+    np.testing.assert_array_equal(a["finish"], b["finish"])
+
+
+def test_contention_penalizes_spread_vs_topo():
+    """Same trace + machine: the span-heavy allocator pays a larger makespan
+    tax — the allocator choice is now a first-class scenario axis."""
+    m = alloc.dragonfly(16, 8)
+    trace = sdsc_sp2_like(250, seed=2)
+    con = alloc.Contention.make(1, 4)
+    sp = simulate_np(trace, "backfill", total_nodes=128, machine=m,
+                     alloc="spread", contention=con)
+    tp = simulate_np(trace, "backfill", total_nodes=128, machine=m,
+                     alloc="topo", contention=con)
+    v = sp["valid"]
+    assert sp["alloc_span"][v].mean() > tp["alloc_span"][v].mean()
+    assert sp["makespan"] > tp["makespan"]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: strategies measurably differ on a dragonfly machine
+# ---------------------------------------------------------------------------
+
+
+def test_contiguous_vs_spread_locality_and_fragmentation_differ():
+    m = alloc.dragonfly(16, 8)
+    trace = sdsc_sp2_like(300, seed=7)
+    res = {}
+    for s in ("contiguous", "spread"):
+        out = simulate_np(trace, "backfill", total_nodes=128, machine=m, alloc=s)
+        res[s] = metrics.alloc_summary(out)
+    # spread scatters across groups; contiguous packs a block
+    assert res["spread"]["mean_job_span"] > 1.5 * res["contiguous"]["mean_job_span"]
+    assert res["spread"]["mean_frag"] != res["contiguous"]["mean_frag"]
+
+
+def test_fragmentation_series_bounds():
+    m = alloc.dragonfly(8, 8)
+    trace = sdsc_sp2_like(200, seed=1)
+    trace = {k: np.minimum(v, 64) if k == "nodes" else v for k, v in trace.items()}
+    out = simulate_np(trace, "fcfs", total_nodes=64, machine=m, alloc="spread")
+    t, frag = metrics.fragmentation_series(out)
+    assert len(t) > 0 and (frag >= 0).all() and (frag <= 1).all()
+    t2, lfb = metrics.largest_free_block_series(out)
+    assert (lfb <= 64).all() and (lfb >= 0).all()
+    # largest free block never exceeds the free count
+    assert (lfb <= np.maximum(out["ev_free"][np.r_[
+        out["ev_time"][1:] != out["ev_time"][:-1], True]], 0)).all()
+    tj, span = metrics.job_span_series(out)
+    assert np.nanmax(span) <= 8  # cannot span more groups than exist
+
+
+# ---------------------------------------------------------------------------
+# ensemble sweep axis
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_sweep_matches_individual_runs():
+    trace = sdsc_sp2_like(120, seed=9)
+    jobs = make_jobset(trace["submit"], trace["runtime"], trace["nodes"],
+                       trace["estimate"], total_nodes=64)
+    m = alloc.dragonfly(8, 8)
+    res = simulate_alloc_sweep(jobs, POLICY_IDS["backfill"], 64, m, STRATEGIES)
+    assert res.start.shape == (4, jobs.capacity)
+    for i, s in enumerate(STRATEGIES):
+        single = simulate_np(trace, "backfill", total_nodes=64, machine=m,
+                             alloc=s)
+        np.testing.assert_array_equal(np.asarray(res.start[i]), single["start"])
+        np.testing.assert_array_equal(np.asarray(res.alloc_sum[i]),
+                                      single["alloc_sum"])
+
+
+# ---------------------------------------------------------------------------
+# machine builders
+# ---------------------------------------------------------------------------
+
+
+def test_machine_builders_invariants():
+    for m in (alloc.linear(12, group_size=5), alloc.mesh2d(3, 4),
+              alloc.dragonfly(3, 4)):
+        g = np.asarray(m.group)
+        assert (np.diff(g) >= 0).all()
+        gs = np.asarray(m.group_start)
+        sz = np.asarray(m.group_size)
+        for i in range(m.n_nodes):
+            members = np.nonzero(g == g[i])[0]
+            assert gs[i] == members[0] and sz[i] == len(members)
+
+
+def test_total_nodes_mismatch_raises():
+    trace = {"submit": np.array([0]), "runtime": np.array([5]),
+             "nodes": np.array([1])}
+    with pytest.raises(ValueError):
+        simulate_np(trace, "fcfs", total_nodes=8,
+                    machine=alloc.dragonfly(2, 2))

@@ -7,8 +7,8 @@ with their original submit rank, and `start` records first dispatch only.
 """
 
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401  (used by the hypothesis fallback shim)
+from _hypothesis_compat import given, settings, st
 
 from repro.core.engine import simulate_np
 from repro.refsim import simulate_reference

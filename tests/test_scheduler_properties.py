@@ -1,7 +1,7 @@
 """Hypothesis property tests: system invariants of the DES engine."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import metrics
 from repro.core.engine import simulate_np

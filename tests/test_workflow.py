@@ -2,8 +2,8 @@
 JSON I/O (paper §3)."""
 
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401  (used by the hypothesis fallback shim)
+from _hypothesis_compat import given, settings, st
 
 from repro.core.workflow import (
     WF_POLICY_IDS, critical_path_length, make_taskset, simulate_workflow,
