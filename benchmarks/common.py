@@ -43,3 +43,16 @@ def series_to_csv(path: str, header: Iterable[str], rows):
         w.writerow(list(header))
         for r in rows:
             w.writerow(list(r))
+
+
+def sweep_to_csv(path: str, grid, fields: Iterable[str]):
+    """Write a ``repro.api.SweepResult`` to CSV: one row per grid point,
+    axis values first, then the requested ``Result.summary()`` fields."""
+    axis_names = list(grid.axes)
+    fields = list(fields)
+    rows = [
+        [summary[a] for a in axis_names] + [summary[f] for f in fields]
+        for summary in grid.summaries()
+    ]
+    series_to_csv(path, axis_names + fields, rows)
+    return rows

@@ -1,5 +1,6 @@
 """Paper Fig. 4(a): per-job wait-time validation vs the reference simulator,
-on DAS-2-like and SDSC-SP2-like traces."""
+on DAS-2-like and SDSC-SP2-like traces — both engines driven from the SAME
+``Scenario`` spec."""
 
 from __future__ import annotations
 
@@ -8,20 +9,20 @@ import os
 import numpy as np
 
 from benchmarks.common import emit, series_to_csv
-from repro.core.engine import simulate_np
-from repro.refsim import simulate_reference
-from repro.traces import das2_like, sdsc_sp2_like
+from repro.api import Scenario, SyntheticTrace, run, run_ref
 
 
 def main(outdir: str = "results") -> None:
     os.makedirs(outdir, exist_ok=True)
     rows = []
-    for trace_name, trace, nodes in (
-        ("das2", das2_like(2000, seed=1), 400),
-        ("sdsc_sp2", sdsc_sp2_like(2000, seed=2), 128),
+    for trace_name, kind, seed, nodes in (
+        ("das2", "das2", 1, 400),
+        ("sdsc_sp2", "sdsc_sp2", 2, 128),
     ):
-        ours = simulate_np(trace, "backfill", total_nodes=nodes)
-        ref = simulate_reference(trace, "backfill", total_nodes=nodes)
+        scn = Scenario(trace=SyntheticTrace(n_jobs=2000, seed=seed, kind=kind),
+                       total_nodes=nodes, policy="backfill")
+        ours = run(scn).to_np()
+        ref = run_ref(scn).to_np()
         n = len(ref["wait"])
         exact = int((ours["wait"][:n] == ref["wait"]).sum())
         rows.append((trace_name, n, exact,

@@ -3,16 +3,20 @@
 The paper scales MPI ranks; our SPMD analogue has two measurable axes on
 this 1-physical-core container:
 
-  (a) *vectorized ensemble*: B independent simulations batched with vmap vs.
-      a serial python loop — the SIMD parallelism that maps 1:1 onto devices
-      (each device runs its ensemble shard with zero communication);
+  (a) *vectorized ensemble*: a B-seed ``sweep()`` (ONE vmapped executable)
+      vs. a serial ``run()`` loop over the same scenarios — the SIMD
+      parallelism that maps 1:1 onto devices;
   (b) *job-size scaling*: events/second as the per-simulation job count
       grows (the paper's "greater speedup for larger jobs" effect —
       vector lanes amortize fixed per-event cost);
   (c) *device-partitioned run*: subprocess with XLA host devices ∈ {1,2,4}
-      running the sharded ensemble — demonstrates the partitioning is real;
-      wall-clock speedup is bounded by the single physical core, so we
-      report events/s and note the bound.
+      running the mesh-sharded sweep — demonstrates the partitioning is
+      real; wall-clock speedup is bounded by the single physical core, so
+      we report events/s and note the bound.
+
+Both sides of (a) go through the Scenario API end-to-end (trace
+materialization + job-table build + device run), so the comparison is
+apples-to-apples for what a user actually calls.
 """
 
 from __future__ import annotations
@@ -22,53 +26,46 @@ import os
 import subprocess
 import sys
 
-import jax
 import numpy as np
 
 from benchmarks.common import emit, series_to_csv, time_call
-from repro.core.engine import simulate
-from repro.core.jobs import POLICY_IDS, make_jobset
-from repro.core.parallel import simulate_ensemble, stack_jobsets
-from repro.traces import das2_like
+from repro.api import Scenario, SyntheticTrace, run, sweep
 
-
-def _jobsets(B, J, seed0=100):
-    return [
-        make_jobset(*(lambda t: (t["submit"], t["runtime"], t["nodes"],
-                                 t["estimate"]))(das2_like(J, seed=seed0 + i)),
-        total_nodes=400)
-        for i in range(B)
-    ]
+BASE = Scenario(trace=SyntheticTrace(n_jobs=300, seed=100, kind="das2"),
+                total_nodes=400, policy="backfill")
 
 
 def bench_ensemble(outdir: str):
     J = 300
     rows = []
     for B in (1, 4, 16, 64):
-        jsets = _jobsets(B, J)
-        jb = stack_jobsets(jsets)
-        pols = np.full((B,), POLICY_IDS["backfill"], np.int32)
-        nodes = np.full((B,), 400, np.int32)
+        seeds = [100 + i for i in range(B)]
 
-        t_vmap = time_call(lambda: simulate_ensemble(jb, pols, nodes).n_events)
+        # return the n_events arrays so time_call's block_until_ready waits
+        # for the async device work, not just the host-side dispatch
+        t_sweep = time_call(
+            lambda: [r.raw.n_events
+                     for r in sweep(BASE, axes={"trace.seed": seeds}).results])
         t_loop = time_call(
-            lambda: [simulate(js, POLICY_IDS["backfill"], 400).n_events
-                     for js in jsets],
+            lambda: [run(BASE.with_(**{"trace.seed": s})).raw.n_events
+                     for s in seeds],
             warmup=1, iters=1)
         events = B * 2 * J
-        rows.append((B, t_loop, t_vmap, t_loop / t_vmap, events / t_vmap))
-        emit(f"fig5_ensemble_B{B}", t_vmap,
-             f"speedup_vs_serial={t_loop / t_vmap:.2f};events_per_s={events / t_vmap:.0f}")
+        rows.append((B, t_loop, t_sweep, t_loop / t_sweep, events / t_sweep))
+        emit(f"fig5_ensemble_B{B}", t_sweep,
+             f"speedup_vs_serial={t_loop / t_sweep:.2f};"
+             f"events_per_s={events / t_sweep:.0f}")
     series_to_csv(os.path.join(outdir, "fig5_ensemble.csv"),
-                  ["batch", "t_serial_s", "t_vmap_s", "speedup", "events_per_s"],
-                  rows)
+                  ["batch", "t_serial_s", "t_sweep_s", "speedup",
+                   "events_per_s"], rows)
 
 
 def bench_job_size(outdir: str):
     rows = []
     for J in (200, 1000, 4000):
-        js = _jobsets(1, J)[0]
-        t = time_call(lambda: simulate(js, POLICY_IDS["fcfs"], 400).n_events)
+        scn = BASE.with_(policy="fcfs", trace=SyntheticTrace(
+            n_jobs=J, seed=100, kind="das2"))
+        t = time_call(lambda: run(scn).raw.n_events)
         rows.append((J, t, 2 * J / t))
         emit(f"fig5_jobsize_J{J}", t, f"events_per_s={2 * J / t:.0f}")
     series_to_csv(os.path.join(outdir, "fig5_jobsize.csv"),
@@ -81,21 +78,19 @@ os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}
 sys.path.insert(0, "src")
 import jax, numpy as np
 from jax.sharding import Mesh
-from repro.core.jobs import POLICY_IDS, make_jobset
-from repro.core.parallel import simulate_ensemble, stack_jobsets
-from repro.traces import das2_like
+from repro.api import Scenario, SyntheticTrace, sweep
 D = int(sys.argv[1]); B = 16; J = 200
-jsets = [make_jobset(*(lambda t: (t["submit"], t["runtime"], t["nodes"],
-         t["estimate"]))(das2_like(J, seed=i)), total_nodes=400) for i in range(B)]
-jb = stack_jobsets(jsets)
+base = Scenario(trace=SyntheticTrace(n_jobs=J, seed=0, kind="das2"),
+                total_nodes=400, policy="backfill")
 mesh = Mesh(np.array(jax.devices()), ("sim",))
-pols = np.full((B,), POLICY_IDS["backfill"], np.int32)
-nodes = np.full((B,), 400, np.int32)
-r = simulate_ensemble(jb, pols, nodes, mesh=mesh); jax.block_until_ready(r.n_events)
+axes = {"trace.seed": list(range(B))}
+g = sweep(base, axes=axes, mesh=mesh)
+jax.block_until_ready(g[0].raw.n_events)
 t0 = time.perf_counter()
-r = simulate_ensemble(jb, pols, nodes, mesh=mesh); jax.block_until_ready(r.n_events)
+g = sweep(base, axes=axes, mesh=mesh)
+events = int(sum(np.asarray(r.raw.n_events) for r in g.results))
 print(json.dumps({"devices": D, "seconds": time.perf_counter() - t0,
-                  "events": int(np.asarray(r.n_events).sum())}))
+                  "events": events}))
 """
 
 

@@ -3,10 +3,10 @@ different allocators yields different makespans, waits, locality and
 fragmentation — the scenario family the seed scalar counter could not
 express.
 
-Runs the 4 strategies x {contention off, on} on a dragonfly machine over a
-synthetic SDSC-SP2-like trace (and a real SWF trace if ``REPRO_SWF`` points
-at one), as one vmapped ensemble per contention setting.  Emits
-``fig_alloc/<trace>/<strategy>[+con]`` rows with
+One ``sweep()`` per trace runs the full 4-strategy × 2-contention grid as
+a single vmapped executable (DESIGN.md §12) over a dragonfly machine, on a
+synthetic SDSC-SP2-like trace (and a real SWF trace if ``REPRO_SWF``
+points at one).  Emits ``fig_alloc/<trace>/<strategy>[+con]`` rows with
 ``makespan:avg_wait:mean_span:mean_frag`` in the derived column; the full
 table lands in ``results/fig_alloc.csv``.
 """
@@ -15,72 +15,52 @@ from __future__ import annotations
 
 import os
 
-import numpy as np
-
 from benchmarks import common
-from repro import alloc
-from repro.core import metrics
-from repro.core.jobs import POLICY_IDS, make_jobset
-from repro.core.parallel import simulate_alloc_sweep
-from repro.traces import sdsc_sp2_like
-from repro.traces.swf import load_swf
+from repro.api import (
+    Scenario, SwfTrace, SyntheticTrace, Topology, sweep,
+)
 
 STRATEGIES = ("simple", "contiguous", "spread", "topo")
+CONTENTIONS = (None, (1, 5))  # off / +20% runtime per extra group spanned
 
 
-def _sweep_rows(tag, trace, machine, total_nodes, contention, rows):
-    jobs = make_jobset(trace["submit"], trace["runtime"], trace["nodes"],
-                       trace.get("estimate"), capacity=None,
-                       total_nodes=total_nodes)
-    policy = POLICY_IDS["backfill"]
+def _sweep_rows(tag, base: Scenario, rows: list):
+    grid_holder = []
 
-    def run():
-        return simulate_alloc_sweep(jobs, policy, total_nodes, machine,
-                                    STRATEGIES, contention=contention)
+    def run_grid():
+        grid_holder[:] = [sweep(base, axes={"contention": CONTENTIONS,
+                                            "alloc": STRATEGIES})]
+        return [r.raw.n_events for r in grid_holder[0].results]
 
     # one warmup (compile), one timed run whose result feeds the metrics
-    secs = common.time_call(run, warmup=1, iters=1)
-    res = run()
-    suffix = "+con" if contention is not None else ""
-    valid = np.asarray(jobs.valid)
-    for i, strat in enumerate(STRATEGIES):
-        n_ev = int(res.n_events[i])
-        out = {
-            "valid": valid, "done": np.asarray(res.done[i]),
-            "submit": np.asarray(jobs.submit), "nodes": np.asarray(jobs.nodes),
-            "runtime": np.asarray(jobs.runtime),
-            "start": np.asarray(res.start[i]), "finish": np.asarray(res.finish[i]),
-            "alloc_span": np.asarray(res.alloc_span[i]),
-            "ev_time": np.asarray(res.ev_time[i])[:n_ev],
-            "ev_free": np.asarray(res.ev_free[i])[:n_ev],
-            "ev_lfb": np.asarray(res.ev_lfb[i])[:n_ev],
-        }
-        s = metrics.summary(out, total_nodes)
-        a = metrics.alloc_summary(out)
+    secs = common.time_call(run_grid, warmup=1, iters=1)
+    grid = grid_holder[0]
+    n_points = len(grid)
+    for point, res in grid:
+        s = res.summary()
+        suffix = "+con" if point["contention"] is not None else ""
         derived = (f"{s['makespan']:.0f}:{s['avg_wait']:.1f}"
-                   f":{a['mean_job_span']:.2f}:{a['mean_frag']:.3f}")
-        common.emit(f"fig_alloc/{tag}/{strat}{suffix}", secs / len(STRATEGIES),
-                    derived)
-        rows.append((tag, strat, contention is not None, s["makespan"],
-                     s["avg_wait"], s["utilization"], a["mean_job_span"],
-                     a["mean_frag"], a["min_largest_free_block"]))
+                   f":{s['mean_job_span']:.2f}:{s['mean_frag']:.3f}")
+        common.emit(f"fig_alloc/{tag}/{point['alloc']}{suffix}",
+                    secs / n_points, derived)
+        rows.append((tag, point["alloc"], point["contention"] is not None,
+                     s["makespan"], s["avg_wait"], s["utilization"],
+                     s["mean_job_span"], s["mean_frag"],
+                     s["min_largest_free_block"]))
 
 
 def _run(n_jobs: int, groups: int, per_group: int):
-    total = groups * per_group
-    machine = alloc.dragonfly(groups, per_group)
-    con = alloc.Contention.make(1, 5)  # +20% runtime per extra group spanned
+    topo = Topology.dragonfly(groups, per_group)
     rows: list = []
 
-    trace = sdsc_sp2_like(n_jobs, seed=7)
-    _sweep_rows("sdsc_sp2_like", trace, machine, total, None, rows)
-    _sweep_rows("sdsc_sp2_like", trace, machine, total, con, rows)
+    base = Scenario(trace=SyntheticTrace(n_jobs=n_jobs, seed=7, kind="sdsc_sp2"),
+                    topology=topo, policy="backfill")
+    _sweep_rows("sdsc_sp2_like", base, rows)
 
     swf_path = os.environ.get("REPRO_SWF", "")
     if swf_path and os.path.exists(swf_path):
-        swf = load_swf(swf_path, max_jobs=n_jobs)
-        _sweep_rows(os.path.basename(swf_path), swf, machine, total, None, rows)
-        _sweep_rows(os.path.basename(swf_path), swf, machine, total, con, rows)
+        swf_base = base.with_(trace=SwfTrace(swf_path, max_jobs=n_jobs))
+        _sweep_rows(os.path.basename(swf_path), swf_base, rows)
 
     os.makedirs("results", exist_ok=True)
     common.series_to_csv(

@@ -1,6 +1,7 @@
-"""Allocator comparison: one trace, one dragonfly machine, four placement
-strategies — different node maps, different locality, and (with contention)
-different makespans (DESIGN.md §11).
+"""Allocator comparison through one ``sweep()``: one trace, one dragonfly
+machine, 4 placement strategies × 2 contention settings — an 8-point grid
+in a single compiled executable (DESIGN.md §12), each point validated
+bit-exact (including node maps) against the reference simulator.
 
     PYTHONPATH=src python examples/alloc_compare.py
 """
@@ -11,49 +12,48 @@ sys.path.insert(0, "src")
 
 import numpy as np  # noqa: E402
 
-from repro import alloc  # noqa: E402
+from repro.api import (  # noqa: E402
+    Scenario, SyntheticTrace, Topology, run, run_ref, sweep,
+)
 from repro.core import metrics  # noqa: E402
-from repro.core.engine import simulate_np  # noqa: E402
-from repro.refsim import simulate_reference  # noqa: E402
-from repro.traces import sdsc_sp2_like  # noqa: E402
 
 GROUPS, PER_GROUP = 16, 8
 TOTAL = GROUPS * PER_GROUP
 
+BASE = Scenario(
+    trace=SyntheticTrace(n_jobs=600, seed=11, kind="sdsc_sp2"),
+    topology=Topology.dragonfly(GROUPS, PER_GROUP),
+    policy="backfill",
+)
+
+STRATEGIES = ("simple", "contiguous", "spread", "topo")
+CONTENTIONS = (None, (1, 5))   # off / +20% runtime per extra group spanned
+
 
 def main():
-    trace = sdsc_sp2_like(600, seed=11)
-    machine = alloc.dragonfly(GROUPS, PER_GROUP)
+    grid = sweep(BASE, axes={"contention": CONTENTIONS, "alloc": STRATEGIES})
+    print(f"8-point alloc x contention grid in {grid.n_compiles} compile(s)")
 
-    for con, label in ((None, "contention off"),
-                       (alloc.Contention.make(1, 5), "contention +20%/group")):
+    for con in CONTENTIONS:
+        label = "contention off" if con is None else "contention +20%/group"
         print(f"\n{label}:  ({GROUPS} groups x {PER_GROUP} nodes, backfill)")
         print(f"{'strategy':12s} {'makespan':>9s} {'avg wait':>9s} "
               f"{'job span':>9s} {'frag':>6s} {'matches ref':>11s}")
-        for strat in ("simple", "contiguous", "spread", "topo"):
-            out = simulate_np(trace, "backfill", total_nodes=TOTAL,
-                              machine=machine, alloc=strat, contention=con)
-            ref = simulate_reference(trace, "backfill", total_nodes=TOTAL,
-                                     machine=machine, alloc=strat,
-                                     contention=con)
-            n = len(ref["start"])
-            exact = bool(
-                (out["start"][:n] == ref["start"]).all()
-                and (out["alloc_sum"][:n] == ref["alloc_sum"]).all())
-            s = metrics.summary(out, TOTAL)
-            a = metrics.alloc_summary(out)
+        for strat in STRATEGIES:
+            res = grid.get(alloc=strat, contention=con)
+            exact = res.matches(run_ref(res.scenario), node_maps=True)
+            s = res.summary()
             print(f"{strat:12s} {s['makespan']:9.0f} {s['avg_wait']:9.0f} "
-                  f"{a['mean_job_span']:9.2f} {a['mean_frag']:6.3f} "
+                  f"{s['mean_job_span']:9.2f} {s['mean_frag']:6.3f} "
                   f"{str(exact):>11s}")
 
     # fragmentation over time for the block allocator
-    out = simulate_np(trace, "backfill", total_nodes=TOTAL, machine=machine,
-                      alloc="contiguous")
+    out = run(BASE.with_(alloc="contiguous")).to_np()
     t, lfb = metrics.largest_free_block_series(out)
-    grid = np.linspace(0, out["makespan"], 10)
-    samp = metrics.sample_series(t, lfb, grid)
+    grid_t = np.linspace(0, out["makespan"], 10)
+    samp = metrics.sample_series(t, lfb, grid_t)
     print("\nlargest free contiguous block over time (contiguous):")
-    for g, v in zip(grid, samp):
+    for g, v in zip(grid_t, samp):
         print(f"  t={g:9.0f}s  {'#' * int(40 * v / TOTAL):40s} {v:.0f}")
 
 

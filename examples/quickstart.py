@@ -1,8 +1,9 @@
-"""Quickstart: the paper's core loop in ~40 lines.
+"""Quickstart: the paper's core loop through the Scenario API.
 
-Simulates an HPC cluster under all five scheduling policies on a synthetic
-DAS-2-like trace, validates against the reference simulator, and prints the
-paper-Fig-4(b)-style comparison table.
+One declarative spec drives both engines: ``run`` (JAX) and ``run_ref``
+(host reference simulator) take the SAME ``Scenario``, so validation is a
+one-liner.  Simulates an HPC cluster under all five scheduling policies on
+a synthetic DAS-2-like trace and prints the paper-Fig-4(b)-style table.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,37 +14,36 @@ sys.path.insert(0, "src")
 
 import numpy as np  # noqa: E402
 
+from repro.api import Scenario, SyntheticTrace, run, run_ref  # noqa: E402
 from repro.core import metrics  # noqa: E402
-from repro.core.engine import simulate_np  # noqa: E402
-from repro.refsim import simulate_reference  # noqa: E402
-from repro.traces import das2_like  # noqa: E402
 
-TOTAL_NODES = 400
+# congest=2 halves inter-arrival gaps so the policies actually diverge
+BASE = Scenario(
+    trace=SyntheticTrace(n_jobs=1500, seed=0, kind="das2", congest=2),
+    total_nodes=400,
+)
 
 
 def main():
-    trace = das2_like(1500, seed=0)
-    trace["submit"] //= 2  # congest the cluster so policies differ
-
     print(f"{'policy':10s} {'avg wait':>9s} {'p95 wait':>9s} {'util':>6s} "
           f"{'makespan':>9s} {'matches ref':>11s}")
     for policy in ("fcfs", "bestfit", "backfill", "sjf", "ljf"):
-        ours = simulate_np(trace, policy, total_nodes=TOTAL_NODES)
-        ref = simulate_reference(trace, policy, total_nodes=TOTAL_NODES)
-        n = len(ref["start"])
-        exact = bool((ours["start"][:n] == ref["start"]).all())
-        s = metrics.summary(ours, TOTAL_NODES)
+        scn = BASE.with_(policy=policy)
+        res = run(scn)
+        exact = res.matches(run_ref(scn))
+        s = res.summary()
         print(f"{policy:10s} {s['avg_wait']:9.0f} {s['p95_wait']:9.0f} "
               f"{s['utilization']:6.3f} {s['makespan']:9.0f} {str(exact):>11s}")
 
     # node-occupancy series (paper Fig. 3a)
-    out = simulate_np(trace, "backfill", total_nodes=TOTAL_NODES)
+    out = run(BASE.with_(policy="backfill")).to_np()
+    total = BASE.total_nodes
     t, occ = metrics.occupancy_series(out)
     grid = np.linspace(0, out["makespan"], 12)
     samp = metrics.sample_series(t, occ, grid)
     print("\noccupancy over time (backfill):")
     for g, v in zip(grid, samp):
-        print(f"  t={g:9.0f}s  {'#' * int(40 * v / TOTAL_NODES):40s} {v:.0f}")
+        print(f"  t={g:9.0f}s  {'#' * int(40 * v / total):40s} {v:.0f}")
 
 
 if __name__ == "__main__":

@@ -17,8 +17,7 @@ sys.path.insert(0, "src")
 
 import numpy as np  # noqa: E402
 
-from repro.core import metrics  # noqa: E402
-from repro.core.engine import simulate_np  # noqa: E402
+from repro.api import ArrayTrace, Scenario, run  # noqa: E402
 
 TOTAL_CHIPS = 512
 
@@ -81,6 +80,9 @@ def main():
     print(f"fleet: {len(names)} jobs over {fleet['submit'].max()/3600:.1f} h, "
           f"{len(costs)} distinct (arch x shape) job classes\n")
 
+    base = Scenario(trace=ArrayTrace.from_dict(fleet),
+                    total_nodes=TOTAL_CHIPS)
+
     print(f"{'policy':10s} {'avg wait (m)':>12s} {'p95 wait (m)':>12s} "
           f"{'util':>6s} {'makespan (h)':>12s} {'serve p95 (m)':>13s}")
     serve_rows = np.array([n.split(":")[1] not in ("train_4k", "prefill_32k")
@@ -88,9 +90,9 @@ def main():
     order = np.lexsort((np.arange(len(names)), fleet["submit"]))
     serve_sorted = serve_rows[order]
     for policy in ("fcfs", "bestfit", "backfill", "sjf", "ljf", "preempt"):
-        out = simulate_np(fleet, policy, total_nodes=TOTAL_CHIPS)
-        s = metrics.summary(out, TOTAL_CHIPS)
-        sp95 = float(np.percentile(out["wait"][:len(names)][serve_sorted], 95))
+        res = run(base.with_(policy=policy))
+        s = res.summary()
+        sp95 = float(np.percentile(res["wait"][:len(names)][serve_sorted], 95))
         print(f"{policy:10s} {s['avg_wait']/60:12.1f} {s['p95_wait']/60:12.1f} "
               f"{s['utilization']:6.3f} {s['makespan']/3600:12.2f} "
               f"{sp95/60:13.1f}")
@@ -103,10 +105,9 @@ def main():
     inflated = dict(fleet)
     inflated["runtime"] = np.where(slow, (fleet["runtime"] * 1.7).astype(int),
                                    fleet["runtime"])
-    a = metrics.summary(simulate_np(fleet, "backfill", total_nodes=TOTAL_CHIPS),
-                        TOTAL_CHIPS)
-    b = metrics.summary(simulate_np(inflated, "backfill",
-                                    total_nodes=TOTAL_CHIPS), TOTAL_CHIPS)
+    a = run(base.with_(policy="backfill")).summary()
+    b = run(base.with_(policy="backfill",
+                       trace=ArrayTrace.from_dict(inflated))).summary()
     print(f"\nstraggler sensitivity (5% of jobs 1.7x slower, backfill):")
     print(f"  makespan {a['makespan']/3600:.2f} h -> {b['makespan']/3600:.2f} h; "
           f"avg wait {a['avg_wait']/60:.1f} m -> {b['avg_wait']/60:.1f} m")

@@ -1,0 +1,45 @@
+"""Scalable HPC job scheduling and resource management, reproduced in JAX.
+
+Public surface (DESIGN.md §12):
+
+    from repro import api, Scenario, run, run_ref, sweep
+
+``repro.api`` is the declarative front door — experiment specs, one
+``run()`` entry point, generic multi-axis ``sweep()``.  The substrate
+subpackages (``core``, ``alloc``, ``traces``, ``refsim``, ``models``, …)
+stay importable directly.
+
+Everything here resolves lazily (PEP 562): ``import repro`` performs no
+jax import, so entry points that must set ``XLA_FLAGS`` before jax
+initializes (``repro.launch.dryrun``, the elastic-restore subprocesses)
+keep working with the package on top of them.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = frozenset({
+    "alloc", "api", "ckpt", "configs", "core", "data", "kernels", "launch",
+    "models", "optim", "refsim", "runtime", "sharding", "traces",
+})
+
+# names re-exported from repro.api on first access
+_API_NAMES = frozenset({
+    "ArrayTrace", "Multicluster", "Result", "Scenario", "SweepResult",
+    "SwfTrace", "SyntheticTrace", "Topology", "run", "run_ref", "sweep",
+})
+
+__all__ = sorted(_SUBMODULES | _API_NAMES)
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.{name}")
+    if name in _API_NAMES:
+        return getattr(importlib.import_module("repro.api"), name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

@@ -25,13 +25,13 @@ from repro.alloc.contention import Contention, dilate, dilate_host
 from repro.alloc.machine import Machine, dragonfly, linear, mesh2d
 from repro.alloc.strategies import (
     ALLOC_IDS, ALLOC_NAMES, CONTIGUOUS, SIMPLE, SPREAD, TOPO,
-    alloc_fingerprint, alloc_id, free_count, group_span, largest_free_run,
-    place, placeable_cap,
+    alloc_fingerprint, alloc_id, canonical_id, free_count, group_span,
+    largest_free_run, place, placeable_cap,
 )
 
 __all__ = [
     "ALLOC_IDS", "ALLOC_NAMES", "CONTIGUOUS", "SIMPLE", "SPREAD", "TOPO",
-    "Contention", "Machine", "alloc_fingerprint", "alloc_id", "dilate",
-    "dilate_host", "dragonfly", "free_count", "group_span",
+    "Contention", "Machine", "alloc_fingerprint", "alloc_id", "canonical_id",
+    "dilate", "dilate_host", "dragonfly", "free_count", "group_span",
     "largest_free_run", "linear", "mesh2d", "place", "placeable_cap",
 ]

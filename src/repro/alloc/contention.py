@@ -56,6 +56,21 @@ class Contention:
         return cls(enabled=jnp.int32(1), alpha_num=jnp.int32(alpha_num),
                    alpha_den=jnp.int32(alpha_den))
 
+    @classmethod
+    def canonical(cls, value) -> "Contention":
+        """THE contention canonicalizer: ``None`` -> off, ``(num, den)`` ->
+        :meth:`make`, a ``Contention`` passes through — shared by
+        ``engine.make_alloc_ctx``, the sweep layer, and the refsim driver."""
+        if value is None:
+            return cls.off()
+        if isinstance(value, tuple):
+            return cls.make(*value)
+        if not isinstance(value, cls):
+            raise TypeError(
+                f"contention must be None, (num, den), or Contention; "
+                f"got {type(value).__name__}")
+        return value
+
 
 def dilate(con: Contention, remaining: jax.Array, span: jax.Array) -> jax.Array:
     """Dilated runtime for an allocation spanning ``span`` groups (int32).

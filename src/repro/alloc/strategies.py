@@ -59,6 +59,46 @@ def alloc_id(strategy) -> int:
     return int(strategy)
 
 
+def canonical_id(strategy):
+    """THE strategy canonicalizer (shared by every entry point).
+
+    Accepts a name, a dense id, a numpy/JAX integer scalar, or any sequence
+    mixing those (list, tuple, or numpy array — including object/str
+    arrays), and returns a plain ``int`` for scalars or ``i32`` values for
+    sequences/traced inputs:
+
+    - scalar str/int/np integer -> ``int``
+    - traced JAX value          -> passed through as i32 (sweep axes)
+    - sequence of any of these  -> ``jnp.int32[B]``
+
+    Every id is validated against the known strategy table, so a typo'd
+    name or out-of-range id fails loudly at canonicalization time instead
+    of silently clipping inside ``lax.switch``.
+    """
+    import numpy as np
+
+    if strategy is None:
+        return SIMPLE
+    if isinstance(strategy, jax.core.Tracer):
+        return jnp.asarray(strategy, dtype=jnp.int32)  # sweep-axis data
+    if isinstance(strategy, jax.Array):
+        strategy = np.asarray(strategy)
+    if isinstance(strategy, (list, tuple)):
+        return jnp.asarray([canonical_id(s) for s in strategy],
+                           dtype=jnp.int32)
+    if isinstance(strategy, np.ndarray):
+        if strategy.ndim == 0:
+            return canonical_id(strategy.item())
+        return jnp.asarray([canonical_id(s) for s in strategy.tolist()],
+                           dtype=jnp.int32)
+    sid = alloc_id(strategy)
+    if sid not in ALLOC_NAMES:
+        raise ValueError(
+            f"allocation strategy id {sid} out of range; "
+            f"known: {sorted(ALLOC_NAMES)}")
+    return sid
+
+
 # ---------------------------------------------------------------------------
 # occupancy-map scalars
 # ---------------------------------------------------------------------------

@@ -1,0 +1,36 @@
+"""Unified Scenario API (DESIGN.md §12): declarative experiment specs, one
+``run()`` entry point, and generic multi-axis ``sweep()``.
+
+    from repro import api
+
+    scn = api.Scenario(
+        trace=api.SyntheticTrace(n_jobs=500, seed=0, kind="sdsc_sp2"),
+        total_nodes=128, policy="backfill",
+    )
+    res = api.run(scn)                      # -> api.Result
+    assert res.matches(api.run_ref(scn))    # bit-exact vs reference sim
+
+    grid = api.sweep(scn.with_(topology=api.Topology.dragonfly(16, 8)),
+                     axes={"policy": ("fcfs", "backfill"),
+                           "alloc": ("simple", "topo"),
+                           "contention": (None, (1, 5))})
+    for point, r in grid:
+        print(point, r.summary()["makespan"])
+
+New scenario axes are one-field additions to :class:`Scenario` — not new
+``simulate_*`` entry points.
+"""
+
+from repro.api.result import Result, simresult_to_np
+from repro.api.run import build_jobset, run, run_ref
+from repro.api.scenario import (
+    ArrayTrace, Multicluster, Scenario, SwfTrace, SyntheticTrace, Topology,
+    TRACED_AXES, as_trace_spec,
+)
+from repro.api.sweep import SweepResult, sweep
+
+__all__ = [
+    "ArrayTrace", "Multicluster", "Result", "Scenario", "SweepResult",
+    "SwfTrace", "SyntheticTrace", "Topology", "TRACED_AXES", "as_trace_spec",
+    "build_jobset", "run", "run_ref", "simresult_to_np", "sweep",
+]

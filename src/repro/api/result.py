@@ -1,0 +1,117 @@
+"""Unified result wrapper (DESIGN.md §12.3).
+
+Before this layer the project had three divergent output shapes: the device
+``SimResult`` pytree, ``simulate_np``'s dict-of-numpy, and
+``multicluster_result_np``'s flattened per-cluster dict.  :class:`Result`
+fronts all three: ``raw`` keeps whatever the backend produced, ``to_np()``
+converts (lazily, cached) to the *one* canonical numpy schema —
+``submit/runtime/nodes/start/finish/wait/valid/done/makespan/n_events``
+plus the ``alloc_*``/``ev_*`` allocation fields when a topology was active —
+and ``summary()`` derives the standard scalar metrics
+(wait/makespan/utilization/fragmentation) via ``repro.core.metrics``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core import metrics
+from repro.core.jobs import JobSet, SimResult
+
+from repro.api.scenario import Scenario
+
+
+@dataclasses.dataclass
+class Result:
+    """One simulation outcome, from any backend.
+
+    ``backend`` ∈ {"jax", "ref", "multicluster"}.  ``raw`` is the backend's
+    native object (``SimResult``, the reference simulator's numpy dict, or a
+    ``MulticlusterResult``); ``jobs`` is the device job table for the JAX
+    backends (None for "ref").
+    """
+
+    scenario: Scenario
+    backend: str
+    raw: Any
+    jobs: Optional[JobSet] = None
+    _np: Optional[Dict[str, np.ndarray]] = dataclasses.field(
+        default=None, repr=False)
+
+    # -- canonical numpy view ----------------------------------------------
+
+    def to_np(self) -> Dict[str, np.ndarray]:
+        """Canonical host-side result dict (cached)."""
+        if self._np is None:
+            self._np = self._materialize_np()
+        return self._np
+
+    def _materialize_np(self) -> Dict[str, np.ndarray]:
+        if self.backend == "ref":
+            return dict(self.raw)
+        if self.backend == "multicluster":
+            from repro.core.parallel import multicluster_result_np
+            return multicluster_result_np(self.raw)
+        return simresult_to_np(self.raw, self.jobs,
+                               with_alloc=self.scenario.topology is not None)
+
+    def __getitem__(self, key: str) -> np.ndarray:
+        return self.to_np()[key]
+
+    # -- derived metrics ----------------------------------------------------
+
+    def summary(self) -> Dict[str, float]:
+        """Scalar metrics: n_jobs, wait stats, bounded slowdown, makespan,
+        utilization, throughput — plus job-span/fragmentation scalars when
+        the scenario carried a topology."""
+        out = self.to_np()
+        total = int(np.sum(self.scenario.nodes_per_cluster()))
+        s = metrics.summary(out, total)
+        if "ev_time" in out and "alloc_span" in out:
+            s.update(metrics.alloc_summary(out))
+        return s
+
+    @property
+    def makespan(self) -> int:
+        return int(self.to_np()["makespan"])
+
+    def matches(self, other: "Result", *, node_maps: bool = False) -> bool:
+        """Bit-exact start/finish (and optionally allocation-fingerprint)
+        agreement with another result over the shorter table — the
+        cross-engine validation predicate (DESIGN.md §9)."""
+        a, b = self.to_np(), other.to_np()
+        n = min(int(a["valid"].sum()), int(b["valid"].sum()))
+        keys = ["start", "finish"]
+        if node_maps:
+            keys += ["alloc_first", "alloc_span", "alloc_sum"]
+        return all(bool(np.array_equal(a[k][:n], b[k][:n])) for k in keys)
+
+
+def simresult_to_np(res: SimResult, jobs: JobSet, *,
+                    with_alloc: bool) -> Dict[str, np.ndarray]:
+    """``SimResult`` + ``JobSet`` -> the canonical numpy dict (the schema
+    ``simulate_np`` established; shared by every backend)."""
+    out = {
+        "submit": np.asarray(jobs.submit),
+        "nodes": np.asarray(jobs.nodes),
+        "runtime": np.asarray(jobs.runtime),
+        "start": np.asarray(res.start),
+        "finish": np.asarray(res.finish),
+        "wait": np.asarray(res.wait),
+        "makespan": int(res.makespan),
+        "n_events": int(res.n_events),
+        "done": np.asarray(res.done),
+        "valid": np.asarray(jobs.valid),
+    }
+    if with_alloc:
+        n_ev = out["n_events"]
+        out["alloc_first"] = np.asarray(res.alloc_first)
+        out["alloc_span"] = np.asarray(res.alloc_span)
+        out["alloc_sum"] = np.asarray(res.alloc_sum)
+        out["ev_time"] = np.asarray(res.ev_time)[:n_ev]
+        out["ev_free"] = np.asarray(res.ev_free)[:n_ev]
+        out["ev_lfb"] = np.asarray(res.ev_lfb)[:n_ev]
+    return out

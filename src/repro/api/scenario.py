@@ -1,0 +1,323 @@
+"""Declarative experiment specs (DESIGN.md §12.1).
+
+A :class:`Scenario` is a frozen, host-side description of ONE simulation:
+where the jobs come from (`trace`), what machine runs them (`total_nodes`
+plus an optional :class:`Topology`), how they are scheduled (`policy`,
+`alloc`, `contention`), and whether the run is partitioned into
+conservatively-synchronized clusters (`multicluster`).  Specs carry no
+device arrays — they are cheap to construct, compare, copy and sweep, and
+the same spec drives both the JAX engine (``repro.api.run``) and the
+host reference simulator (``repro.api.run_ref``) for bit-exact validation.
+
+Sweepable fields split into two classes (DESIGN.md §12.2):
+
+- *traced* — ``policy``, ``alloc``, ``contention``, ``total_nodes`` (when no
+  topology pins the machine size) and ``trace.seed``: batched with ``vmap``,
+  one executable serves every value;
+- *static* — the topology, trace shape (``n_jobs``/source), ``capacity``,
+  ``max_events`` and every multicluster setting: each distinct combination
+  compiles its own executable.
+
+``Scenario.with_(...)`` applies dotted-path overrides (``"trace.seed"``),
+which is how ``repro.api.sweep`` expands an axis grid into scenario points.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro import alloc as _alloc
+from repro.traces import das2_like, load_swf, sdsc_sp2_like, synthetic_trace
+
+# ---------------------------------------------------------------------------
+# trace sources
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTrace:
+    """Deterministic synthetic workload (``repro.traces.synthetic``).
+
+    ``kind`` selects the generator: ``"generic"`` (``synthetic_trace``),
+    ``"das2"`` or ``"sdsc_sp2"``.  ``params`` are extra keyword arguments
+    for the generator as a tuple of (name, value) pairs — a tuple so the
+    spec stays hashable (specs key compile-bucket caches).  ``congest``
+    divides submit times by an integer factor to densify arrivals (the
+    benchmarks' standard trick to make policies diverge).
+    """
+
+    n_jobs: int = 1000
+    seed: int = 0
+    kind: str = "generic"
+    params: Tuple[Tuple[str, Any], ...] = ()
+    congest: int = 1
+
+    _GENERATORS = {"generic": synthetic_trace, "das2": das2_like,
+                   "sdsc_sp2": sdsc_sp2_like}
+
+    def materialize(self) -> Dict[str, np.ndarray]:
+        try:
+            gen = self._GENERATORS[self.kind]
+        except KeyError:
+            raise ValueError(
+                f"unknown synthetic trace kind {self.kind!r}; "
+                f"known: {sorted(self._GENERATORS)}") from None
+        trace = gen(self.n_jobs, seed=self.seed, **dict(self.params))
+        if self.congest != 1:
+            trace["submit"] = trace["submit"] // int(self.congest)
+        return trace
+
+    def static_key(self):
+        """Everything except ``seed`` — seed is trace *data*, not shape."""
+        return ("synthetic", self.n_jobs, self.kind, self.params, self.congest)
+
+    @property
+    def n_rows(self) -> int:
+        return self.n_jobs
+
+
+@dataclasses.dataclass(frozen=True)
+class SwfTrace:
+    """A Standard Workload Format log on disk (optionally gzipped)."""
+
+    path: str
+    max_jobs: Optional[int] = None
+
+    def materialize(self) -> Dict[str, np.ndarray]:
+        return load_swf(self.path, max_jobs=self.max_jobs)
+
+    def static_key(self):
+        return ("swf", self.path, self.max_jobs)
+
+    @property
+    def n_rows(self) -> Optional[int]:
+        return None  # unknown until loaded
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ArrayTrace:
+    """Explicit host arrays — the escape hatch for custom workloads.
+
+    ``eq=False`` keeps the dataclass hashable by identity: two ArrayTraces
+    are the "same trace" for compile-bucketing iff they are the same object.
+    """
+
+    submit: Any
+    runtime: Any
+    nodes: Any
+    estimate: Any = None
+    priority: Any = None
+
+    @classmethod
+    def from_dict(cls, trace: Dict[str, Any]) -> "ArrayTrace":
+        return cls(submit=trace["submit"], runtime=trace["runtime"],
+                   nodes=trace["nodes"], estimate=trace.get("estimate"),
+                   priority=trace.get("priority"))
+
+    def materialize(self) -> Dict[str, np.ndarray]:
+        out = {"submit": np.asarray(self.submit),
+               "runtime": np.asarray(self.runtime),
+               "nodes": np.asarray(self.nodes)}
+        if self.estimate is not None:
+            out["estimate"] = np.asarray(self.estimate)
+        if self.priority is not None:
+            out["priority"] = np.asarray(self.priority)
+        return out
+
+    def static_key(self):
+        return ("arrays", id(self))
+
+    @property
+    def n_rows(self) -> int:
+        return len(np.asarray(self.submit))
+
+
+TraceSpec = Union[SyntheticTrace, SwfTrace, ArrayTrace]
+
+
+def as_trace_spec(trace) -> TraceSpec:
+    """Accept a spec, a plain dict-of-arrays, or an .swf path string."""
+    if isinstance(trace, (SyntheticTrace, SwfTrace, ArrayTrace)):
+        return trace
+    if isinstance(trace, dict):
+        return ArrayTrace.from_dict(trace)
+    if isinstance(trace, str):
+        return SwfTrace(trace)
+    raise TypeError(
+        f"trace must be a trace spec, dict of arrays, or .swf path; "
+        f"got {type(trace).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# machine topology
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Declarative machine shape; builds a ``repro.alloc.Machine`` on demand.
+
+    ``kind`` ∈ {"linear", "mesh2d", "dragonfly"}; ``shape`` is the builder's
+    positional arguments: (n_nodes, group_size), (rows, cols), or
+    (n_groups, nodes_per_group) respectively.
+    """
+
+    kind: str
+    shape: Tuple[int, int]
+
+    @classmethod
+    def linear(cls, n_nodes: int, *, group_size: int = 8) -> "Topology":
+        return cls("linear", (int(n_nodes), int(group_size)))
+
+    @classmethod
+    def mesh2d(cls, rows: int, cols: int) -> "Topology":
+        return cls("mesh2d", (int(rows), int(cols)))
+
+    @classmethod
+    def dragonfly(cls, n_groups: int, nodes_per_group: int) -> "Topology":
+        return cls("dragonfly", (int(n_groups), int(nodes_per_group)))
+
+    @property
+    def n_nodes(self) -> int:
+        if self.kind == "linear":
+            return self.shape[0]
+        return self.shape[0] * self.shape[1]
+
+    def build(self) -> _alloc.Machine:
+        a, b = self.shape
+        if self.kind == "linear":
+            return _alloc.linear(a, group_size=b)
+        if self.kind == "mesh2d":
+            return _alloc.mesh2d(a, b)
+        if self.kind == "dragonfly":
+            return _alloc.dragonfly(a, b)
+        raise ValueError(
+            f"unknown topology kind {self.kind!r}; "
+            "known: linear, mesh2d, dragonfly")
+
+
+# ---------------------------------------------------------------------------
+# multicluster settings
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Multicluster:
+    """Conservative-window multi-cluster settings (DESIGN.md §2).
+
+    When set on a :class:`Scenario`, ``trace`` must be a tuple of trace
+    specs (one per cluster) and ``total_nodes`` is per-cluster (one int
+    broadcast to all clusters, or a tuple).
+    """
+
+    window: int
+    horizon: Optional[int] = None   # None: derived from max submit time
+    migrate: bool = True
+    max_export: int = 8
+    latency: Optional[int] = None   # None: == window (minimum conservative)
+    load_imbalance_threshold: float = 1.5
+
+
+# ---------------------------------------------------------------------------
+# the scenario itself
+# ---------------------------------------------------------------------------
+
+# dotted axis paths vmap-batched by repro.api.sweep; everything else forces
+# a recompile bucket ("total_nodes" moves to static when a topology pins the
+# machine size — see sweep._static_key)
+TRACED_AXES = ("policy", "alloc", "contention", "total_nodes", "trace.seed")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One fully-specified experiment (see module docstring).
+
+    ``total_nodes=None`` with a ``topology`` defaults to the topology's node
+    count.  ``alloc``/``contention`` require a ``topology`` (without one the
+    engine runs in scalar-counter mode and would silently ignore them —
+    ``run`` rejects the combination, mirroring the engine's own check).
+    """
+
+    trace: Union[TraceSpec, Dict[str, Any], str, Tuple[TraceSpec, ...]]
+    total_nodes: Optional[Union[int, Tuple[int, ...]]] = None
+    policy: Union[str, int] = "fcfs"
+    topology: Optional[Topology] = None
+    alloc: Optional[Union[str, int]] = None
+    contention: Optional[Any] = None    # Contention | (num, den) | None
+    multicluster: Optional[Multicluster] = None
+    capacity: Optional[int] = None
+    max_events: Optional[int] = None
+
+    def __post_init__(self):
+        if self.multicluster is None:
+            object.__setattr__(self, "trace", as_trace_spec(self.trace))
+        else:
+            traces = self.trace
+            if not isinstance(traces, (tuple, list)):
+                raise ValueError(
+                    "multicluster scenarios take one trace spec per cluster "
+                    "(a tuple); got a single trace")
+            object.__setattr__(
+                self, "trace", tuple(as_trace_spec(t) for t in traces))
+        if self.topology is None and (self.alloc is not None
+                                      or self.contention is not None):
+            raise ValueError(
+                "alloc/contention require topology=; without a Topology the "
+                "simulation runs in scalar-counter mode and would silently "
+                "ignore them")
+        if self.total_nodes is None:
+            if self.topology is None:
+                raise ValueError(
+                    "total_nodes is required when no topology is given")
+            object.__setattr__(self, "total_nodes", self.topology.n_nodes)
+        if self.topology is not None and self.multicluster is None \
+                and int(self.total_nodes) != self.topology.n_nodes:
+            raise ValueError(
+                f"topology has {self.topology.n_nodes} nodes but "
+                f"total_nodes={self.total_nodes}")
+
+    # -- sweep support ------------------------------------------------------
+
+    def with_(self, **overrides) -> "Scenario":
+        """Functional update; keys may be dotted paths into sub-specs,
+        e.g. ``with_(policy="sjf", **{"trace.seed": 3})``."""
+        flat: Dict[str, Any] = {}
+        nested: Dict[str, Dict[str, Any]] = {}
+        for key, value in overrides.items():
+            if "." in key:
+                head, rest = key.split(".", 1)
+                nested.setdefault(head, {})[rest] = value
+            else:
+                flat[key] = value
+        for head, sub in nested.items():
+            target = flat.get(head, getattr(self, head))
+            if target is None:
+                raise ValueError(f"cannot set {head}.{next(iter(sub))}: "
+                                 f"scenario has no {head}")
+            if isinstance(target, tuple):  # per-cluster trace specs
+                target = tuple(dataclasses.replace(t, **sub) for t in target)
+            else:
+                target = dataclasses.replace(target, **sub)
+            flat[head] = target
+        return dataclasses.replace(self, **flat)
+
+    def trace_specs(self) -> Tuple[TraceSpec, ...]:
+        """Per-cluster tuple view of ``trace`` (length 1 without
+        multicluster)."""
+        return self.trace if isinstance(self.trace, tuple) else (self.trace,)
+
+    def nodes_per_cluster(self) -> Tuple[int, ...]:
+        """Per-cluster ``total_nodes`` tuple (length 1 without
+        multicluster)."""
+        n_clusters = len(self.trace_specs())
+        tn = self.total_nodes
+        if isinstance(tn, tuple):
+            if len(tn) != n_clusters:
+                raise ValueError(
+                    f"total_nodes tuple has {len(tn)} entries for "
+                    f"{n_clusters} clusters")
+            return tuple(int(x) for x in tn)
+        return (int(tn),) * n_clusters

@@ -1,0 +1,231 @@
+"""Generic multi-axis scenario sweeps (DESIGN.md §12.2).
+
+``sweep(scenario, axes={...})`` expands a cartesian grid of dotted-path
+axes over a base :class:`Scenario` and runs every point with as few
+compiled executables as possible:
+
+1. every grid point becomes a scenario via ``Scenario.with_``;
+2. points are partitioned into *static buckets* — everything that changes
+   compiled shapes (topology, trace shape, capacity, ``max_events``,
+   multicluster settings, and ``total_nodes`` when a topology pins the
+   machine) keys the bucket;
+3. within a bucket the remaining axes (``policy``, ``alloc``,
+   ``contention``, ``total_nodes``, ``trace.seed``) are *data*: job tables
+   are stacked, scalar knobs become i32[B] arrays, contention pytrees are
+   leaf-stacked, and ONE ``vmap``-ped executable runs the whole bucket —
+   optionally sharded over a 1-D device mesh;
+4. the batched outputs are re-sliced into per-point :class:`Result`\\ s in
+   grid order.
+
+This replaces ``simulate_alloc_sweep`` (an alloc-only special case,
+regression-tested bit-exact in ``tests/test_api.py``) and every
+hand-rolled benchmark loop, and it expresses grids no legacy entry point
+could — e.g. policy × alloc × contention in one call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import alloc as _alloc
+from repro.core import engine
+from repro.core.jobs import JobSet
+from repro.core.parallel import stack_jobsets
+
+from repro.api.result import Result
+from repro.api.run import build_jobset, run
+from repro.api.scenario import Scenario
+
+
+def _static_key(scenario: Scenario) -> tuple:
+    """Hashable compile-bucket key: everything that forces a recompile."""
+    tn: Any = None
+    if scenario.topology is not None or scenario.multicluster is not None:
+        tn = scenario.total_nodes  # pins machine / cluster shapes
+    return (
+        tuple(t.static_key() for t in scenario.trace_specs()),
+        scenario.topology,
+        tn,
+        scenario.multicluster,
+        scenario.capacity,
+        scenario.max_events,
+    )
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Grid-ordered sweep outcome.
+
+    ``points[i]`` is the axis-value dict of grid point *i* and
+    ``results[i]`` its :class:`Result`; iteration yields ``(point,
+    result)`` pairs.  ``summaries()`` flattens to a list of plain dicts
+    (axis values + scalar metrics) ready for CSV emission, and
+    ``stack(field)`` restacks one per-job array across the whole grid.
+    ``n_compiles`` reports how many static buckets (≈ executables) the
+    sweep needed.
+    """
+
+    axes: Dict[str, List[Any]]
+    points: List[Dict[str, Any]]
+    results: List[Result]
+    n_compiles: int
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def __iter__(self) -> Iterator[Tuple[Dict[str, Any], Result]]:
+        return iter(zip(self.points, self.results))
+
+    def __getitem__(self, i: int) -> Result:
+        return self.results[i]
+
+    def get(self, **coords) -> Result:
+        """The unique result whose point matches every given axis value."""
+        hits = [r for p, r in self if all(p[k] == v for k, v in coords.items())]
+        if len(hits) != 1:
+            raise KeyError(f"{coords} matches {len(hits)} grid points")
+        return hits[0]
+
+    def summaries(self) -> List[Dict[str, Any]]:
+        return [{**p, **r.summary()} for p, r in self]
+
+    def stack(self, field: str) -> np.ndarray:
+        return np.stack([r.to_np()[field] for r in self.results])
+
+
+def sweep(scenario: Scenario, axes: Dict[str, Sequence[Any]], *,
+          mesh: Optional[Mesh] = None) -> SweepResult:
+    """Run the cartesian grid of ``axes`` over ``scenario`` (module doc).
+
+    ``axes`` maps dotted scenario paths to value sequences, e.g.::
+
+        sweep(s, axes={"policy": ("fcfs", "backfill"),
+                       "alloc": ("simple", "topo"),
+                       "contention": (None, (1, 5))})
+
+    With ``mesh`` (1-D device mesh) each batched bucket is padded to the
+    device count and sharded, devices advancing their grid shards fully
+    independently.
+    """
+    axes = {k: list(v) for k, v in axes.items()}
+    if not axes:
+        return SweepResult(axes={}, points=[{}], results=[run(scenario)],
+                           n_compiles=1)
+    names = list(axes)
+    points = [dict(zip(names, combo))
+              for combo in itertools.product(*axes.values())]
+
+    buckets: Dict[tuple, List[int]] = {}
+    scenarios: List[Scenario] = []
+    for i, point in enumerate(points):
+        scn = scenario.with_(**point)
+        scenarios.append(scn)
+        buckets.setdefault(_static_key(scn), []).append(i)
+
+    results: List[Optional[Result]] = [None] * len(points)
+    for indices in buckets.values():
+        bucket = [scenarios[i] for i in indices]
+        if bucket[0].multicluster is not None:
+            # every multicluster knob is static: one executable per point
+            for i, scn in zip(indices, bucket):
+                results[i] = run(scn)
+        else:
+            for i, res in zip(indices, _run_bucket(bucket, mesh)):
+                results[i] = res
+    return SweepResult(axes=axes, points=points, results=results,
+                       n_compiles=len(buckets))
+
+
+# ---------------------------------------------------------------------------
+# one compiled executable per static bucket
+# ---------------------------------------------------------------------------
+
+# The batched runners are cached at module level so jit's executable cache
+# (keyed on function identity + argument shapes) survives across sweep()
+# calls: re-running the same grid costs milliseconds, not a recompile.  The
+# machine is a runtime pytree argument, so one cached function serves every
+# topology of a given shape; distinct shapes retrace automatically.
+
+
+@functools.lru_cache(maxsize=None)
+def _bucket_fn(with_alloc: bool, max_events: Optional[int],
+               mesh: Optional[Mesh], axis: Optional[str]):
+    if with_alloc:
+        fn = lambda jobs_b, pol_b, tn_b, alloc_b, con_b, machine: jax.vmap(
+            lambda j, p, t, a, c: engine.simulate(
+                j, p, t, machine=machine, alloc=a, contention=c,
+                max_events=max_events)
+        )(jobs_b, pol_b, tn_b, alloc_b, con_b)
+    else:
+        fn = lambda jobs_b, pol_b, tn_b: jax.vmap(
+            lambda j, p, t: engine.simulate(j, p, t, max_events=max_events)
+        )(jobs_b, pol_b, tn_b)
+    if mesh is None:
+        return jax.jit(fn)
+    # a single prefix sharding applies the batch-axis partition to every
+    # output leaf (all leaves carry the leading B dim after vmap)
+    return jax.jit(fn, out_shardings=NamedSharding(mesh, P(axis)))
+
+
+def _run_bucket(bucket: List[Scenario], mesh: Optional[Mesh]) -> List[Result]:
+    """vmap-batch all scenarios of one static bucket (single-cluster only)."""
+    base = bucket[0]
+    machine = base.topology.build() if base.topology is not None else None
+    max_events = base.max_events
+
+    jobs_cache: Dict[tuple, JobSet] = {}
+    jobsets = []
+    for scn in bucket:
+        spec = scn.trace_specs()[0]
+        key = (spec.static_key(), getattr(spec, "seed", None),
+               int(scn.total_nodes))
+        if key not in jobs_cache:
+            jobs_cache[key] = build_jobset(scn)
+        jobsets.append(jobs_cache[key])
+
+    B = len(bucket)
+    pol_b = jnp.asarray([engine.policies_id(s.policy) for s in bucket],
+                        dtype=jnp.int32)
+    tn_b = jnp.asarray([int(s.total_nodes) for s in bucket], dtype=jnp.int32)
+
+    pad = 0
+    if mesh is not None:
+        D = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        pad = (-B) % D
+        jobsets += [jobsets[-1]] * pad
+        pol_b = jnp.concatenate([pol_b, jnp.repeat(pol_b[-1:], pad)])
+        tn_b = jnp.concatenate([tn_b, jnp.repeat(tn_b[-1:], pad)])
+    jobs_b = stack_jobsets(jobsets)
+
+    if machine is None:
+        args = (jobs_b, pol_b, tn_b)
+    else:
+        alloc_b = jnp.asarray(
+            [_alloc.canonical_id(s.alloc if s.alloc is not None else "simple")
+             for s in bucket] + [0] * pad, dtype=jnp.int32)
+        con_b = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *([_alloc.Contention.canonical(s.contention) for s in bucket]
+              + [_alloc.Contention.off()] * pad))
+        args = (jobs_b, pol_b, tn_b, alloc_b, con_b)
+
+    axis = mesh.axis_names[0] if mesh is not None else None
+    fn = _bucket_fn(machine is not None, max_events, mesh, axis)
+    if mesh is not None:
+        shard = NamedSharding(mesh, P(axis))
+        args = tuple(jax.device_put(a, shard) for a in args)
+    batched = fn(*args) if machine is None else fn(*args, machine)
+
+    return [
+        Result(scenario=scn, backend="jax",
+               raw=jax.tree.map(lambda a, i=i: a[i], batched), jobs=jobsets[i])
+        for i, scn in enumerate(bucket)
+    ]

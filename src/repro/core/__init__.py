@@ -1,3 +1,30 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The discrete-event scheduler core: job tables, policies, the jit-able
+engine, offline metrics, and the parallel (ensemble / multicluster) modes.
+
+The declarative front door is ``repro.api``; these are the underlying
+building blocks, re-exported here as the stable low-level surface.
+"""
+
+from repro.core import metrics
+from repro.core.engine import (
+    make_alloc_ctx, policies_id, simulate, simulate_np, simulate_window,
+)
+from repro.core.jobs import (
+    BACKFILL, BESTFIT, DONE, FCFS, INF_TIME, LJF, PENDING, POLICY_IDS,
+    POLICY_NAMES, PREEMPT, RUNNING, SJF, WAITING, JobSet, SimResult,
+    SimState, make_jobset, result_from_state,
+)
+from repro.core.parallel import (
+    MulticlusterResult, multicluster_result_np, simulate_alloc_sweep,
+    simulate_ensemble, simulate_multicluster, stack_jobsets,
+)
+
+__all__ = [
+    "BACKFILL", "BESTFIT", "DONE", "FCFS", "INF_TIME", "LJF", "PENDING",
+    "POLICY_IDS", "POLICY_NAMES", "PREEMPT", "RUNNING", "SJF", "WAITING",
+    "JobSet", "MulticlusterResult", "SimResult", "SimState",
+    "make_alloc_ctx", "make_jobset", "metrics", "multicluster_result_np",
+    "policies_id", "result_from_state", "simulate", "simulate_alloc_sweep",
+    "simulate_ensemble", "simulate_multicluster", "simulate_np",
+    "simulate_window", "stack_jobsets",
+]

@@ -233,17 +233,8 @@ def make_alloc_ctx(machine, strategy, contention,
             raise ValueError(
                 f"machine has {machine.n_nodes} nodes but "
                 f"total_nodes={concrete}")
-    strategy = _alloc.SIMPLE if strategy is None else strategy
-    strategy = jnp.asarray(_alloc.alloc_id(strategy)
-                           if isinstance(strategy, (str, int)) else strategy,
-                           dtype=jnp.int32)
-    if contention is None:
-        con = _alloc.Contention.off()
-    elif isinstance(contention, tuple):  # (num, den), as refsim accepts
-        con = _alloc.Contention.make(*contention)
-    else:
-        con = contention
-    return (machine, strategy, con)
+    strategy = jnp.asarray(_alloc.canonical_id(strategy), dtype=jnp.int32)
+    return (machine, strategy, _alloc.Contention.canonical(contention))
 
 
 def simulate(
@@ -257,6 +248,12 @@ def simulate(
     max_events: Optional[int] = None,
 ) -> SimResult:
     """Run the full job-scheduling simulation for one cluster.
+
+    This is the low-level engine call; the declarative front door is
+    ``repro.api.run(Scenario(...))``, which builds the job table, machine
+    and contention from one spec and returns a unified ``Result``
+    (DESIGN.md §12).  Kept stable for callers that already hold a
+    ``JobSet``.
 
     Pure function of its inputs (``policy``, ``total_nodes``, the allocation
     ``alloc`` strategy id and ``contention`` parameters are traced, so the
@@ -334,7 +331,12 @@ def simulate_window(
 
 def simulate_np(trace, policy, *, total_nodes: int, capacity: int | None = None,
                 machine=None, alloc: int | str | None = None, contention=None):
-    """Host convenience wrapper: dict-of-numpy trace -> numpy result dict."""
+    """Host convenience shim: dict-of-numpy trace -> numpy result dict.
+
+    Equivalent to ``repro.api.run(Scenario(trace=trace, ...)).to_np()``;
+    kept as the minimal-dependency one-call path (and as the schema
+    reference for ``repro.api.Result.to_np``).
+    """
     import numpy as np
     from repro.core.jobs import make_jobset
 

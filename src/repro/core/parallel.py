@@ -83,9 +83,10 @@ def simulate_ensemble(
                 f"contains {sorted(set(np.asarray(total_nodes_b)[bad].tolist()))}")
         if alloc_b is None:
             alloc_b = jnp.zeros_like(policies_b)
-        alloc_b = jnp.asarray(
-            [_alloc.alloc_id(a) for a in alloc_b] if isinstance(alloc_b, (list, tuple))
-            else alloc_b, dtype=jnp.int32)
+        # one shared canonicalizer (repro.alloc.canonical_id) handles str/int
+        # ids, numpy arrays, and mixed str/int sequences identically here, in
+        # make_alloc_ctx, and in the Scenario sweep layer
+        alloc_b = jnp.asarray(_alloc.canonical_id(alloc_b), dtype=jnp.int32)
         fn = jax.vmap(
             lambda j, p, t, a: simulate(
                 j, p, t, machine=machine, alloc=a, contention=contention,
@@ -115,6 +116,12 @@ def simulate_alloc_sweep(
 ) -> SimResult:
     """Run ONE trace under every allocation strategy as a batched ensemble.
 
+    Legacy shim: ``repro.api.sweep(scenario, axes={"alloc": strategies})``
+    is the general form (any axis grid, static-bucket compilation, unified
+    results) and reproduces this function bit-for-bit (regression-tested in
+    ``tests/test_api.py``).  Kept for callers that already hold a
+    ``JobSet``.
+
     Returns a ``SimResult`` whose leaves have leading dim ``len(strategies)``
     in the order given — the "same trace, different allocators, different
     makespans" scenario family from DESIGN.md §11.
@@ -123,7 +130,7 @@ def simulate_alloc_sweep(
     jobs_b = stack_jobsets([jobs] * B)
     policies_b = jnp.full((B,), int(policy), dtype=jnp.int32)
     total_nodes_b = jnp.full((B,), int(total_nodes), dtype=jnp.int32)
-    alloc_b = jnp.asarray([_alloc.alloc_id(s) for s in strategies],
+    alloc_b = jnp.asarray(_alloc.canonical_id(list(strategies)),
                           dtype=jnp.int32)
     return simulate_ensemble(
         jobs_b, policies_b, total_nodes_b, machine=machine, alloc_b=alloc_b,

@@ -1,0 +1,281 @@
+"""Unified Scenario API acceptance tests (ISSUE 2 / DESIGN.md §12).
+
+- ``run``/``run_ref`` bit-identical start/finish tables for a fixed
+  synthetic scenario across all 5 policies × {no machine, mesh2d +
+  contiguous};
+- one ``sweep()`` call reproduces ``simulate_alloc_sweep`` exactly;
+- a mixed policy × alloc × contention grid (inexpressible by any legacy
+  entry point) runs in ONE compile bucket and each point matches its
+  individual ``run``;
+- static-vs-traced axis partitioning, mesh sharding, multicluster specs,
+  the shared strategy canonicalizer, and the public package exports.
+"""
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import (
+    ArrayTrace, Multicluster, Scenario, SwfTrace, SyntheticTrace, Topology,
+    run, run_ref, sweep,
+)
+
+POLICIES = ("fcfs", "sjf", "ljf", "bestfit", "backfill")
+
+BASE = Scenario(trace=SyntheticTrace(n_jobs=150, seed=7, kind="sdsc_sp2"),
+                total_nodes=128, policy="fcfs")
+MESH_BASE = Scenario(trace=SyntheticTrace(n_jobs=150, seed=7, kind="sdsc_sp2"),
+                     topology=Topology.mesh2d(16, 8), policy="fcfs",
+                     alloc="contiguous")
+
+
+# ---------------------------------------------------------------------------
+# run() vs run_ref(): the acceptance matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_run_matches_ref_scalar_counter(policy):
+    scn = BASE.with_(policy=policy)
+    ours, ref = run(scn), run_ref(scn)
+    n = int(ref.to_np()["valid"].sum())
+    np.testing.assert_array_equal(ours["start"][:n], ref["start"])
+    np.testing.assert_array_equal(ours["finish"][:n], ref["finish"])
+    assert ours.to_np()["makespan"] == ref.to_np()["makespan"]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_run_matches_ref_mesh2d_contiguous(policy):
+    scn = MESH_BASE.with_(policy=policy)
+    ours, ref = run(scn), run_ref(scn)
+    assert ours.matches(ref, node_maps=True)
+
+
+# ---------------------------------------------------------------------------
+# sweep(): legacy regression + beyond-legacy grids
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_reproduces_simulate_alloc_sweep():
+    from repro import alloc
+    from repro.api.run import build_jobset
+    from repro.core.jobs import POLICY_IDS
+    from repro.core.parallel import simulate_alloc_sweep
+
+    strategies = ("simple", "contiguous", "spread", "topo")
+    scn = Scenario(trace=SyntheticTrace(n_jobs=120, seed=3, kind="sdsc_sp2"),
+                   topology=Topology.dragonfly(8, 8), policy="backfill",
+                   contention=(1, 5))
+    grid = sweep(scn, axes={"alloc": strategies})
+    assert grid.n_compiles == 1
+
+    legacy = simulate_alloc_sweep(
+        build_jobset(scn), POLICY_IDS["backfill"], 64,
+        Topology.dragonfly(8, 8).build(), strategies,
+        contention=alloc.Contention.make(1, 5))
+    for i, strat in enumerate(strategies):
+        out = grid.get(alloc=strat).to_np()
+        for field in ("start", "finish", "wait", "alloc_first", "alloc_span",
+                      "alloc_sum"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(legacy, field)[i]), out[field],
+                err_msg=f"{strat}.{field}")
+        assert int(legacy.makespan[i]) == out["makespan"]
+
+
+def test_sweep_mixed_grid_beyond_legacy_entry_points():
+    """policy × alloc × contention in one call — and every batched point is
+    bit-identical to its own standalone run()."""
+    scn = Scenario(trace=SyntheticTrace(n_jobs=100, seed=5, kind="sdsc_sp2"),
+                   topology=Topology.mesh2d(8, 8), policy="fcfs")
+    axes = {"policy": ("fcfs", "backfill"),
+            "alloc": ("simple", "topo"),
+            "contention": (None, (1, 5))}
+    grid = sweep(scn, axes=axes)
+    assert len(grid) == 8
+    assert grid.n_compiles == 1  # all three axes are traced vmap data
+    for point, batched in grid:
+        single = run(scn.with_(**point))
+        np.testing.assert_array_equal(
+            batched.to_np()["start"], single.to_np()["start"], err_msg=str(point))
+        np.testing.assert_array_equal(
+            batched.to_np()["alloc_sum"], single.to_np()["alloc_sum"],
+            err_msg=str(point))
+    # contention must actually bite: spanning allocs get dilated makespans
+    con = grid.get(policy="backfill", alloc="topo", contention=(1, 5))
+    off = grid.get(policy="backfill", alloc="topo", contention=None)
+    assert con.to_np()["makespan"] >= off.to_np()["makespan"]
+
+
+def test_sweep_partitions_traced_vs_static_axes():
+    """topology is a recompile axis, trace.seed/policy are vmap axes: a
+    2-topology × 2-seed × 2-policy grid compiles exactly twice."""
+    scn = Scenario(trace=SyntheticTrace(n_jobs=60, seed=0, kind="das2"),
+                   total_nodes=64, policy="fcfs")
+    grid = sweep(scn, axes={
+        "topology": (None, Topology.linear(64, group_size=8)),
+        "trace.seed": (0, 1),
+        "policy": ("fcfs", "sjf"),
+    })
+    assert len(grid) == 8
+    assert grid.n_compiles == 2
+    # seeds really differ, and each point matches its standalone run
+    a = grid.get(topology=None, **{"trace.seed": 0}, policy="fcfs")
+    b = grid.get(topology=None, **{"trace.seed": 1}, policy="fcfs")
+    assert not np.array_equal(a.to_np()["submit"], b.to_np()["submit"])
+    for point, batched in grid:
+        single = run(scn.with_(**point))
+        np.testing.assert_array_equal(
+            batched.to_np()["start"], single.to_np()["start"], err_msg=str(point))
+
+
+def test_sweep_total_nodes_traced_without_topology():
+    scn = Scenario(trace=SyntheticTrace(n_jobs=80, seed=2, kind="das2"),
+                   total_nodes=64, policy="backfill")
+    grid = sweep(scn, axes={"total_nodes": (32, 64, 128)})
+    assert grid.n_compiles == 1  # machine size is ensemble data w/o topology
+    makespans = [r.to_np()["makespan"] for _, r in grid]
+    assert makespans[0] >= makespans[1] >= makespans[2]
+    for point, batched in grid:
+        single = run(scn.with_(**point))
+        np.testing.assert_array_equal(
+            batched.to_np()["start"], single.to_np()["start"], err_msg=str(point))
+
+
+def test_sweep_multicluster_static_axis():
+    scn = Scenario(
+        trace=tuple(SyntheticTrace(n_jobs=40, seed=s, kind="das2")
+                    for s in range(2)),
+        total_nodes=64, policy="backfill",
+        multicluster=Multicluster(window=4000, migrate=False))
+    grid = sweep(scn, axes={"multicluster.window": (2000, 8000)})
+    assert grid.n_compiles == 2
+    a, b = (r.to_np() for _, r in grid)
+    # without migration the conservative window cannot change outcomes
+    np.testing.assert_array_equal(a["start"], b["start"])
+    assert a["valid"].sum() == 80
+
+
+def test_sweep_empty_axes_degenerates_to_run():
+    grid = sweep(BASE, axes={})
+    assert len(grid) == 1
+    np.testing.assert_array_equal(
+        grid[0].to_np()["start"], run(BASE).to_np()["start"])
+
+
+# ---------------------------------------------------------------------------
+# Result: one wrapper over all three legacy output shapes
+# ---------------------------------------------------------------------------
+
+
+CANONICAL_KEYS = {"submit", "runtime", "nodes", "start", "finish", "wait",
+                  "valid", "done", "makespan"}
+
+
+def test_result_schema_unifies_all_backends():
+    single = run(BASE).to_np()
+    ref = run_ref(BASE).to_np()
+    mc = run(Scenario(
+        trace=(SyntheticTrace(n_jobs=30, seed=0), SyntheticTrace(n_jobs=30, seed=1)),
+        total_nodes=128, policy="fcfs",
+        multicluster=Multicluster(window=5000))).to_np()
+    for out in (single, ref, mc):
+        assert CANONICAL_KEYS <= set(out)
+    alloc_out = run(MESH_BASE).to_np()
+    assert {"alloc_first", "alloc_span", "alloc_sum", "ev_time", "ev_free",
+            "ev_lfb"} <= set(alloc_out)
+
+
+def test_result_summary_metrics():
+    s = run(MESH_BASE).summary()
+    for key in ("avg_wait", "p95_wait", "makespan", "utilization",
+                "mean_frag", "mean_job_span"):
+        assert key in s, key
+    s2 = run(BASE).summary()
+    assert "mean_frag" not in s2  # no topology -> no fragmentation series
+
+
+def test_array_trace_and_dict_coercion():
+    rng = np.random.default_rng(0)
+    trace = {"submit": rng.integers(0, 50, 40), "runtime": rng.integers(1, 30, 40),
+             "nodes": rng.integers(1, 9, 40)}
+    scn = Scenario(trace=trace, total_nodes=8, policy="sjf")
+    assert isinstance(scn.trace, ArrayTrace)
+    assert run(scn).matches(run_ref(scn))
+
+
+# ---------------------------------------------------------------------------
+# shared strategy canonicalizer (repro.alloc.canonical_id)
+# ---------------------------------------------------------------------------
+
+
+def test_canonical_id_scalars_and_sequences():
+    from repro import alloc
+
+    assert alloc.canonical_id("topo") == alloc.TOPO
+    assert alloc.canonical_id(2) == alloc.SPREAD
+    assert alloc.canonical_id(np.int64(1)) == alloc.CONTIGUOUS
+    assert alloc.canonical_id(None) == alloc.SIMPLE
+    mixed = alloc.canonical_id(["simple", 1, np.int32(2), "TOPO"])
+    np.testing.assert_array_equal(np.asarray(mixed), [0, 1, 2, 3])
+    arr = alloc.canonical_id(np.array([3, 0], dtype=np.int64))
+    np.testing.assert_array_equal(np.asarray(arr), [3, 0])
+    with pytest.raises(ValueError, match="unknown allocation strategy"):
+        alloc.canonical_id("best_fit")
+    with pytest.raises(ValueError, match="out of range"):
+        alloc.canonical_id(7)
+
+
+def test_simulate_ensemble_accepts_numpy_and_mixed_alloc_b():
+    """The alloc_b branch used to only canonicalize list/tuple of str."""
+    from repro.api.run import build_jobset
+    from repro.core.jobs import POLICY_IDS
+    from repro.core.parallel import simulate_ensemble, stack_jobsets
+
+    scn = Scenario(trace=SyntheticTrace(n_jobs=60, seed=9, kind="sdsc_sp2"),
+                   topology=Topology.dragonfly(4, 4), policy="fcfs")
+    jobs = build_jobset(scn)
+    machine = scn.topology.build()
+    jb = stack_jobsets([jobs] * 3)
+    pols = np.full((3,), POLICY_IDS["fcfs"], np.int32)
+    nodes = np.full((3,), 16, np.int32)
+    mixed = simulate_ensemble(jb, pols, nodes, machine=machine,
+                              alloc_b=["simple", 1, np.int64(3)])
+    as_np = simulate_ensemble(jb, pols, nodes, machine=machine,
+                              alloc_b=np.array([0, 1, 3]))
+    np.testing.assert_array_equal(np.asarray(mixed.start), np.asarray(as_np.start))
+    np.testing.assert_array_equal(np.asarray(mixed.alloc_sum),
+                                  np.asarray(as_np.alloc_sum))
+
+
+# ---------------------------------------------------------------------------
+# spec hygiene + public exports
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_validation_errors():
+    with pytest.raises(ValueError, match="alloc/contention require topology"):
+        Scenario(trace=SyntheticTrace(n_jobs=10), total_nodes=8, alloc="topo")
+    with pytest.raises(ValueError, match="total_nodes is required"):
+        Scenario(trace=SyntheticTrace(n_jobs=10))
+    with pytest.raises(ValueError, match="topology has 64 nodes"):
+        Scenario(trace=SyntheticTrace(n_jobs=10), total_nodes=32,
+                 topology=Topology.mesh2d(8, 8))
+    with pytest.raises(ValueError, match="one trace spec per cluster"):
+        Scenario(trace=SyntheticTrace(n_jobs=10), total_nodes=8,
+                 multicluster=Multicluster(window=100))
+    # topology defaults total_nodes
+    scn = Scenario(trace=SyntheticTrace(n_jobs=10),
+                   topology=Topology.dragonfly(4, 4))
+    assert scn.total_nodes == 16
+
+
+def test_public_package_exports():
+    import repro
+
+    assert repro.Scenario is Scenario
+    assert repro.run is run
+    assert repro.sweep is sweep
+    assert repro.api.SwfTrace is SwfTrace
+    from repro.core import simulate_np  # stable low-level surface
+    assert callable(simulate_np)

@@ -1,30 +1,27 @@
 """Paper §4.2 methodology: validate the JAX engine against the reference
-simulator (CQsim analogue) — per-job exact start/finish equality."""
+simulator (CQsim analogue) — per-job exact start/finish equality, driven
+end-to-end through the Scenario API (both engines consume the SAME spec)."""
 
 import numpy as np
 import pytest
 
-from repro.core.engine import simulate_np
-from repro.core.jobs import POLICY_IDS
-from repro.refsim import simulate_reference
-from repro.traces import das2_like, sdsc_sp2_like, synthetic_trace
+from repro.api import ArrayTrace, Scenario, SyntheticTrace, run, run_ref
 
 POLICIES = ["fcfs", "sjf", "ljf", "bestfit", "backfill"]
 
 
 @pytest.mark.parametrize("policy", POLICIES)
-@pytest.mark.parametrize("trace_fn,nodes", [
-    (das2_like, 400), (sdsc_sp2_like, 128),
-])
-def test_exact_match_vs_reference(policy, trace_fn, nodes):
-    trace = trace_fn(300, seed=7)
-    ref = simulate_reference(trace, policy, total_nodes=nodes)
-    ours = simulate_np(trace, policy, total_nodes=nodes)
-    n = len(ref["start"])
-    assert ours["done"][:n].all()
-    np.testing.assert_array_equal(ours["start"][:n], ref["start"])
-    np.testing.assert_array_equal(ours["finish"][:n], ref["finish"])
-    assert ours["makespan"] == ref["makespan"]
+@pytest.mark.parametrize("kind,nodes", [("das2", 400), ("sdsc_sp2", 128)])
+def test_exact_match_vs_reference(policy, kind, nodes):
+    scn = Scenario(trace=SyntheticTrace(n_jobs=300, seed=7, kind=kind),
+                   total_nodes=nodes, policy=policy)
+    ours, ref = run(scn), run_ref(scn)
+    out, refnp = ours.to_np(), ref.to_np()
+    n = len(refnp["start"])
+    assert out["done"][:n].all()
+    np.testing.assert_array_equal(out["start"][:n], refnp["start"])
+    np.testing.assert_array_equal(out["finish"][:n], refnp["finish"])
+    assert out["makespan"] == refnp["makespan"]
 
 
 @pytest.mark.parametrize("seed", range(4))
@@ -32,15 +29,15 @@ def test_exact_match_random_small(seed):
     """Dense tiny traces maximize same-timestamp collisions (edge cases)."""
     rng = np.random.default_rng(seed)
     n = 60
-    trace = {
-        "submit": rng.integers(0, 50, n),
-        "runtime": rng.integers(1, 30, n),
-        "nodes": rng.integers(1, 9, n),
-        "estimate": rng.integers(1, 60, n),
-    }
+    trace = ArrayTrace(
+        submit=rng.integers(0, 50, n),
+        runtime=rng.integers(1, 30, n),
+        nodes=rng.integers(1, 9, n),
+        estimate=rng.integers(1, 60, n),
+    )
     for policy in POLICIES:
-        ref = simulate_reference(trace, policy, total_nodes=8)
-        ours = simulate_np(trace, policy, total_nodes=8)
+        scn = Scenario(trace=trace, total_nodes=8, policy=policy)
+        ours, ref = run(scn), run_ref(scn)
         np.testing.assert_array_equal(
             ours["start"][:n], ref["start"],
             err_msg=f"policy={policy} seed={seed}")
@@ -48,9 +45,10 @@ def test_exact_match_random_small(seed):
 
 def test_backfill_beats_fcfs_on_wait():
     """Qualitative paper claim (Fig 4b): EASY reduces average wait."""
-    trace = sdsc_sp2_like(600, seed=11)
-    f = simulate_np(trace, "fcfs", total_nodes=128)
-    b = simulate_np(trace, "backfill", total_nodes=128)
+    scn = Scenario(trace=SyntheticTrace(n_jobs=600, seed=11, kind="sdsc_sp2"),
+                   total_nodes=128)
+    f = run(scn.with_(policy="fcfs")).to_np()
+    b = run(scn.with_(policy="backfill")).to_np()
     v = f["valid"]
     assert b["wait"][v].mean() <= f["wait"][v].mean()
 
@@ -58,14 +56,15 @@ def test_backfill_beats_fcfs_on_wait():
 def test_estimates_drive_sjf_not_runtime():
     n = 50
     rng = np.random.default_rng(3)
-    trace = {
-        "submit": np.zeros(n, np.int64),
-        "runtime": np.full(n, 10, np.int64),
-        "nodes": np.full(n, 8, np.int64),
-        "estimate": rng.permutation(n).astype(np.int64) + 1,
-    }
-    out = simulate_np(trace, "sjf", total_nodes=8)
+    estimate = rng.permutation(n).astype(np.int64) + 1
+    scn = Scenario(
+        trace=ArrayTrace(submit=np.zeros(n, np.int64),
+                         runtime=np.full(n, 10, np.int64),
+                         nodes=np.full(n, 8, np.int64),
+                         estimate=estimate),
+        total_nodes=8, policy="sjf")
+    out = run(scn).to_np()
     # one job runs at a time; k-th start must be the k-th smallest estimate
     # (rows keep submission order: all submits equal)
     order_by_start = np.argsort(out["start"][:n])
-    assert (np.diff(trace["estimate"][order_by_start]) > 0).all()
+    assert (np.diff(estimate[order_by_start]) > 0).all()

@@ -1,0 +1,104 @@
+"""SWF loader end-to-end: parsing/filtering/fallbacks on the checked-in
+fixture, then dtype flow through ``run(Scenario(trace=SwfTrace(...)))``
+including the int64 -> int32 downcast in ``make_jobset``."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import Scenario, SwfTrace, run, run_ref
+from repro.traces import load_swf
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data", "tiny.swf")
+
+# fixture rows surviving the loader's filters, keyed by SWF job id:
+# job 3 (runtime 0), 5 (no procs), 12 (negative runtime) are dropped, the
+# trailing short row is skipped, so 13 of 16 data rows load
+KEPT_JOBS = 13
+
+
+def test_load_swf_filters_and_dtypes():
+    t = load_swf(FIXTURE)
+    assert set(t) == {"submit", "runtime", "nodes", "estimate"}
+    for key in t:
+        assert t[key].dtype == np.int64, key
+        assert len(t[key]) == KEPT_JOBS
+    # submit times are raw (unnormalized) seconds from the log
+    assert t["submit"][0] == 1000
+    # cancelled rows (ids 3, 5, 12) are gone: no zero/negative runtimes
+    assert (t["runtime"] > 0).all() and (t["nodes"] > 0).all()
+
+
+def test_load_swf_field_fallbacks():
+    t = load_swf(FIXTURE)
+    # job 2: requested procs <= 0 -> allocated procs (field 5) used
+    assert t["nodes"][1] == 2
+    # job 9: requested procs (4) preferred over allocated (2)
+    assert t["nodes"][6] == 4
+    # jobs 4 and 13: requested time <= 0 -> estimate falls back to runtime
+    assert t["estimate"][2] == t["runtime"][2] == 200
+    assert t["estimate"][9] == t["runtime"][9] == 60
+
+
+def test_load_swf_gz_identical_and_max_jobs():
+    plain = load_swf(FIXTURE)
+    gz = load_swf(FIXTURE + ".gz")
+    for key in plain:
+        np.testing.assert_array_equal(plain[key], gz[key])
+    head = load_swf(FIXTURE, max_jobs=5)
+    assert len(head["submit"]) == 5
+    np.testing.assert_array_equal(head["nodes"], plain["nodes"][:5])
+
+
+def test_swf_scenario_end_to_end():
+    """run(Scenario(trace=SwfTrace(...))): int64 loader arrays flow through
+    make_jobset's int32 downcast, submit normalization, and node clamping,
+    and the result validates bit-exact against the reference simulator."""
+    scn = Scenario(trace=SwfTrace(FIXTURE), total_nodes=32, policy="backfill")
+    res = run(scn)
+
+    jobs = res.jobs
+    for arr in (jobs.submit, jobs.runtime, jobs.estimate, jobs.nodes,
+                jobs.priority):
+        assert arr.dtype == np.int32
+    out = res.to_np()
+    assert out["valid"].sum() == KEPT_JOBS
+    assert out["done"].sum() == KEPT_JOBS
+    # make_jobset normalized raw submits (min was 1000) to start at 0
+    assert out["submit"][out["valid"]].min() == 0
+    # the 64-node request was clamped to the 32-node machine
+    assert out["nodes"][out["valid"]].max() == 32
+    assert res.matches(run_ref(scn))
+
+
+def test_swf_scenario_gz_and_topology():
+    """The .gz copy drives the allocation engine identically, and the swf
+    spec composes with topology like any other trace source."""
+    scn = Scenario(trace=SwfTrace(FIXTURE + ".gz", max_jobs=10),
+                   topology=api.Topology.mesh2d(4, 8), policy="fcfs",
+                   alloc="contiguous")
+    res = run(scn)
+    assert res.matches(run_ref(scn), node_maps=True)
+    assert "mean_frag" in res.summary()
+
+
+def test_swf_downcast_overflow_guard():
+    """Traces whose horizon would overflow the int32 sentinel are rejected
+    by make_jobset rather than silently wrapped."""
+    import tempfile
+
+    with tempfile.NamedTemporaryFile("w", suffix=".swf", delete=False) as fh:
+        f = ["1", str(2 ** 31), "0", "10", "1", "-1", "-1", "1", "10", "-1",
+             "1"] + ["-1"] * 7
+        g = ["2", "0", "0", "10", "1", "-1", "-1", "1", "10", "-1",
+             "1"] + ["-1"] * 7
+        fh.write(" ".join(f) + "\n" + " ".join(g) + "\n")
+        path = fh.name
+    try:
+        scn = Scenario(trace=SwfTrace(path), total_nodes=4)
+        with pytest.raises(ValueError, match="overflows int32"):
+            run(scn)
+    finally:
+        os.unlink(path)
