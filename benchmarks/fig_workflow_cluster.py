@@ -1,0 +1,71 @@
+"""Workflow DAGs scheduled onto the cluster (DESIGN.md §13).
+
+The paper's Fig. 6/7 workflows run here as first-class cluster jobs: one
+Galactic Plane DAG swept over policy × allocation strategy in a single
+compiled executable, reporting the ready-time wait (Fig. 7 metric),
+makespan and locality per grid point — the two-level scheduling study
+(workflow structure × batch scheduler × placement) that the standalone
+pool engine cannot express.
+"""
+
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit, series_to_csv, time_call
+from repro.api import Scenario, Topology, WorkflowTrace, run_ref, sweep
+
+POLICIES = ("fcfs", "sjf", "backfill", "bestfit")
+ALLOCS = ("simple", "contiguous", "topo")
+
+
+def _grid(scn: Scenario, policies, allocs):
+    return sweep(scn, axes={"policy": policies, "alloc": allocs})
+
+
+def main(outdir: str = "results") -> None:
+    os.makedirs(outdir, exist_ok=True)
+    scn = Scenario(
+        trace=WorkflowTrace(kind="galactic",
+                            params=(("tiles", 8), ("width", 12))),
+        topology=Topology.dragonfly(8, 8), policy="fcfs",
+        contention=(1, 5),
+    )
+    secs = time_call(lambda: _grid(scn, POLICIES, ALLOCS), warmup=1, iters=2)
+    grid = _grid(scn, POLICIES, ALLOCS)
+    assert grid.n_compiles == 1, grid.n_compiles
+    rows = []
+    for point, res in grid:
+        s = res.summary()
+        rows.append((point["policy"], point["alloc"], int(s["n_jobs"]),
+                     f"{s['avg_wait']:.1f}", f"{s['p95_wait']:.1f}",
+                     int(s["makespan"]), f"{s['utilization']:.3f}",
+                     f"{s['mean_job_span']:.2f}"))
+    emit("fig_workflow_cluster_grid", secs / len(grid),
+         f"points={len(grid)};compiles={grid.n_compiles}")
+    # spot-validate one corner of the grid against the reference simulator
+    corner = grid.get(policy="backfill", alloc="topo")
+    assert corner.matches(run_ref(corner.scenario), node_maps=True)
+    series_to_csv(os.path.join(outdir, "fig_workflow_cluster.csv"),
+                  ["policy", "alloc", "tasks", "avg_wait", "p95_wait",
+                   "makespan", "utilization", "mean_job_span"], rows)
+
+
+def smoke(outdir: str = "results") -> None:
+    """CI dry pass: tiny DAG, 2x2 grid, one executable, ref-validated."""
+    os.makedirs(outdir, exist_ok=True)
+    scn = Scenario(
+        trace=WorkflowTrace(kind="galactic",
+                            params=(("tiles", 2), ("width", 6))),
+        topology=Topology.mesh2d(4, 4), policy="fcfs",
+    )
+    grid = _grid(scn, ("fcfs", "backfill"), ("simple", "contiguous"))
+    assert grid.n_compiles == 1, grid.n_compiles
+    for point, res in grid:
+        assert res.matches(run_ref(res.scenario), node_maps=True), point
+    emit("fig_workflow_cluster_smoke", 0.0,
+         f"points={len(grid)};makespan={grid[0].makespan}")
+
+
+if __name__ == "__main__":
+    main()

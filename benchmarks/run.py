@@ -18,7 +18,8 @@ import traceback
 
 from benchmarks import (
     des_throughput, fig3_occupancy, fig4_policies, fig4_wait, fig5_scaling,
-    fig6_workflow_scaling, fig7_workflow_wait, fig_alloc, roofline_table,
+    fig6_workflow_scaling, fig7_workflow_wait, fig_alloc,
+    fig_workflow_cluster, roofline_table,
 )
 
 BENCHES = [
@@ -28,6 +29,7 @@ BENCHES = [
     ("fig5_scaling", fig5_scaling),
     ("fig6_workflow_scaling", fig6_workflow_scaling),
     ("fig7_workflow_wait", fig7_workflow_wait),
+    ("fig_workflow_cluster", fig_workflow_cluster),
     ("fig_alloc", fig_alloc),
     ("des_throughput", des_throughput),
     ("roofline_table", roofline_table),

@@ -59,6 +59,23 @@ def main():
     print(f"\nSIPHT: wait-time exact match vs reference: "
           f"{int((ours['wait'][:m] == ref['wait']).sum())}/{m}")
 
+    # the same DAG as first-class *cluster* jobs (DESIGN.md §13): concrete
+    # node placement + EASY backfill interacting with the dependency
+    # structure, validated bit-exactly against the cluster reference sim
+    from repro.api import Scenario, Topology, WorkflowTrace
+    from repro.api import run as cluster_run, run_ref as cluster_run_ref
+
+    scn = Scenario(trace=WorkflowTrace(kind="sipht", seed=4,
+                                       params=(("width", 30),)),
+                   topology=Topology.mesh2d(4, 8), policy="backfill",
+                   alloc="contiguous")
+    res = cluster_run(scn)
+    out = res.to_np()
+    v = out["valid"]
+    print(f"on-cluster (mesh2d 4x8, backfill+contiguous): makespan "
+          f"{out['makespan']}, mean ready-wait {out['wait'][v].mean():.1f}, "
+          f"matches ref: {res.matches(cluster_run_ref(scn), node_maps=True)}")
+
 
 if __name__ == "__main__":
     main()

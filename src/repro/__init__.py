@@ -27,7 +27,8 @@ _SUBMODULES = frozenset({
 # names re-exported from repro.api on first access
 _API_NAMES = frozenset({
     "ArrayTrace", "Multicluster", "Result", "Scenario", "SweepResult",
-    "SwfTrace", "SyntheticTrace", "Topology", "run", "run_ref", "sweep",
+    "SwfTrace", "SyntheticTrace", "Topology", "WorkflowTrace", "run",
+    "run_ref", "sweep",
 })
 
 __all__ = sorted(_SUBMODULES | _API_NAMES)

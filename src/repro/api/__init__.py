@@ -25,12 +25,13 @@ from repro.api.result import Result, simresult_to_np
 from repro.api.run import build_jobset, run, run_ref
 from repro.api.scenario import (
     ArrayTrace, Multicluster, Scenario, SwfTrace, SyntheticTrace, Topology,
-    TRACED_AXES, as_trace_spec,
+    TRACED_AXES, WorkflowTrace, as_trace_spec,
 )
 from repro.api.sweep import SweepResult, sweep
 
 __all__ = [
     "ArrayTrace", "Multicluster", "Result", "Scenario", "SweepResult",
-    "SwfTrace", "SyntheticTrace", "Topology", "TRACED_AXES", "as_trace_spec",
-    "build_jobset", "run", "run_ref", "simresult_to_np", "sweep",
+    "SwfTrace", "SyntheticTrace", "Topology", "TRACED_AXES", "WorkflowTrace",
+    "as_trace_spec", "build_jobset", "run", "run_ref", "simresult_to_np",
+    "sweep",
 ]

@@ -9,6 +9,11 @@ converts (lazily, cached) to the *one* canonical numpy schema —
 plus the ``alloc_*``/``ev_*`` allocation fields when a topology was active —
 and ``summary()`` derives the standard scalar metrics
 (wait/makespan/utilization/fragmentation) via ``repro.core.metrics``.
+
+Dependency-aware runs (DESIGN.md §13) add a ``ready`` column —
+``max(submit, last dependency finish)`` — and ``wait`` is uniformly
+``start - ready`` (== ``start - submit`` for dependency-free jobs), the
+paper's Fig. 7 workflow wait metric.
 """
 
 from __future__ import annotations
@@ -100,6 +105,7 @@ def simresult_to_np(res: SimResult, jobs: JobSet, *,
         "runtime": np.asarray(jobs.runtime),
         "start": np.asarray(res.start),
         "finish": np.asarray(res.finish),
+        "ready": np.asarray(res.ready),
         "wait": np.asarray(res.wait),
         "makespan": int(res.makespan),
         "n_events": int(res.n_events),

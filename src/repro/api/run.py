@@ -40,6 +40,7 @@ def build_jobset(scenario: Scenario, *, cluster: int = 0,
     return make_jobset(
         trace["submit"], trace["runtime"], trace["nodes"],
         trace.get("estimate"), trace.get("priority"),
+        deps=trace.get("deps"),
         capacity=capacity if capacity is not None else scenario.capacity,
         total_nodes=total_nodes,
     )
@@ -141,9 +142,12 @@ def _run_multicluster(scenario: Scenario) -> Result:
     nodes_c = scenario.nodes_per_cluster()
     traces = tuple(s.materialize() for s in specs)
     cap = _multicluster_capacity(scenario, traces)
+    # clusters may mix DAG and plain traces: stack_jobsets pads the dep-free
+    # tables with all-False matrices to keep the stacked pytree uniform
     jobsets = [
         make_jobset(t["submit"], t["runtime"], t["nodes"], t.get("estimate"),
-                    t.get("priority"), capacity=cap, total_nodes=n)
+                    t.get("priority"), deps=t.get("deps"), capacity=cap,
+                    total_nodes=n)
         for t, n in zip(traces, nodes_c)
     ]
     horizon = mc.horizon

@@ -1,9 +1,11 @@
 """Declarative experiment specs (DESIGN.md §12.1).
 
 A :class:`Scenario` is a frozen, host-side description of ONE simulation:
-where the jobs come from (`trace`), what machine runs them (`total_nodes`
-plus an optional :class:`Topology`), how they are scheduled (`policy`,
-`alloc`, `contention`), and whether the run is partitioned into
+where the jobs come from (`trace` — synthetic generators, SWF logs,
+explicit arrays, or a :class:`WorkflowTrace` DAG scheduled onto the
+cluster), what machine runs them (`total_nodes` plus an optional
+:class:`Topology`), how they are scheduled (`policy`, `alloc`,
+`contention`), and whether the run is partitioned into
 conservatively-synchronized clusters (`multicluster`).  Specs carry no
 device arrays — they are cheap to construct, compare, copy and sweep, and
 the same spec drives both the JAX engine (``repro.api.run``) and the
@@ -25,12 +27,15 @@ which is how ``repro.api.sweep`` expands an axis grid into scenario points.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional, Tuple, Union
 
 import numpy as np
 
 from repro import alloc as _alloc
 from repro.traces import das2_like, load_swf, sdsc_sp2_like, synthetic_trace
+from repro.traces import workflows as _workflows
+from repro.traces.workflows import workflow_to_trace
 
 # ---------------------------------------------------------------------------
 # trace sources
@@ -97,12 +102,81 @@ class SwfTrace:
         return None  # unknown until loaded
 
 
+@dataclasses.dataclass(frozen=True)
+class WorkflowTrace:
+    """A workflow DAG scheduled *onto the cluster* (paper §3, DESIGN.md §13).
+
+    ``kind`` selects the ``repro.traces.workflows`` generator: ``"montage"``,
+    ``"galactic"`` (Galactic Plane: K montage tiles + merge), ``"sipht"``,
+    ``"chain"``, ``"fork_join"`` or ``"random"`` (random layered DAG).
+    ``params`` are generator keyword arguments as (name, value) pairs —
+    e.g. ``(("width", 16),)`` or ``(("tiles", 4), ("width", 8))``.  The DAG
+    lowers through ``workflow_to_trace``: tasks become jobs (cpu requirement
+    -> node count), edges become the ``JobSet.deps`` matrix, and every task
+    shares one ``submit`` time so release order is purely dependency-driven.
+
+    The DAG *shape* (kind/params/submit/priority) is a static recompile
+    axis; ``seed`` only perturbs task durations and random edges, so it is
+    traced sweep data exactly like ``SyntheticTrace.seed``.
+    ``priority="cpath"`` attaches critical-path priorities for ``preempt``.
+    """
+
+    kind: str = "montage"
+    seed: int = 0
+    params: Tuple[Tuple[str, Any], ...] = ()
+    submit: int = 0
+    priority: Optional[str] = None
+
+    _GENERATORS = {
+        "montage": _workflows.montage_like,
+        "galactic": _workflows.galactic_like,
+        "sipht": _workflows.sipht_like,
+        "chain": _workflows.chain,
+        "fork_join": _workflows.fork_join,
+        "random": _workflows.random_layered,
+    }
+    _SEEDLESS = frozenset({"chain"})
+
+    def materialize(self) -> Dict[str, np.ndarray]:
+        # shallow copy of the cached dict: the spec is frozen/hashable, so
+        # sweep grids and n_rows don't regenerate (and re-cycle-check) the
+        # same DAG per grid point
+        return dict(_materialize_workflow(self))
+
+    def static_key(self):
+        """Everything except ``seed`` — the DAG's task count and edge-matrix
+        shape are fixed by (kind, params), so seed is trace *data*."""
+        return ("workflow", self.kind, self.params, self.submit,
+                self.priority)
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.materialize()["submit"])
+
+
+@functools.lru_cache(maxsize=128)
+def _materialize_workflow(spec: WorkflowTrace) -> Dict[str, np.ndarray]:
+    try:
+        gen = spec._GENERATORS[spec.kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown workflow kind {spec.kind!r}; "
+            f"known: {sorted(spec._GENERATORS)}") from None
+    kwargs = dict(spec.params)
+    if spec.kind not in spec._SEEDLESS:
+        kwargs["seed"] = spec.seed
+    return workflow_to_trace(gen(**kwargs), submit=spec.submit,
+                             priority=spec.priority)
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class ArrayTrace:
     """Explicit host arrays — the escape hatch for custom workloads.
 
     ``eq=False`` keeps the dataclass hashable by identity: two ArrayTraces
     are the "same trace" for compile-bucketing iff they are the same object.
+    ``deps`` (optional (job, dep) pairs or dense bool matrix, input order)
+    makes the jobs a workflow (DESIGN.md §13).
     """
 
     submit: Any
@@ -110,12 +184,13 @@ class ArrayTrace:
     nodes: Any
     estimate: Any = None
     priority: Any = None
+    deps: Any = None
 
     @classmethod
     def from_dict(cls, trace: Dict[str, Any]) -> "ArrayTrace":
         return cls(submit=trace["submit"], runtime=trace["runtime"],
                    nodes=trace["nodes"], estimate=trace.get("estimate"),
-                   priority=trace.get("priority"))
+                   priority=trace.get("priority"), deps=trace.get("deps"))
 
     def materialize(self) -> Dict[str, np.ndarray]:
         out = {"submit": np.asarray(self.submit),
@@ -125,6 +200,8 @@ class ArrayTrace:
             out["estimate"] = np.asarray(self.estimate)
         if self.priority is not None:
             out["priority"] = np.asarray(self.priority)
+        if self.deps is not None:
+            out["deps"] = self.deps
         return out
 
     def static_key(self):
@@ -135,12 +212,13 @@ class ArrayTrace:
         return len(np.asarray(self.submit))
 
 
-TraceSpec = Union[SyntheticTrace, SwfTrace, ArrayTrace]
+TraceSpec = Union[SyntheticTrace, SwfTrace, ArrayTrace, WorkflowTrace]
 
 
 def as_trace_spec(trace) -> TraceSpec:
     """Accept a spec, a plain dict-of-arrays, or an .swf path string."""
-    if isinstance(trace, (SyntheticTrace, SwfTrace, ArrayTrace)):
+    if isinstance(trace, (SyntheticTrace, SwfTrace, ArrayTrace,
+                          WorkflowTrace)):
         return trace
     if isinstance(trace, dict):
         return ArrayTrace.from_dict(trace)

@@ -8,6 +8,14 @@ Event semantics, pinned identically in ``repro.refsim`` (DESIGN.md §8):
   4. run the scheduling pass: repeatedly ask the policy selector for a job
      and start it, until the selector returns -1.
 
+Dependencies (paper §3, DESIGN.md §13): when the job table carries a
+``deps`` matrix, a PENDING job arrives only when ``submit <= clock`` AND
+every dependency is DONE.  Dependents of a completing job are re-evaluated
+at the completion event itself (completions run before arrivals), so a
+released dependent joins the wait queue — and competes in the scheduling
+pass — at its last dependency's finish time.  ``deps is None`` statically
+elides every release check, compiling to the exact seed event graph.
+
 Each event consumes at least one arrival or completion, so the loop runs at
 most ``2*J + 1`` iterations; ``max_events`` is a safety cap on top.
 
@@ -164,12 +172,29 @@ def _schedule_pass(policy: jax.Array, jobs: JobSet, state: SimState,
     return state
 
 
+def _released(jobs: JobSet, jstate: jax.Array) -> jax.Array | None:
+    """Dependency release mask: True where every dependency is DONE.
+
+    ``None`` when the job table carries no dependency matrix — the static
+    elision that keeps the no-deps path compiling to the exact seed graph.
+    """
+    if jobs.deps is None:
+        return None
+    unmet = jobs.deps & (jstate != DONE)[None, :]
+    return ~jnp.any(unmet, axis=1)
+
+
 def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
                 ctx: Optional[AllocCtx] = None) -> SimState:
     pending = state.jstate == PENDING
     running = state.jstate == RUNNING
 
-    t_arr = jnp.min(jnp.where(pending, jobs.submit, INF_TIME))
+    # A PENDING job generates an arrival event only once its dependencies
+    # are DONE; unreleased dependents are invisible to the clock (and to
+    # backfill's shadow math, which never sees them as WAITING).
+    rel = _released(jobs, state.jstate)
+    arrivable = pending if rel is None else pending & rel
+    t_arr = jnp.min(jnp.where(arrivable, jobs.submit, INF_TIME))
     t_fin = jnp.min(jnp.where(running, state.finish, INF_TIME))
     clock = jnp.minimum(t_arr, t_fin)
 
@@ -180,8 +205,14 @@ def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
     node_owner = (state.node_owner if ctx is None
                   else _release_nodes(state.node_owner, completed, jobs.capacity))
 
-    # arrivals
+    # arrivals — dependents of this event's completions release *now*
+    # (paper §3 release rule): re-evaluate readiness after completions so a
+    # job whose last dependency just finished joins the wait queue in the
+    # same event, with ready_time = max(submit, last dep finish).
     arrived = (jstate == PENDING) & (jobs.submit <= clock)
+    rel = _released(jobs, jstate)
+    if rel is not None:
+        arrived = arrived & rel
     jstate = jnp.where(arrived, WAITING, jstate)
 
     state = dataclasses.replace(
@@ -301,7 +332,9 @@ def _simulate_jit(
 def next_event_time(jobs: JobSet, state: SimState) -> jax.Array:
     pending = state.jstate == PENDING
     running = state.jstate == RUNNING
-    t_arr = jnp.min(jnp.where(pending, jobs.submit, INF_TIME))
+    rel = _released(jobs, state.jstate)
+    arrivable = pending if rel is None else pending & rel
+    t_arr = jnp.min(jnp.where(arrivable, jobs.submit, INF_TIME))
     t_fin = jnp.min(jnp.where(running, state.finish, INF_TIME))
     return jnp.minimum(t_arr, t_fin)
 
@@ -343,6 +376,7 @@ def simulate_np(trace, policy, *, total_nodes: int, capacity: int | None = None,
     jobs = make_jobset(
         trace["submit"], trace["runtime"], trace["nodes"],
         trace.get("estimate"), trace.get("priority"),
+        deps=trace.get("deps"),
         capacity=capacity, total_nodes=total_nodes,
     )
     pol = policies_id(policy)
@@ -355,6 +389,7 @@ def simulate_np(trace, policy, *, total_nodes: int, capacity: int | None = None,
         "runtime": np.asarray(jobs.runtime),
         "start": np.asarray(res.start),
         "finish": np.asarray(res.finish),
+        "ready": np.asarray(res.ready),
         "wait": np.asarray(res.wait),
         "makespan": int(res.makespan),
         "n_events": int(res.n_events),

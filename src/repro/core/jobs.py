@@ -58,6 +58,14 @@ class JobSet:
     ordering and EASY reservations); ``runtime`` is the actual duration
     (drives completion events) — mirroring how CQsim treats walltime vs. run
     time.
+
+    ``deps`` makes task dependencies a first-class axis of the cluster
+    engine (paper §3, DESIGN.md §13): ``deps[i, j]`` means job *i* cannot
+    enter the wait queue until job *j* is DONE.  It is ``None`` (statically
+    elided — the engine compiles to the exact seed path) for plain job
+    traces, and a dense ``bool[J, J]`` for workflow traces; being a pytree
+    leaf it batches through ``vmap`` ensembles and ``sweep()`` like any
+    other job attribute.
     """
 
     submit: jax.Array    # i32[J]
@@ -66,6 +74,7 @@ class JobSet:
     nodes: jax.Array     # i32[J]  requested nodes, >= 1
     priority: jax.Array  # i32[J]  lower = more important (preempt policy)
     valid: jax.Array     # bool[J]
+    deps: jax.Array | None = None  # bool[J, J] or None (no dependencies)
 
     @property
     def capacity(self) -> int:
@@ -75,6 +84,59 @@ class JobSet:
         return jnp.sum(self.valid.astype(jnp.int32), axis=-1)
 
 
+def assert_acyclic(deps: np.ndarray) -> None:
+    """Kahn's algorithm over a dense bool dependency matrix; raises on
+    cycles.  ``deps[i, j]`` = *i* depends on *j*.  Shared by
+    ``make_jobset`` and ``repro.core.workflow.make_taskset``."""
+    n = deps.shape[0]
+    indeg = deps.sum(axis=1).astype(np.int64)
+    stack = list(np.nonzero(indeg == 0)[0])
+    seen = 0
+    dependents = [np.nonzero(deps[:, j])[0] for j in range(n)]
+    while stack:
+        j = stack.pop()
+        seen += 1
+        for i in dependents[j]:
+            indeg[i] -= 1
+            if indeg[i] == 0:
+                stack.append(i)
+    if seen != n:
+        raise ValueError("dependency graph contains a cycle")
+
+
+def _dense_deps(deps, n: int) -> np.ndarray:
+    """Normalize ``deps`` (pair list or dense matrix, pre-sort indices) to a
+    validated dense bool[n, n]; cycle-checked like ``make_taskset``.
+
+    A bool 2-D array is always a dense matrix (a wrong shape is an error,
+    never re-parsed as pairs); other 2-D arrays are a matrix only at the
+    exact (n, n) shape, else a (job, dep) pair list.  Shared by
+    ``make_jobset`` and ``repro.refsim.ReferenceSimulator.load`` so both
+    engines accept bit-identical inputs.
+    """
+    mat = np.asarray(deps) if not isinstance(deps, (list, tuple)) else None
+    is_dense = (mat is not None and mat.ndim == 2 and mat.dtype != object
+                and (mat.dtype == bool or mat.shape == (n, n)))
+    if is_dense:
+        if mat.shape != (n, n):
+            raise ValueError(
+                f"dense deps matrix has shape {mat.shape}, expected ({n}, {n})")
+        dense = mat.astype(bool)
+        if dense.diagonal().any():
+            raise ValueError("self-dependency")
+    else:
+        dense = np.zeros((n, n), dtype=bool)
+        for pair in deps:
+            t, d = int(pair[0]), int(pair[1])
+            if not (0 <= t < n and 0 <= d < n):
+                raise ValueError(f"dependency pair ({t},{d}) out of range")
+            if t == d:
+                raise ValueError("self-dependency")
+            dense[t, d] = True
+    assert_acyclic(dense)
+    return dense
+
+
 def make_jobset(
     submit,
     runtime,
@@ -82,6 +144,7 @@ def make_jobset(
     estimate=None,
     priority=None,
     *,
+    deps=None,
     capacity: int | None = None,
     total_nodes: int | None = None,
 ) -> JobSet:
@@ -91,6 +154,12 @@ def make_jobset(
     - clamps node requests to ``total_nodes`` (paper traces contain requests
       larger than the simulated machine; CQsim clamps the same way),
     - pads to ``capacity`` with invalid rows.
+
+    ``deps`` is either an iterable of ``(job, dependency)`` index pairs or a
+    dense bool matrix, both in *input* order (indices into ``submit``); it is
+    cycle-checked, permuted into the sorted row order, and padded.  An empty
+    or all-False ``deps`` is elided to ``None`` so the no-dependency case
+    compiles to the exact seed path.
     """
     submit = np.asarray(submit, dtype=np.int64)
     runtime = np.asarray(runtime, dtype=np.int64)
@@ -127,6 +196,13 @@ def make_jobset(
     if cap < n:
         raise ValueError(f"capacity {cap} < number of jobs {n}")
 
+    dep_mat = None
+    if deps is not None:
+        dense = _dense_deps(deps, n)
+        if dense.any():
+            dep_mat = np.zeros((cap, cap), dtype=bool)
+            dep_mat[:n, :n] = dense[order][:, order]
+
     def pad(a, fill):
         out = np.full((cap,), fill, dtype=np.int32)
         out[:n] = a.astype(np.int32)
@@ -141,6 +217,7 @@ def make_jobset(
         nodes=jnp.asarray(pad(nodes, 1)),
         priority=jnp.asarray(pad(priority, 0)),
         valid=jnp.asarray(valid),
+        deps=None if dep_mat is None else jnp.asarray(dep_mat),
     )
 
 
@@ -214,7 +291,8 @@ class SimResult:
 
     start: jax.Array        # i32[J]
     finish: jax.Array       # i32[J]
-    wait: jax.Array         # i32[J] start - submit
+    ready: jax.Array        # i32[J] max(submit, last dep finish); == submit w/o deps
+    wait: jax.Array         # i32[J] start - ready (paper Fig. 7 metric)
     makespan: jax.Array     # i32 scalar
     n_events: jax.Array     # i32 scalar
     done: jax.Array         # bool[J] job reached DONE (False => engine hit event cap)
@@ -227,11 +305,22 @@ class SimResult:
 
 
 def result_from_state(jobs: JobSet, state: SimState) -> SimResult:
-    wait = jnp.where(jobs.valid, state.start - jobs.submit, 0).astype(jnp.int32)
+    if jobs.deps is None:
+        ready = jobs.submit
+    else:
+        # a job becomes *ready* when its last dependency finishes (submit for
+        # roots); dep finishes are final whenever the job released, so the
+        # post-hoc max is exact for every DONE job.
+        dep_fin = jnp.max(
+            jnp.where(jobs.deps, state.finish[None, :], 0), axis=1
+        ).astype(jnp.int32)
+        ready = jnp.maximum(jobs.submit, dep_fin)
+    wait = jnp.where(jobs.valid, state.start - ready, 0).astype(jnp.int32)
     fin = jnp.where(jobs.valid & (state.jstate == DONE), state.finish, 0)
     return SimResult(
         start=state.start,
         finish=state.finish,
+        ready=ready,
         wait=wait,
         makespan=jnp.max(fin).astype(jnp.int32),
         n_events=state.n_events,

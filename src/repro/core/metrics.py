@@ -136,13 +136,26 @@ def alloc_summary(res) -> Dict[str, float]:
 
 
 def summary(res, total_nodes: int) -> Dict[str, float]:
-    """Scalar metrics used by the five-policy comparison (paper Fig. 4b)."""
+    """Scalar metrics used by the five-policy comparison (paper Fig. 4b).
+
+    Wait statistics are ready-time based when the result carries a ``ready``
+    column (dependency-aware runs, DESIGN.md §13): wait = start - ready
+    charges a workflow task only for time spent *eligible* in the queue,
+    not for time blocked on upstream tasks (paper Fig. 7).  Without
+    ``ready`` this degenerates to the classic start - submit.
+    """
     submit, start, finish, nodes, runtime = _select_valid(res)
     if len(submit) == 0:
         return {k: 0.0 for k in (
             "n_jobs", "avg_wait", "p50_wait", "p95_wait", "max_wait",
             "avg_bounded_slowdown", "makespan", "utilization", "throughput")}
-    wait = (start - submit).astype(np.float64)
+    if "ready" in res:
+        v = (np.asarray(res["valid"], dtype=bool)
+             & np.asarray(res["done"], dtype=bool))
+        ready = np.asarray(res["ready"])[v]
+    else:
+        ready = submit
+    wait = (start - ready).astype(np.float64)
     run = runtime.astype(np.float64)
     bsld = np.maximum((wait + run) / np.maximum(run, 10.0), 1.0)
     makespan = float(finish.max() - submit.min())

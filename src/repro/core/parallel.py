@@ -39,7 +39,22 @@ from repro.core.jobs import (
 
 
 def stack_jobsets(jobsets: list[JobSet]) -> JobSet:
-    """Stack equally-sized JobSets into a leading batch dimension."""
+    """Stack equally-sized JobSets into a leading batch dimension.
+
+    Members may mix ``deps=None`` and dependency matrices (e.g. a sweep over
+    DAG seeds where one seed happens to generate zero edges): the dep-free
+    tables are padded with all-False matrices so every member shares one
+    pytree structure.  Their release checks are trivially true, so schedules
+    are unchanged.
+    """
+    if any(j.deps is not None for j in jobsets) \
+            and any(j.deps is None for j in jobsets):
+        jobsets = [
+            j if j.deps is not None
+            else dataclasses.replace(
+                j, deps=jnp.zeros((j.capacity, j.capacity), dtype=bool))
+            for j in jobsets
+        ]
     return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *jobsets)
 
 
@@ -167,10 +182,16 @@ def _export_jobs(jobs: JobSet, state: SimState, t_hi, latency, max_export: int,
     """Pick up to ``max_export`` *tail* waiting/pending jobs to offload.
 
     Tail = largest submit time first (least FCFS-urgent), so migration never
-    reorders the local head-of-queue.  Returns (jobs', state', packet).
+    reorders the local head-of-queue.  Jobs with dependency edges (either
+    direction) are pinned to their cluster: the dependency matrix is local,
+    so exporting either endpoint of an edge would sever it (DESIGN.md §13).
+    Returns (jobs', state', packet).
     """
     J = jobs.capacity
     movable = ((state.jstate == WAITING) | (state.jstate == PENDING)) & jobs.valid
+    if jobs.deps is not None:
+        has_edges = jnp.any(jobs.deps, axis=1) | jnp.any(jobs.deps, axis=0)
+        movable = movable & ~has_edges
     # rank movable jobs by descending submit (non-movable sort last)
     key = jnp.where(movable, -jobs.submit, jnp.int32(INF_TIME))
     order = jnp.argsort(key)  # ascending => movable with largest submit first
@@ -210,6 +231,13 @@ def _import_jobs(jobs: JobSet, state: SimState, flat):
     rows = free_rows_order[jnp.clip(slot, 0, J - 1)]
     rows = jnp.where(can, rows, J)  # J = out-of-bounds => dropped by mode="drop"
 
+    # imported jobs are dependency-free by construction (_export_jobs pins
+    # edge endpoints), but clear the landing rows defensively so a reused
+    # row can never inherit stale edges
+    new_deps = jobs.deps
+    if new_deps is not None:
+        new_deps = new_deps.at[rows].set(False, mode="drop")
+        new_deps = new_deps.at[:, rows].set(False, mode="drop")
     jobs = JobSet(
         submit=jobs.submit.at[rows].set(flat["submit"], mode="drop"),
         runtime=jobs.runtime.at[rows].set(flat["runtime"], mode="drop"),
@@ -217,6 +245,7 @@ def _import_jobs(jobs: JobSet, state: SimState, flat):
         nodes=jobs.nodes.at[rows].set(flat["nodes"], mode="drop"),
         priority=jobs.priority.at[rows].set(flat["priority"], mode="drop"),
         valid=jobs.valid.at[rows].set(True, mode="drop"),
+        deps=new_deps,
     )
     state = dataclasses.replace(
         state,
@@ -359,7 +388,14 @@ def multicluster_result_np(res: MulticlusterResult) -> dict:
         "migrated": int(np.asarray(res.migrated).sum()),
         "dropped": int(np.asarray(res.dropped).sum()),
     }
-    out["wait"] = out["start"] - out["submit"]
+    if jobs.deps is not None:
+        deps = np.asarray(jobs.deps)                       # [C, J, J]
+        fin = np.asarray(state.finish)                     # [C, J]
+        dep_fin = np.max(np.where(deps, fin[:, None, :], 0), axis=2)
+        out["ready"] = np.maximum(np.asarray(jobs.submit), dep_fin).reshape(-1)
+    else:
+        out["ready"] = out["submit"]
+    out["wait"] = out["start"] - out["ready"]
     fin = out["finish"][out["done"]]
     out["makespan"] = int(fin.max(initial=0))
     return out

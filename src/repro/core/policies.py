@@ -16,6 +16,17 @@ Semantics (pinned identically in ``repro.refsim`` for validation):
   running jobs) and start the first FCFS-ordered waiting job that fits now
   and either completes by the shadow or uses only the shadow's extra nodes.
 
+Dependency awareness (DESIGN.md §13): selectors key exclusively on the
+WAITING set, and the engine admits a job to WAITING only after its last
+dependency completes — so every policy here is dependency-aware for free.
+The one semantic pin worth stating: backfill's shadow reservation is
+computed for the WAITING head only, and unreleased dependents (still
+PENDING) are treated exactly like not-yet-arrived jobs — they neither hold
+a reservation nor block backfilling, mirroring how EASY treats future
+arrivals it cannot see.  FCFS order keys on ``submit`` (not release time),
+so a workflow task released late still queues at its submit-time rank;
+both engines pin this identically.
+
 Allocation awareness (DESIGN.md §11.2): every "fits now" test compares
 against ``cap``, the engine-supplied placement-feasibility cap — the free
 *count* for scattered strategies (identical to the seed scalar counter),

@@ -1,5 +1,13 @@
 """Workflow (DAG) management component (paper §3) as a JAX event loop.
 
+This is the *standalone* multi-resource workflow engine: tasks draw from
+abstract (cpu, memory, ...) pools, matching the paper's §3 validation
+setup.  To schedule a DAG onto the *cluster* — concrete nodes, all six
+policies, allocation strategies, contention — lower it with
+``repro.traces.workflows.workflow_to_trace`` (or a
+``repro.api.WorkflowTrace`` scenario) and run it through the main engine's
+dependency axis instead (DESIGN.md §13).
+
 Tasks carry multi-resource requirements (cpu, memory, ... — paper Listing 2)
 and a dependency set; a task is *ready* when every dependency is DONE.  The
 paper implements the DAG with adjacency lists; on SPMD hardware we use a
@@ -25,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.jobs import DONE, INF_TIME, RUNNING, WAITING
+from repro.core.jobs import DONE, INF_TIME, RUNNING, WAITING, assert_acyclic
 
 WF_FCFS = 0
 WF_FCFS_FIT = 1
@@ -89,7 +97,7 @@ def make_taskset(
         if t == d:
             raise ValueError("self-dependency")
         deps[t, d] = True
-    _assert_acyclic(deps[:n, :n])
+    assert_acyclic(deps[:n, :n])
 
     res = np.zeros((cap, resources.shape[1]), dtype=np.int32)
     res[:n] = resources.astype(np.int32)
@@ -109,22 +117,8 @@ def make_taskset(
     )
 
 
-def _assert_acyclic(deps: np.ndarray) -> None:
-    """Kahn's algorithm; raises on cycles."""
-    n = deps.shape[0]
-    indeg = deps.sum(axis=1).astype(np.int64)
-    stack = list(np.nonzero(indeg == 0)[0])
-    seen = 0
-    dependents = [np.nonzero(deps[:, j])[0] for j in range(n)]
-    while stack:
-        j = stack.pop()
-        seen += 1
-        for i in dependents[j]:
-            indeg[i] -= 1
-            if indeg[i] == 0:
-                stack.append(i)
-    if seen != n:
-        raise ValueError("dependency graph contains a cycle")
+# cycle check lives in repro.core.jobs.assert_acyclic (shared with
+# make_jobset, which builds the cluster engine's dependency matrix)
 
 
 def critical_path_length(tasks_exec: np.ndarray, dep_pairs) -> np.ndarray:

@@ -7,21 +7,30 @@ state, so library users on 1-device hosts are unaffected.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+# jax.sharding.AxisType landed after 0.4.x; on older jax every mesh axis is
+# implicitly Auto, so omitting axis_types is the exact equivalent.
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _mesh_kwargs(n_axes: int) -> dict:
+    if _AXIS_TYPE is None:
+        return {}
+    return {"axis_types": (_AXIS_TYPE.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_local_mesh(axes=("data", "model")):
     """All local devices on the first axis (CPU tests / examples)."""
     n = len(jax.devices())
     shape = (n,) + (1,) * (len(axes) - 1)
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def mesh_num_devices(mesh) -> int:

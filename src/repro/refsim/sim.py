@@ -5,6 +5,14 @@ completions, then arrivals, then a scheduling pass that repeatedly applies
 the policy selector until it blocks.  O(E log E) via a completion heap, but
 the scheduling pass scans the waiting queue (like CQsim's list scan).
 
+Dependencies (DESIGN.md §13): a job with unmet dependencies is invisible —
+it generates no arrival event and never enters the waiting queue.  Its
+release happens inside the completion step of its last dependency
+(completions run before arrivals, mirroring the JAX engine bit-for-bit),
+and ``ready = max(submit, last dep finish)`` is recorded for the paper's
+Fig. 7 wait metric.  A preempted job is WAITING, not DONE, so its
+dependents stay blocked until it actually finishes.
+
 Node allocation (DESIGN.md §11): given a ``repro.alloc.Machine`` this
 simulator maintains the same per-node occupancy map as the JAX engine,
 places nodes through the ``repro.alloc.host`` mirrors (identical
@@ -23,7 +31,9 @@ import numpy as np
 
 from repro.alloc import contention as _con
 from repro.alloc import host as _host
-from repro.core.jobs import BACKFILL, BESTFIT, FCFS, LJF, PREEMPT, SJF
+from repro.core.jobs import (
+    BACKFILL, BESTFIT, FCFS, LJF, PREEMPT, SJF, _dense_deps,
+)
 
 _POL = {"fcfs": FCFS, "sjf": SJF, "ljf": LJF, "bestfit": BESTFIT,
         "backfill": BACKFILL, "preempt": PREEMPT}
@@ -53,8 +63,10 @@ class ReferenceSimulator:
     alloc: str = "simple"
     contention: object = None       # repro.alloc.Contention, (num, den), or None
     jobs: List[_Job] = field(default_factory=list)
+    dep_pairs: List[tuple] = field(default_factory=list)  # sorted-row indices
 
-    def load(self, submit, runtime, nodes, estimate=None, priority=None):
+    def load(self, submit, runtime, nodes, estimate=None, priority=None,
+             deps=None):
         submit = np.asarray(submit, dtype=np.int64)
         submit = submit - (submit.min() if len(submit) else 0)
         runtime = np.maximum(np.asarray(runtime, dtype=np.int64), 1)
@@ -72,6 +84,12 @@ class ReferenceSimulator:
                  int(nodes[o]), int(priority[o]), remaining=int(runtime[o]))
             for i, o in enumerate(order)
         ]
+        self.dep_pairs = []
+        if deps is not None:
+            # one shared normalizer (validation + cycle check) with
+            # make_jobset, then the identical (submit, id) sort permutation
+            dense = _dense_deps(deps, len(submit))[order][:, order]
+            self.dep_pairs = list(zip(*np.nonzero(dense)))
         return self
 
     # ---- allocation helpers (mirror repro.alloc) ---------------------------
@@ -153,8 +171,21 @@ class ReferenceSimulator:
         assert self.policy in _POL, self.policy
         jobs = self.jobs
         n = len(jobs)
-        arrivals = list(range(n))  # already sorted by (submit, idx)
-        ai = 0
+        unmet = [0] * n             # unmet-dependency counts
+        dependents: List[List[int]] = [[] for _ in range(n)]
+        for t, d in self.dep_pairs:
+            unmet[t] += 1
+            dependents[d].append(t)
+        # released-but-unarrived jobs as a min-heap of row indices; rows are
+        # sorted by (submit, id), so index order IS arrival order and the
+        # heap top always carries the next arrival time.  Jobs enter when
+        # their last dependency completes (immediately for dep-free jobs),
+        # keeping the no-deps path at the seed's O(E log E).
+        rel_heap = [i for i in range(n) if unmet[i] == 0]
+        heapq.heapify(rel_heap)
+        n_unarrived = n
+        last_dep_fin = [0] * n
+        ready = [0] * n
         waiting: List[_Job] = []
         heap: List[tuple] = []  # (finish, idx)
         running: Dict[int, _Job] = {}
@@ -175,15 +206,21 @@ class ReferenceSimulator:
                 return free
             return _host.placeable_cap_host(self.alloc, owner)
 
-        while ai < n or heap:
+        while n_unarrived or heap:
             while heap and (heap[0][1] not in running
                             or running[heap[0][1]].finish != heap[0][0]):
                 heapq.heappop(heap)   # stale entry from a preemption
-            t_arr = jobs[arrivals[ai]].submit if ai < n else None
+            # released PENDING jobs only: a job with unmet dependencies
+            # generates no arrival event (mirrors the engine's release rule)
+            t_arr = jobs[rel_heap[0]].submit if rel_heap else None
             t_fin = heap[0][0] if heap else None
+            assert t_arr is not None or t_fin is not None, \
+                "deadlock: blocked jobs with no running dependency"
             clock = min(x for x in (t_arr, t_fin) if x is not None)
             n_events += 1
-            # completions first (skip heap entries stale after preemption)
+            # completions first (skip heap entries stale after preemption);
+            # completing a job releases its dependents *now*, before the
+            # arrival step of this same event
             while heap and heap[0][0] <= clock:
                 fin, idx = heapq.heappop(heap)
                 j = running.get(idx)
@@ -191,12 +228,19 @@ class ReferenceSimulator:
                     continue  # stale: the job was preempted and re-queued
                 del running[idx]
                 free += j.nodes
+                for t in dependents[idx]:
+                    unmet[t] -= 1
+                    last_dep_fin[t] = max(last_dep_fin[t], fin)
+                    if unmet[t] == 0:
+                        heapq.heappush(rel_heap, t)
                 if owner is not None:
                     owner[owner == idx] = -1
-            # arrivals
-            while ai < n and jobs[arrivals[ai]].submit <= clock:
-                waiting.append(jobs[arrivals[ai]])
-                ai += 1
+            # arrivals: submit reached AND all dependencies DONE
+            while rel_heap and jobs[rel_heap[0]].submit <= clock:
+                i = heapq.heappop(rel_heap)
+                ready[i] = max(jobs[i].submit, last_dep_fin[i])
+                waiting.append(jobs[i])
+                n_unarrived -= 1
             # scheduling pass
             while True:
                 j = self._select(waiting, list(running.values()), free,
@@ -246,8 +290,9 @@ class ReferenceSimulator:
             "nodes": np.array([j.nodes for j in jobs], dtype=np.int64),
             "start": np.array([j.start for j in jobs], dtype=np.int64),
             "finish": np.array([j.finish for j in jobs], dtype=np.int64),
+            "ready": np.array(ready, dtype=np.int64),
         }
-        out["wait"] = out["start"] - out["submit"]
+        out["wait"] = out["start"] - out["ready"]
         out["done"] = out["start"] >= 0
         out["valid"] = np.ones(n, dtype=bool)
         out["makespan"] = int(out["finish"].max(initial=0))
@@ -271,5 +316,6 @@ def simulate_reference(trace, policy: str, *, total_nodes: int, machine=None,
                              machine=machine, alloc=alloc,
                              contention=contention)
     sim.load(trace["submit"], trace["runtime"], trace["nodes"],
-             trace.get("estimate"), trace.get("priority"))
+             trace.get("estimate"), trace.get("priority"),
+             deps=trace.get("deps"))
     return sim.run()

@@ -2,3 +2,4 @@ from repro.traces.swf import load_swf  # noqa: F401
 from repro.traces.synthetic import (  # noqa: F401
     das2_like, sdsc_sp2_like, synthetic_trace,
 )
+from repro.traces.workflows import workflow_to_trace  # noqa: F401

@@ -163,6 +163,43 @@ def sipht_like(width: int = 30, *, seed: int = 0) -> WorkflowDict:
 
 
 # ---------------------------------------------------------------------------
+# lowering: workflow DAG -> cluster job trace (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def workflow_to_trace(wf: WorkflowDict, *, submit: int = 0,
+                      priority: str | None = None) -> Dict[str, object]:
+    """Lower a workflow dict to a cluster job-trace dict with ``deps``.
+
+    Tasks become cluster jobs: ``exec_time`` -> runtime/estimate, the cpu
+    requirement (``resources[:, 0]``) -> node count (memory is a pool-model
+    resource with no cluster analogue and is dropped), and the DAG edges
+    ride along as ``deps`` pairs for ``make_jobset``.  Every task shares one
+    ``submit`` time — release order is driven purely by the dependency
+    structure, so wait = start - ready isolates queueing delay (paper
+    Fig. 7).  ``priority="cpath"`` attaches critical-path-length priorities
+    (longest path first) for the ``preempt`` policy.
+    """
+    et = np.asarray(wf["exec_time"], dtype=np.int64)
+    nodes = np.asarray(wf["resources"], dtype=np.int64)
+    if nodes.ndim == 2:
+        nodes = nodes[:, 0]
+    n = len(et)
+    trace: Dict[str, object] = {
+        "submit": np.full(n, int(submit), dtype=np.int64),
+        "runtime": et.copy(),
+        "estimate": et.copy(),
+        "nodes": np.maximum(nodes, 1),
+        "deps": [(int(t), int(d)) for t, d in wf["dep_pairs"]],
+    }
+    if priority == "cpath":
+        from repro.core.workflow import critical_path_length
+        trace["priority"] = critical_path_length(et, wf["dep_pairs"])
+    elif priority is not None:
+        raise ValueError(f"unknown workflow priority scheme {priority!r}")
+    return trace
+
+
+# ---------------------------------------------------------------------------
 # Paper Listing 2 JSON format
 # ---------------------------------------------------------------------------
 

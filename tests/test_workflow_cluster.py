@@ -1,0 +1,391 @@
+"""Dependency-aware cluster scheduling: differential + property blitz
+(ISSUE 3, DESIGN.md §13).
+
+- differential: ``run()`` vs ``run_ref()`` bit-exact for montage / galactic
+  / sipht / chain DAGs × all 6 policies × {scalar, mesh2d+contiguous,
+  dragonfly+topo}, including a deps+preemption case (a victim's dependents
+  must not release early);
+- property-based (hypothesis shim): random layered DAGs — no start before
+  deps finish or submit, node conservation at every event, makespan >= the
+  critical path, engine == refsim, and the no-deps JobSet reproduces the
+  seed schedule bit-for-bit;
+- windows: dependency releases spanning ``simulate_window`` round
+  boundaries, and multicluster conservative rounds with per-cluster DAGs;
+- sweep: a policy × alloc grid over one workflow DAG compiles once, and a
+  repeated sweep is a pure executable-cache hit.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.api import (
+    ArrayTrace, Multicluster, Scenario, SyntheticTrace, Topology,
+    WorkflowTrace, run, run_ref, sweep,
+)
+from repro.core import metrics
+from repro.core.engine import make_alloc_ctx, simulate, simulate_window
+from repro.core.jobs import (
+    DONE, INF_TIME, POLICY_IDS, SimState, make_jobset,
+)
+from repro.core.workflow import critical_path_length
+from repro.refsim import simulate_reference
+from repro.traces.workflows import random_layered, workflow_to_trace
+
+ALL_POLICIES = ("fcfs", "sjf", "ljf", "bestfit", "backfill", "preempt")
+
+# one shared row capacity pads every DAG to the same table shape, so the
+# whole differential matrix reuses a handful of compiled executables
+CAP = 64
+
+DAGS = {
+    "chain": WorkflowTrace(kind="chain", params=(("n", 10), ("exec_time", 40),
+                                                 ("cpu", 3))),
+    "montage": WorkflowTrace(kind="montage", params=(("width", 8),)),
+    "galactic": WorkflowTrace(kind="galactic", params=(("tiles", 2),
+                                                       ("width", 5))),
+    "sipht": WorkflowTrace(kind="sipht", params=(("width", 12),)),
+}
+
+CONFIGS = {
+    "scalar": dict(total_nodes=8),
+    "mesh2d_contiguous": dict(topology=Topology.mesh2d(8, 8),
+                              alloc="contiguous"),
+    "dragonfly_topo": dict(topology=Topology.dragonfly(8, 8), alloc="topo"),
+}
+
+
+# ---------------------------------------------------------------------------
+# differential: run() vs run_ref() over the full matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("config", sorted(CONFIGS))
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("dag", sorted(DAGS))
+def test_run_matches_ref_workflow_matrix(dag, policy, config):
+    scn = Scenario(trace=DAGS[dag], policy=policy, capacity=CAP,
+                   **CONFIGS[config])
+    ours, ref = run(scn), run_ref(scn)
+    with_maps = scn.topology is not None
+    assert ours.matches(ref, node_maps=with_maps), (dag, policy, config)
+    n = int(ref.to_np()["valid"].sum())
+    np.testing.assert_array_equal(ours["ready"][:n], ref["ready"])
+    np.testing.assert_array_equal(ours["wait"][:n], ref["wait"])
+    assert ours.to_np()["done"][:n].all()
+
+
+def test_workflow_wait_is_start_minus_ready_not_submit():
+    """All tasks submit at t=0 but deep tasks release late: the Fig. 7 wait
+    metric must charge queueing only from the release point."""
+    scn = Scenario(trace=DAGS["montage"], total_nodes=8, policy="fcfs",
+                   capacity=CAP)
+    out = run(scn).to_np()
+    v = out["valid"]
+    assert (out["submit"][v] == 0).all()
+    assert (out["ready"][v] > 0).any()          # non-root tasks release late
+    np.testing.assert_array_equal(
+        out["wait"][v], out["start"][v] - out["ready"][v])
+    assert (out["wait"][v] >= 0).all()
+    # summary() consumes the ready-based wait
+    s = run(scn).summary()
+    w = out["wait"][v & out["done"]].astype(float)
+    assert s["avg_wait"] == pytest.approx(w.mean())
+
+
+def test_cpath_priority_flows_through_preempt_policy():
+    spec = WorkflowTrace(kind="galactic", params=(("tiles", 2), ("width", 5)),
+                         priority="cpath")
+    trace = spec.materialize()
+    assert "priority" in trace
+    scn = Scenario(trace=spec, total_nodes=8, policy="preempt", capacity=CAP)
+    assert run(scn).matches(run_ref(scn))
+
+
+# ---------------------------------------------------------------------------
+# deps + preemption: a victim's dependents must not release early
+# ---------------------------------------------------------------------------
+
+
+def test_preempted_dependency_does_not_release_dependents():
+    # A (low priority, 4 nodes) starts at 0; B (high priority) preempts it at
+    # t=10; C depends on A.  A is WAITING (not DONE) while suspended, so C
+    # must release only at A's true finish (120), never at its preemption.
+    trace = {
+        "submit": np.array([0, 10, 0]),
+        "runtime": np.array([100, 20, 10]),
+        "nodes": np.array([4, 4, 2]),
+        "estimate": np.array([100, 20, 10]),
+        "priority": np.array([5, 0, 5]),
+        "deps": [(2, 0)],                      # C depends on A
+    }
+    scn = Scenario(trace=dict(trace), total_nodes=4, policy="preempt")
+    out = run(scn).to_np()
+    # rows sort to (submit, id): A=0, C=1, B=2
+    a, c, b = 0, 1, 2
+    assert out["start"][b] == 10               # preemptor waits zero seconds
+    assert out["finish"][a] == 120             # 10 run + 20 suspended + 90 left
+    assert out["ready"][c] == 120
+    assert out["start"][c] >= out["finish"][a]
+    ref = run_ref(scn)
+    assert run(scn).matches(ref)
+    np.testing.assert_array_equal(out["ready"][:3], ref["ready"])
+
+
+# ---------------------------------------------------------------------------
+# property-based: random layered DAGs
+# ---------------------------------------------------------------------------
+
+
+def dag_strategy():
+    @st.composite
+    def build(draw):
+        seed = draw(st.integers(0, 2**31 - 1))
+        layers = draw(st.integers(2, 6))
+        wf = random_layered(30, layers, p_edge=0.2, seed=seed)
+        return workflow_to_trace(wf)
+    return build()
+
+
+@settings(max_examples=25, deadline=None)
+@given(trace=dag_strategy(), policy=st.sampled_from(ALL_POLICIES),
+       total_nodes=st.sampled_from([8, 16]))
+def test_workflow_invariants(trace, policy, total_nodes):
+    jobs = make_jobset(trace["submit"], trace["runtime"], trace["nodes"],
+                       trace["estimate"], deps=trace["deps"],
+                       total_nodes=total_nodes)
+    res = simulate(jobs, POLICY_IDS[policy], total_nodes)
+    out = {k: np.asarray(getattr(res, k))
+           for k in ("start", "finish", "ready", "wait", "done")}
+    out.update(submit=np.asarray(jobs.submit), nodes=np.asarray(jobs.nodes),
+               runtime=np.asarray(jobs.runtime),
+               valid=np.asarray(jobs.valid), makespan=int(res.makespan))
+    v = out["valid"]
+    assert out["done"][v].all(), "every task completes"
+    # no start before submission, nor before the release point
+    assert (out["start"][v] >= out["submit"][v]).all()
+    assert (out["start"][v] >= out["ready"][v]).all()
+    # no job starts before ALL its dependencies finish
+    deps = np.asarray(jobs.deps)
+    for i, j in zip(*np.nonzero(deps)):
+        assert out["start"][i] >= out["finish"][j], (i, j)
+    # ready is exactly max(submit, last dep finish)
+    dep_fin = np.max(np.where(deps, out["finish"][None, :], 0), axis=1)
+    np.testing.assert_array_equal(
+        out["ready"][v], np.maximum(out["submit"], dep_fin)[v])
+    # node conservation at every event
+    t, occ = metrics.occupancy_series(out)
+    assert (occ <= total_nodes).all() and (occ >= 0).all()
+    # makespan is bounded below by the DAG's critical path
+    cp = -critical_path_length(out["runtime"][v], list(zip(*np.nonzero(deps))))
+    assert out["makespan"] >= int(cp.max())
+
+
+@settings(max_examples=15, deadline=None)
+@given(trace=dag_strategy(), policy=st.sampled_from(ALL_POLICIES))
+def test_workflow_engine_matches_refsim(trace, policy):
+    jobs = make_jobset(trace["submit"], trace["runtime"], trace["nodes"],
+                       trace["estimate"], deps=trace["deps"], total_nodes=16)
+    res = simulate(jobs, POLICY_IDS[policy], 16)
+    ref = simulate_reference(trace, policy, total_nodes=16)
+    n = len(ref["start"])
+    np.testing.assert_array_equal(np.asarray(res.start)[:n], ref["start"])
+    np.testing.assert_array_equal(np.asarray(res.finish)[:n], ref["finish"])
+    np.testing.assert_array_equal(np.asarray(res.ready)[:n], ref["ready"])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), policy=st.sampled_from(ALL_POLICIES))
+def test_no_deps_jobset_bit_identical_to_seed(seed, policy):
+    """deps=[] / all-False is statically elided: the JobSet pytree and the
+    schedule are bit-identical to a dependency-free (seed) construction."""
+    rng = np.random.default_rng(seed)
+    n = 30
+    trace = dict(submit=rng.integers(0, 200, n), runtime=rng.integers(1, 80, n),
+                 nodes=rng.integers(1, 9, n))
+    seed_jobs = make_jobset(**trace, total_nodes=16)
+    elided = make_jobset(**trace, deps=[], total_nodes=16)
+    dense0 = make_jobset(**trace, deps=np.zeros((n, n), bool), total_nodes=16)
+    assert elided.deps is None and dense0.deps is None
+    a = simulate(seed_jobs, POLICY_IDS[policy], 16)
+    b = simulate(elided, POLICY_IDS[policy], 16)
+    for field in ("start", "finish", "ready", "wait"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                      np.asarray(getattr(b, field)), field)
+
+
+def test_make_jobset_rejects_cycles_and_bad_pairs():
+    trace = dict(submit=[0, 0, 0], runtime=[1, 1, 1], nodes=[1, 1, 1])
+    with pytest.raises(ValueError, match="cycle"):
+        make_jobset(**trace, deps=[(0, 1), (1, 2), (2, 0)], total_nodes=4)
+    with pytest.raises(ValueError, match="self-dependency"):
+        make_jobset(**trace, deps=[(1, 1)], total_nodes=4)
+    with pytest.raises(ValueError, match="out of range"):
+        make_jobset(**trace, deps=[(0, 7)], total_nodes=4)
+
+
+def test_deps_follow_the_submit_sort_permutation():
+    """Dep pairs are given in input order; rows are sorted by (submit, id).
+    The matrix must be permuted with them."""
+    trace = dict(submit=[50, 0], runtime=[10, 10], nodes=[1, 1])
+    jobs = make_jobset(**trace, deps=[(0, 1)], total_nodes=2)  # input 0 needs 1
+    deps = np.asarray(jobs.deps)
+    # input job 1 (submit 0) sorts to row 0; input job 0 (submit 50) to row 1
+    assert deps[1, 0] and deps.sum() == 1
+    res = simulate(jobs, 0, 2)
+    assert np.asarray(res.start)[1] >= np.asarray(res.finish)[0]
+
+
+# ---------------------------------------------------------------------------
+# windows: releases spanning round boundaries
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_window_release_lands_in_a_later_round():
+    """chain tasks run 100 s each but the conservative window is 30 s: every
+    dependency release event falls 3+ rounds after its dependent was loaded,
+    and the round-by-round composition must equal the single-shot run."""
+    spec = WorkflowTrace(kind="chain", params=(("n", 4), ("exec_time", 100)))
+    trace = spec.materialize()
+    jobs = make_jobset(trace["submit"], trace["runtime"], trace["nodes"],
+                       trace["estimate"], deps=trace["deps"], total_nodes=4)
+    one_shot = simulate(jobs, POLICY_IDS["fcfs"], 4)
+
+    W, ev_cap = 30, 8 * jobs.capacity + 8
+    state = SimState.init(jobs, 4)
+    rounds_with_release = 0
+    prev_done = 0
+    for r in range(20):
+        state = simulate_window(np.int32(POLICY_IDS["fcfs"]), jobs, state,
+                                np.int32((r + 1) * W), ev_cap)
+        n_done = int((np.asarray(state.jstate) == DONE).sum())
+        rounds_with_release += n_done > prev_done
+        prev_done = n_done
+    state = simulate_window(np.int32(POLICY_IDS["fcfs"]), jobs, state,
+                            np.int32(INF_TIME), ev_cap)
+    assert rounds_with_release >= 3          # releases really did span rounds
+    np.testing.assert_array_equal(np.asarray(state.start),
+                                  np.asarray(one_shot.start))
+    np.testing.assert_array_equal(np.asarray(state.finish),
+                                  np.asarray(one_shot.finish))
+
+
+def test_simulate_window_with_alloc_ctx_and_deps():
+    spec = WorkflowTrace(kind="montage", params=(("width", 6),))
+    trace = spec.materialize()
+    machine = Topology.mesh2d(4, 4).build()
+    jobs = make_jobset(trace["submit"], trace["runtime"], trace["nodes"],
+                       trace["estimate"], deps=trace["deps"], total_nodes=16)
+    ctx = make_alloc_ctx(machine, "contiguous", None)
+    one_shot = simulate(jobs, POLICY_IDS["backfill"], 16, machine=machine,
+                        alloc="contiguous")
+    ev_cap = 8 * jobs.capacity + 8
+    state = SimState.init(jobs, 16, machine=machine, event_log=ev_cap)
+    for r in range(40):
+        state = simulate_window(np.int32(POLICY_IDS["backfill"]), jobs, state,
+                                np.int32((r + 1) * 25), ev_cap, ctx)
+    state = simulate_window(np.int32(POLICY_IDS["backfill"]), jobs, state,
+                            np.int32(INF_TIME), ev_cap, ctx)
+    np.testing.assert_array_equal(np.asarray(state.start),
+                                  np.asarray(one_shot.start))
+    np.testing.assert_array_equal(np.asarray(state.alloc_sum),
+                                  np.asarray(one_shot.alloc_sum))
+
+
+def test_multicluster_workflow_clusters_stay_independent():
+    """Jobs with dependency edges are pinned to their cluster, so a 2-DAG
+    multicluster run must equal each DAG's standalone schedule even with
+    migration enabled."""
+    specs = tuple(WorkflowTrace(kind="montage", seed=s, params=(("width", 6),))
+                  for s in (0, 1))
+    base = dict(trace=specs, total_nodes=8,
+                policy="fcfs", capacity=CAP)
+    mig = run(Scenario(**base, multicluster=Multicluster(window=50)))
+    no_mig = run(Scenario(**base,
+                          multicluster=Multicluster(window=50, migrate=False)))
+    np.testing.assert_array_equal(mig["start"], no_mig["start"])
+    assert mig.to_np()["migrated"] == 0
+    # per-cluster slice == standalone single-cluster run
+    for c, spec in enumerate(specs):
+        single = run(Scenario(trace=spec, total_nodes=8, policy="fcfs",
+                              capacity=CAP)).to_np()
+        sl = slice(c * CAP, (c + 1) * CAP)
+        np.testing.assert_array_equal(mig["start"][sl], single["start"])
+        np.testing.assert_array_equal(mig["ready"][sl], single["ready"])
+
+
+def test_multicluster_mixed_workflow_and_plain_clusters():
+    """One DAG cluster + one dependency-free cluster: the dep-free table is
+    padded with an all-False matrix so the stacked pytree is uniform, and
+    only dep-free jobs may migrate."""
+    scn = Scenario(
+        trace=(WorkflowTrace(kind="sipht", params=(("width", 8),)),
+               SyntheticTrace(n_jobs=40, seed=3, kind="das2", congest=20)),
+        total_nodes=16, policy="fcfs", capacity=CAP,
+        multicluster=Multicluster(window=100))
+    out = run(scn).to_np()
+    assert out["valid"].sum() == 18 + 40     # sipht(8) has 18 tasks
+    assert out["done"][out["valid"]].all()
+    assert out["dropped"] == 0
+
+
+# ---------------------------------------------------------------------------
+# sweep: workflow DAG grids compile once and cache across calls
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_policy_alloc_grid_over_workflow_single_executable():
+    from repro.api.sweep import _bucket_fn
+
+    scn = Scenario(trace=WorkflowTrace(kind="galactic",
+                                       params=(("tiles", 2), ("width", 5))),
+                   topology=Topology.mesh2d(8, 8), policy="fcfs", capacity=CAP)
+    axes = {"policy": ("fcfs", "sjf", "backfill"),
+            "alloc": ("simple", "contiguous")}
+    grid = sweep(scn, axes=axes)
+    assert len(grid) == 6
+    assert grid.n_compiles == 1              # one static bucket -> one executable
+    for point, res in grid:
+        assert res.matches(run_ref(res.scenario), node_maps=True), point
+
+    # re-running the same grid is a pure cache hit: the batched runner is
+    # resolved from the same lru slot (no new executable is built)
+    info_before = _bucket_fn.cache_info()
+    grid2 = sweep(scn, axes=axes)
+    info_after = _bucket_fn.cache_info()
+    assert info_after.misses == info_before.misses
+    assert info_after.hits > info_before.hits
+    for r1, r2 in zip(grid.results, grid2.results):
+        np.testing.assert_array_equal(r1.to_np()["start"], r2.to_np()["start"])
+
+
+def test_sweep_workflow_seed_is_traced_data():
+    """Same DAG shape, different seeds: the dep matrix is vmap data, so a
+    2-seed × 2-policy grid stays in one compile bucket."""
+    scn = Scenario(trace=WorkflowTrace(kind="random",
+                                       params=(("n_tasks", 24),
+                                               ("n_layers", 4))),
+                   total_nodes=8, policy="fcfs")
+    grid = sweep(scn, axes={"trace.seed": (0, 1),
+                            "policy": ("fcfs", "bestfit")})
+    assert grid.n_compiles == 1
+    for point, res in grid:
+        assert res.matches(run_ref(res.scenario)), point
+    a = grid.get(**{"trace.seed": 0}, policy="fcfs")
+    b = grid.get(**{"trace.seed": 1}, policy="fcfs")
+    assert not np.array_equal(a["runtime"], b["runtime"])
+
+
+def test_workflow_trace_spec_hygiene():
+    spec = WorkflowTrace(kind="montage", params=(("width", 8),))
+    assert spec.static_key() == WorkflowTrace(
+        kind="montage", seed=99, params=(("width", 8),)).static_key()
+    assert spec.n_rows == 29                 # 5*width - 1 + 6 montage stages
+    with pytest.raises(ValueError, match="unknown workflow kind"):
+        WorkflowTrace(kind="pegasus").materialize()
+    with pytest.raises(ValueError, match="unknown workflow priority"):
+        WorkflowTrace(priority="hef").materialize()
+    scn = Scenario(trace=spec, topology=Topology.mesh2d(4, 4), policy="fcfs")
+    assert isinstance(scn.with_(**{"trace.seed": 5}).trace, WorkflowTrace)
+    import repro
+    assert repro.WorkflowTrace is WorkflowTrace
