@@ -1,13 +1,23 @@
 """Measured §Perf track: DES engine throughput (events/s), JAX vs reference.
 
 This is the paper-side performance benchmark that hillclimbs iterate on —
-per-policy event throughput on a fixed trace, plus the Pallas queue_select
-hot-spot microbenchmark at scheduler-relevant queue sizes.
+per-policy event throughput on a fixed trace, a deps-heavy workflow case
+exercising the sparse dependency counters + batched scheduling pass
+(DESIGN.md §14), and the Pallas queue_select hot-spot microbenchmark at
+scheduler-relevant queue sizes.
+
+Besides the human-readable CSV rows it emits a machine-readable
+``results/BENCH_engine.json`` — one entry per case with events/s, run time
+and the compile/run split — so future PRs have a perf trajectory to regress
+against (acceptance floor for this PR: >= 3x events/s on the deps-heavy
+workflow case vs the dense-matrix engine, >= 1.0x on no-deps FCFS).
 """
 
 from __future__ import annotations
 
+import json
 import os
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -18,38 +28,122 @@ from repro.core.jobs import POLICY_IDS, make_jobset
 from repro.kernels.queue_select.ops import queue_select
 from repro.refsim import simulate_reference
 from repro.traces import sdsc_sp2_like
+from repro.traces.workflows import galactic_like, workflow_to_trace
+
+BENCH_JSON = "BENCH_engine.json"
 
 
-def main(outdir: str = "results") -> None:
+def _measure(jobs, policy: str, total_nodes: int, iters: int = 3) -> dict:
+    """events/s for one compiled engine call, with the compile/run split.
+
+    The first call pays trace+compile; steady-state is the median of at
+    least ``iters`` further calls, repeating (up to 15) until ~0.6 s of
+    samples accumulate so millisecond-scale cases aren't at the mercy of
+    scheduler noise.  ``n_events`` comes from the result itself, so the
+    rate is exact for any schedule.
+    """
+    pol = POLICY_IDS[policy]
+    t0 = time.perf_counter()
+    res = simulate(jobs, pol, total_nodes)
+    res.n_events.block_until_ready()
+    first = time.perf_counter() - t0
+    times = []
+    while len(times) < iters or (sum(times) < 0.6 and len(times) < 15):
+        t0 = time.perf_counter()
+        res = simulate(jobs, pol, total_nodes)
+        res.n_events.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    run_s = float(np.median(times))
+    n_events = int(res.n_events)
+    return {
+        "n_events": n_events,
+        "run_s": run_s,
+        "events_per_s": n_events / run_s,
+        "compile_s": max(first - run_s, 0.0),
+    }
+
+
+def _galactic_jobs(tiles: int, width: int, total_nodes: int):
+    """The deps-heavy workload: a chain-of-montage-tiles Galactic Plane DAG
+    lowered onto the cluster (PR 3's workload at benchmark scale)."""
+    trace = workflow_to_trace(galactic_like(tiles=tiles, width=width, seed=0))
+    jobs = make_jobset(
+        trace["submit"], trace["runtime"], trace["nodes"], trace["estimate"],
+        deps=trace["deps"], total_nodes=total_nodes,
+    )
+    meta = {"n_jobs": len(trace["submit"]), "n_edges": len(trace["deps"]),
+            "total_nodes": total_nodes}
+    return jobs, meta
+
+
+def run_bench(outdir: str = "results", *, smoke: bool = False) -> dict:
     os.makedirs(outdir, exist_ok=True)
-    J = 2000
+    report: dict = {"schema": 1, "smoke": smoke, "cases": {}}
+
+    # ---- no-deps policy throughput on the SDSC-SP2-like trace --------------
+    J = 200 if smoke else 2000
+    total_nodes = 128
     trace = sdsc_sp2_like(J, seed=13)
     jobs = make_jobset(trace["submit"], trace["runtime"], trace["nodes"],
-                       trace["estimate"], total_nodes=128)
+                       trace["estimate"], total_nodes=total_nodes)
     rows = []
     for pol in ("fcfs", "sjf", "bestfit", "backfill"):
-        t_jax = time_call(lambda: simulate(jobs, POLICY_IDS[pol], 128).n_events)
-        t_ref = time_call(
-            lambda: simulate_reference(trace, pol, total_nodes=128),
-            warmup=0, iters=1)
-        ev = 2 * J
-        rows.append((pol, t_jax, ev / t_jax, t_ref, ev / t_ref))
-        emit(f"des_throughput_{pol}", t_jax,
-             f"jax_events_per_s={ev / t_jax:.0f};ref_events_per_s={ev / t_ref:.0f}")
+        m = _measure(jobs, pol, total_nodes)
+        t0 = time.perf_counter()
+        ref = simulate_reference(trace, pol, total_nodes=total_nodes)
+        t_ref = time.perf_counter() - t0
+        ref_rate = ref["n_events"] / t_ref
+        report["cases"][f"nodeps_{pol}"] = {
+            **m, "trace": "sdsc_sp2_like", "n_jobs": J,
+            "total_nodes": total_nodes, "ref_events_per_s": ref_rate,
+        }
+        rows.append((pol, m["run_s"], m["events_per_s"], t_ref, ref_rate))
+        emit(f"des_throughput_{pol}", m["run_s"],
+             f"jax_events_per_s={m['events_per_s']:.0f};"
+             f"ref_events_per_s={ref_rate:.0f}")
     series_to_csv(os.path.join(outdir, "des_throughput.csv"),
                   ["policy", "t_jax_s", "jax_events_per_s", "t_ref_s",
                    "ref_events_per_s"], rows)
 
-    # scheduler hot-spot kernel at production queue sizes
+    # ---- deps-heavy workflow cases (sparse counters + batched pass) --------
+    wf_cases = ([("galactic_smoke", 2, 5, 16)] if smoke else
+                [("galactic521", 8, 20, 64), ("galactic8k", 200, 12, 256)])
+    for name, tiles, width, nodes in wf_cases:
+        gjobs, meta = _galactic_jobs(tiles, width, nodes)
+        for pol in ("fcfs", "backfill") if not smoke else ("fcfs",):
+            m = _measure(gjobs, pol, nodes, iters=1 if name == "galactic8k" else 3)
+            report["cases"][f"{name}_{pol}"] = {**m, **meta}
+            emit(f"des_throughput_{name}_{pol}", m["run_s"],
+                 f"jax_events_per_s={m['events_per_s']:.0f};"
+                 f"n_edges={meta['n_edges']}")
+
+    # ---- scheduler hot-spot kernel at production queue sizes ---------------
     rng = np.random.default_rng(0)
-    for N in (65_536, 1_048_576):
+    for N in ((65_536,) if smoke else (65_536, 1_048_576)):
         scores = jnp.asarray(rng.integers(0, 1 << 20, N).astype(np.int32))
         feas = jnp.asarray((rng.random(N) < 0.1).astype(np.int32))
         t = time_call(lambda: queue_select(scores, feas, tile=8192,
                                            interpret=True))
-        emit(f"queue_select_N{N}", t,
-             f"interpret_mode;GBps={(N * 8 / t) / 1e9:.2f}")
+        report["cases"][f"queue_select_N{N}"] = {"run_s": t,
+                                                 "GBps": (N * 8 / t) / 1e9}
+        emit(f"queue_select_N{N}", t, f"interpret_mode;GBps={(N * 8 / t) / 1e9:.2f}")
+
+    path = os.path.join(outdir, BENCH_JSON)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
+    return report
+
+
+def main(outdir: str = "results") -> None:
+    run_bench(outdir, smoke=False)
+
+
+def smoke(outdir: str = "results") -> None:
+    """CI dry pass: tiny sizes, same artifact schema (uploaded by CI)."""
+    run_bench(outdir, smoke=True)
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    smoke() if "--smoke" in sys.argv else main()

@@ -143,7 +143,8 @@ def _run_multicluster(scenario: Scenario) -> Result:
     traces = tuple(s.materialize() for s in specs)
     cap = _multicluster_capacity(scenario, traces)
     # clusters may mix DAG and plain traces: stack_jobsets pads the dep-free
-    # tables with all-False matrices to keep the stacked pytree uniform
+    # tables (and ragged edge lists) with inert out-of-range edges to keep
+    # the stacked pytree uniform
     jobsets = [
         make_jobset(t["submit"], t["runtime"], t["nodes"], t.get("estimate"),
                     t.get("priority"), deps=t.get("deps"), capacity=cap,

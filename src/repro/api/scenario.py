@@ -112,12 +112,15 @@ class WorkflowTrace:
     ``params`` are generator keyword arguments as (name, value) pairs —
     e.g. ``(("width", 16),)`` or ``(("tiles", 4), ("width", 8))``.  The DAG
     lowers through ``workflow_to_trace``: tasks become jobs (cpu requirement
-    -> node count), edges become the ``JobSet.deps`` matrix, and every task
-    shares one ``submit`` time so release order is purely dependency-driven.
+    -> node count), edges become the ``JobSet.dep_dst``/``dep_src`` edge
+    list (O(E) per vmap leaf, DESIGN.md §14), and every task shares one
+    ``submit`` time so release order is purely dependency-driven.
 
     The DAG *shape* (kind/params/submit/priority) is a static recompile
     axis; ``seed`` only perturbs task durations and random edges, so it is
-    traced sweep data exactly like ``SyntheticTrace.seed``.
+    traced sweep data exactly like ``SyntheticTrace.seed`` (a seed that
+    changes the edge *count* is fine — ``stack_jobsets`` pads ragged edge
+    lists to one shape inside the sweep bucket).
     ``priority="cpath"`` attaches critical-path priorities for ``preempt``.
     """
 

@@ -11,11 +11,14 @@ compiled executables as possible:
    machine) keys the bucket;
 3. within a bucket the remaining axes (``policy``, ``alloc``,
    ``contention``, ``total_nodes``, ``trace.seed``) are *data*: job tables
-   are stacked (dependency matrices of workflow traces included — a DAG's
-   *shape* is static but its edges are ordinary vmap leaves), scalar knobs
-   become i32[B] arrays, contention pytrees are leaf-stacked, and ONE
-   ``vmap``-ped executable runs the whole bucket — optionally sharded over
-   a 1-D device mesh;
+   are stacked (workflow dependency edge lists included — a DAG's *shape*
+   is static but its edges are ordinary vmap leaves; ``stack_jobsets`` pads
+   ragged edge counts to one shape), scalar knobs become i32[B] arrays,
+   contention pytrees are leaf-stacked, and ONE ``vmap``-ped executable
+   runs the whole bucket — optionally sharded over a 1-D device mesh.
+   Note the batched runner traces ``policy`` as data, so in-bucket points
+   run the engine's fully-dynamic path (DESIGN.md §14's static fast pass
+   applies to single ``run``/``simulate`` calls);
 4. the batched outputs are re-sliced into per-point :class:`Result`\\ s in
    grid order.
 

@@ -9,15 +9,34 @@ Event semantics, pinned identically in ``repro.refsim`` (DESIGN.md §8):
      and start it, until the selector returns -1.
 
 Dependencies (paper §3, DESIGN.md §13): when the job table carries a
-``deps`` matrix, a PENDING job arrives only when ``submit <= clock`` AND
-every dependency is DONE.  Dependents of a completing job are re-evaluated
-at the completion event itself (completions run before arrivals), so a
-released dependent joins the wait queue — and competes in the scheduling
-pass — at its last dependency's finish time.  ``deps is None`` statically
-elides every release check, compiling to the exact seed event graph.
+``dep_dst``/``dep_src`` edge list, a PENDING job arrives only when
+``submit <= clock`` AND every dependency is DONE.  Dependents of a
+completing job are re-evaluated at the completion event itself (completions
+run before arrivals), so a released dependent joins the wait queue — and
+competes in the scheduling pass — at its last dependency's finish time.
+The release test is the incremental counter ``SimState.n_unmet == 0``
+(DESIGN.md §14): completions decrement the counters in O(E) — CSR-gather
+in ``simulate``, scatter-add fallback in windows — replacing the two
+O(J²) dense-matrix reductions the engine used to pay per event.
+``dep_dst is None`` statically elides every release check, compiling to
+the exact seed event graph.
 
 Each event consumes at least one arrival or completion, so the loop runs at
 most ``2*J + 1`` iterations; ``max_events`` is a safety cap on top.
+
+Fast scheduling pass (DESIGN.md §14): when the job table carries
+dependencies, the policy is *statically* known to be a blocking
+head-of-queue discipline (FCFS/SJF/LJF), and the placement feasibility cap
+is the free counter (scalar-counter mode, or the count-capped
+``simple``/``spread`` strategies), the per-event scheduling pass reads the
+entire feasible prefix off a loop-invariant queue permutation (one sort
+per *call*, one O(J) cumsum per event) instead of re-running the policy
+selector after every start — DAG stage fronts start whole release waves
+in a single event.  Dependency-free tables, backfill, bestfit, preempt
+and the geometry-capped strategies keep the per-start loop (with the
+selector dispatched statically where known); the choice is made at trace
+time (a traced policy — e.g. a ``vmap``-ped sweep axis — always takes the
+seed loop), so no path pays for another's.
 
 Node allocation (DESIGN.md §11): with a ``Machine`` the engine additionally
 maintains the per-node occupancy map.  Completions free the completing
@@ -39,7 +58,7 @@ import jax.numpy as jnp
 from repro import alloc as _alloc
 from repro.core import policies
 from repro.core.jobs import (
-    DONE, INF_TIME, PENDING, RUNNING, WAITING,
+    DONE, FCFS, INF_TIME, LJF, PENDING, PREEMPT, RUNNING, SJF, WAITING,
     JobSet, SimResult, SimState, result_from_state,
 )
 
@@ -47,6 +66,41 @@ from repro.core.jobs import (
 # pytree tuple (machine, strategy_i32, contention); its None-ness is static
 # at trace time, so the scalar path compiles with zero allocation overhead.
 AllocCtx = tuple
+
+# Policies whose scheduling pass is a blocking head-of-(re)ordered-queue —
+# eligible for the batched sort+cumsum pass when known at trace time.
+_BLOCKING_POLICIES = (FCFS, SJF, LJF)
+# Strategies whose placement-feasibility cap IS the free counter; contiguous
+# (largest-free-run cap) and topo keep the per-start loop (DESIGN.md §14).
+_COUNT_CAPPED = (_alloc.SIMPLE, _alloc.SPREAD)
+
+
+def _concrete_int(x) -> Optional[int]:
+    """``int(x)`` when ``x`` is concrete at trace time, else ``None``.
+
+    Traced values (vmap sweep axes, jit arguments) return ``None`` — the
+    caller falls back to the fully dynamic seed path.
+    """
+    if x is None:
+        return None
+    try:
+        return int(x)
+    except (TypeError, ValueError, jax.errors.ConcretizationTypeError):
+        return None
+
+
+def _static_policy_hint(policy) -> Optional[int]:
+    """Concrete policy id clamped to the selector table, or ``None``.
+
+    THE one place the static hint is derived (``simulate`` and
+    ``simulate_window`` both call it), mirroring the dynamic path's
+    ``jnp.clip(policy, 0, 5)`` so a stray id picks the same selector
+    either way.
+    """
+    p = _concrete_int(policy)
+    if p is None:
+        return None
+    return min(max(p, 0), len(policies.SELECTOR_TABLE) - 1)
 
 
 def _release_nodes(state_owner: jax.Array, released: jax.Array,
@@ -112,10 +166,14 @@ def _preempt_for(jobs: JobSet, state: SimState, idx: jax.Array,
     need = jobs.nodes[idx] - state.free
     running = state.jstate == RUNNING
     lower = running & (jobs.priority > jobs.priority[idx])
-    # order victims by (priority desc, row desc): key = -(priority*J + row)
-    key = jnp.where(lower, -(jobs.priority * J + jnp.arange(J, dtype=jnp.int32)),
-                    jnp.int32(INF_TIME))
-    order = jnp.argsort(key)
+    # order victims by (priority desc, row desc) via a two-stage
+    # lexicographic sort — the packed key ``-(priority*J + row)`` the seed
+    # engine used overflows int32 for priorities near INF_TIME (mirrors
+    # select_preempt's two-stage argmin; non-victims sort last)
+    rows = jnp.arange(J, dtype=jnp.int32)
+    big = jnp.int32(INF_TIME)
+    order = jnp.lexsort((jnp.where(lower, -rows, big),
+                         jnp.where(lower, -jobs.priority, big)))
     nodes_o = jnp.where(lower, jobs.nodes, 0)[order]
     cum = jnp.cumsum(nodes_o)
     # preempt the minimal prefix whose cumulative nodes cover the deficit
@@ -140,16 +198,107 @@ def _preempt_for(jobs: JobSet, state: SimState, idx: jax.Array,
 
 
 def _select(policy: jax.Array, jobs: JobSet, state: SimState,
-            ctx: Optional[AllocCtx]) -> jax.Array:
+            ctx: Optional[AllocCtx],
+            static_policy: Optional[int] = None) -> jax.Array:
     """Policy selection under the active allocation feasibility cap."""
     cap = (state.free if ctx is None
            else _alloc.placeable_cap(ctx[1], state.node_owner))
-    return policies.select(policy, jobs, state, cap)
+    return policies.select(policy, jobs, state, cap,
+                           static_policy=static_policy)
+
+
+def blocking_order(jobs: JobSet, static_policy: int) -> jax.Array:
+    """Loop-invariant queue permutation for a blocking policy.
+
+    The blocking policies key on ``submit``/``estimate``/``-estimate``,
+    all invariant for the lifetime of a ``simulate`` (or window) call — so
+    the (key, row) sort the batched pass needs is computed ONCE per call,
+    outside the event loop, not once per event (stable sort ⇒ ties break
+    by row, matching ``_lex_argmin``).
+    """
+    key = {FCFS: jobs.submit, SJF: jobs.estimate,
+           LJF: -jobs.estimate}[static_policy]
+    return jnp.argsort(key, stable=True)
+
+
+def _batched_pass(jobs: JobSet, state: SimState, ctx: Optional[AllocCtx],
+                  order: jax.Array) -> SimState:
+    """Start the whole feasible prefix of the waiting queue in one shot.
+
+    For a blocking head-of-queue policy with a free-counter feasibility cap,
+    the sequential pass is: walk waiting jobs in policy-key order, start
+    each while it still fits, stop at the first that does not.  Node counts
+    are >= 1, so the started set is exactly the longest key-ordered waiting
+    prefix whose node cumsum stays <= free — one O(J) cumsum over the
+    precomputed ``blocking_order`` permutation replaces the whole
+    select-one-start-one loop (DESIGN.md §14), bit-identical to it by
+    construction.  (Non-waiting rows contribute zero to the cumsum, and the
+    cumsum strictly increases across waiting rows, so masking with the
+    waiting flag yields exactly the sequential prefix.)  The starts are
+    then applied selector-free, in key order; with a count-capped strategy
+    the same loop additionally runs each job's node placement.
+    """
+    waiting = state.jstate == WAITING
+    w_sorted = waiting[order]
+    cum = jnp.cumsum(jnp.where(w_sorted, jobs.nodes[order], 0))
+    take = (cum <= state.free) & w_sorted     # longest feasible prefix
+    n_take = jnp.cumsum(take.astype(jnp.int32))
+    n_started = n_take[-1]
+
+    # Apply the starts one row at a time: the i-th started row is found by
+    # binary search on the running take-count (scatter-free compaction),
+    # and each start is a handful of single-element in-place updates — far
+    # cheaper on XLA:CPU than rewriting four J-sized arrays with masked
+    # `where`s on every event.
+    if ctx is not None:
+        # allocation mode: placements mutate the node map, so reuse the
+        # full `_start_job` (the fori carries the whole state)
+        def place(i, st):
+            pos = jnp.searchsorted(n_take, i + 1)
+            return _start_job(jobs, st, order[pos], ctx)
+
+        return jax.lax.fori_loop(0, n_started, place, state)
+
+    # scalar-counter mode: carry ONLY the five leaves a start touches —
+    # XLA copies every carried buffer at the loop boundary per event, so a
+    # full-state carry would tax the (common) zero-start event with ~10
+    # J-sized copies and halve trickle-workload throughput
+    def place_slim(i, carry):
+        jstate, start, finish, rsv, free = carry
+        pos = jnp.searchsorted(n_take, i + 1)
+        idx = order[pos]
+        t0 = state.clock
+        return (
+            jstate.at[idx].set(RUNNING),
+            start.at[idx].set(jnp.minimum(start[idx], t0)),
+            finish.at[idx].set(t0 + state.remaining[idx]),
+            rsv.at[idx].set(t0 + jobs.estimate[idx]),
+            free - jobs.nodes[idx],
+        )
+
+    jstate, start, finish, rsv, free = jax.lax.fori_loop(
+        0, n_started, place_slim,
+        (state.jstate, state.start, state.finish, state.rsv_finish,
+         state.free),
+    )
+    return dataclasses.replace(
+        state, jstate=jstate, start=start, finish=finish, rsv_finish=rsv,
+        free=free)
 
 
 def _schedule_pass(policy: jax.Array, jobs: JobSet, state: SimState,
-                   ctx: Optional[AllocCtx]) -> SimState:
-    """Start jobs until the policy blocks (Algorithm 1 lines 16-21)."""
+                   ctx: Optional[AllocCtx],
+                   static_policy: Optional[int] = None,
+                   fast_order: Optional[jax.Array] = None) -> SimState:
+    """Start jobs until the policy blocks (Algorithm 1 lines 16-21).
+
+    Dispatches *at trace time* between the batched prefix pass (when the
+    caller precomputed a ``blocking_order`` permutation) and the per-start
+    selector loop — a traced policy (``static_policy is None``) always
+    compiles the seed loop, so vmapped sweeps pay nothing extra.
+    """
+    if fast_order is not None:
+        return _batched_pass(jobs, state, ctx, fast_order)
 
     def cond(carry):
         _, idx = carry
@@ -157,43 +306,57 @@ def _schedule_pass(policy: jax.Array, jobs: JobSet, state: SimState,
 
     def body(carry):
         st, idx = carry
-        st = jax.lax.cond(
-            jobs.nodes[idx] <= st.free,
-            lambda s: s,
-            lambda s: _preempt_for(jobs, s, idx, ctx),  # preempt policy only
-            st,
-        )
+        if static_policy is None or static_policy == PREEMPT:
+            st = jax.lax.cond(
+                jobs.nodes[idx] <= st.free,
+                lambda s: s,
+                lambda s: _preempt_for(jobs, s, idx, ctx),  # preempt only
+                st,
+            )
         st = _start_job(jobs, st, idx, ctx)
-        return st, _select(policy, jobs, st, ctx)
+        return st, _select(policy, jobs, st, ctx, static_policy)
 
     state, _ = jax.lax.while_loop(
-        cond, body, (state, _select(policy, jobs, state, ctx))
+        cond, body, (state, _select(policy, jobs, state, ctx, static_policy))
     )
     return state
 
 
-def _released(jobs: JobSet, jstate: jax.Array) -> jax.Array | None:
-    """Dependency release mask: True where every dependency is DONE.
+def dep_csr(jobs: JobSet) -> Optional[tuple]:
+    """Loop-invariant CSR row bounds over the (dst-sorted) edge list.
 
-    ``None`` when the job table carries no dependency matrix — the static
-    elision that keeps the no-deps path compiling to the exact seed graph.
+    ``dep_dst`` is emitted dst-ascending by ``make_jobset`` with padding
+    (index ``capacity``) at the tail, so per-row edge ranges are two
+    ``searchsorted`` arrays computed once per ``simulate`` call.  The event
+    loop then updates ``n_unmet`` with gathers + one cumsum instead of an
+    E-sized scatter-add (~100x cheaper on XLA:CPU; padding edges sit past
+    every row's range and drop out for free).  Returns ``None`` for
+    edge-free tables.  Callers whose edge lists may have lost dst order
+    (multicluster windows after defensive edge neutralization) must keep
+    the scatter-add fallback.
     """
-    if jobs.deps is None:
+    if jobs.dep_dst is None:
         return None
-    unmet = jobs.deps & (jstate != DONE)[None, :]
-    return ~jnp.any(unmet, axis=1)
+    J = jobs.capacity
+    rows = jnp.arange(J + 1, dtype=jobs.dep_dst.dtype)
+    bounds = jnp.searchsorted(jobs.dep_dst, rows)
+    return bounds[:-1], bounds[1:]
 
 
 def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
-                ctx: Optional[AllocCtx] = None) -> SimState:
+                ctx: Optional[AllocCtx] = None,
+                static_policy: Optional[int] = None,
+                fast_order: Optional[jax.Array] = None,
+                csr: Optional[tuple] = None) -> SimState:
     pending = state.jstate == PENDING
     running = state.jstate == RUNNING
+    has_deps = jobs.dep_dst is not None
 
     # A PENDING job generates an arrival event only once its dependencies
     # are DONE; unreleased dependents are invisible to the clock (and to
-    # backfill's shadow math, which never sees them as WAITING).
-    rel = _released(jobs, state.jstate)
-    arrivable = pending if rel is None else pending & rel
+    # backfill's shadow math, which never sees them as WAITING).  The
+    # pre-completion release mask is the standing counter — no recompute.
+    arrivable = pending & (state.n_unmet == 0) if has_deps else pending
     t_arr = jnp.min(jnp.where(arrivable, jobs.submit, INF_TIME))
     t_fin = jnp.min(jnp.where(running, state.finish, INF_TIME))
     clock = jnp.minimum(t_arr, t_fin)
@@ -206,24 +369,38 @@ def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
                   else _release_nodes(state.node_owner, completed, jobs.capacity))
 
     # arrivals — dependents of this event's completions release *now*
-    # (paper §3 release rule): re-evaluate readiness after completions so a
-    # job whose last dependency just finished joins the wait queue in the
-    # same event, with ready_time = max(submit, last dep finish).
+    # (paper §3 release rule): each RUNNING->DONE transition happens exactly
+    # once, so decrementing n_unmet along the completing jobs' out-edges
+    # keeps the counters exact; a job whose last dependency just finished
+    # joins the wait queue in the same event, with ready_time = max(submit,
+    # last dep finish).  Padding edges scatter out of range and drop.
+    n_unmet = state.n_unmet
+    if has_deps:
+        J = jobs.capacity
+        dec = completed[jnp.clip(jobs.dep_src, 0, J - 1)].astype(jnp.int32)
+        if csr is not None:
+            row_start, row_end = csr
+            c = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                 jnp.cumsum(dec)])
+            n_unmet = n_unmet - (c[row_end] - c[row_start])
+        else:
+            n_unmet = n_unmet.at[jobs.dep_dst].add(-dec, mode="drop")
     arrived = (jstate == PENDING) & (jobs.submit <= clock)
-    rel = _released(jobs, jstate)
-    if rel is not None:
-        arrived = arrived & rel
+    if has_deps:
+        arrived = arrived & (n_unmet == 0)
     jstate = jnp.where(arrived, WAITING, jstate)
 
     state = dataclasses.replace(
         state,
         clock=clock,
         jstate=jstate,
+        n_unmet=n_unmet,
         free=state.free + freed,
         n_events=state.n_events + 1,
         node_owner=node_owner,
     )
-    state = _schedule_pass(policy, jobs, state, ctx)
+    state = _schedule_pass(policy, jobs, state, ctx, static_policy,
+                           fast_order)
     if ctx is None:
         return state
     # fragmentation log: one (clock, free, largest-free-block) row per event
@@ -298,15 +475,27 @@ def simulate(
     ``total_nodes``) each start places concrete nodes under the ``alloc``
     strategy and the result carries allocation fingerprints plus the
     per-event fragmentation log.
+
+    When ``policy`` (and, with a machine, ``alloc``) is concrete at call
+    time, the executable specializes on it: the policy selector dispatches
+    directly instead of through ``lax.switch``, and the blocking policies
+    take the batched scheduling pass (DESIGN.md §14).  Each concrete policy
+    then compiles its own executable; traced values (vmap axes) keep the
+    shared fully-dynamic executable with seed semantics.
     """
     ctx = make_alloc_ctx(machine, alloc, contention, total_nodes)
+    static_policy = _static_policy_hint(policy)
+    static_strategy = _concrete_int(ctx[1]) if ctx is not None else None
     return _simulate_jit(
         jobs, jnp.asarray(policy, dtype=jnp.int32),
         jnp.asarray(total_nodes, dtype=jnp.int32), ctx, max_events=max_events,
+        static_policy=static_policy, static_strategy=static_strategy,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("max_events",))
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_events", "static_policy", "static_strategy"))
 def _simulate_jit(
     jobs: JobSet,
     policy: jax.Array,
@@ -314,26 +503,56 @@ def _simulate_jit(
     ctx: Optional[AllocCtx],
     *,
     max_events: Optional[int] = None,
+    static_policy: Optional[int] = None,
+    static_strategy: Optional[int] = None,
 ) -> SimResult:
     cap = max_events if max_events is not None else 6 * jobs.capacity + 8
     machine = ctx[0] if ctx is not None else None
     state = SimState.init(jobs, total_nodes, machine=machine, event_log=cap)
+    fast_order = _fast_order(jobs, ctx, static_policy, static_strategy)
+    csr = dep_csr(jobs)   # jobs are immutable here, dst order guaranteed
 
     def cond(st: SimState):
         unfinished = jnp.any((st.jstate != DONE))
         return unfinished & (st.n_events < cap)
 
     state = jax.lax.while_loop(
-        cond, lambda st: _event_step(policy, jobs, st, ctx), state
+        cond,
+        lambda st: _event_step(policy, jobs, st, ctx, static_policy,
+                               fast_order, csr),
+        state,
     )
     return result_from_state(jobs, state)
+
+
+def _fast_order(jobs: JobSet, ctx: Optional[AllocCtx],
+                static_policy: Optional[int],
+                static_strategy: Optional[int]) -> Optional[jax.Array]:
+    """The loop-invariant batched-pass permutation, or ``None`` when the
+    combination keeps the per-start selector loop (DESIGN.md §14
+    eligibility table).
+
+    The batched pass needs a blocking policy and a free-counter feasibility
+    cap, and it only *pays* on workloads whose events start many jobs at
+    once — which is the dependency-carrying tables (DAG stage fronts
+    release whole waves into one event; measured 7-90x there).  Dependency-
+    free traces trickle arrivals in, so their typical event starts 0-1
+    jobs and the per-event selection prefix would tax every event; they
+    keep the selector loop (measured at or above seed throughput with the
+    static selector dispatch).  All three paths are bit-identical — this
+    is purely a trace-time cost model.
+    """
+    if jobs.dep_dst is not None and static_policy in _BLOCKING_POLICIES \
+            and (ctx is None or static_strategy in _COUNT_CAPPED):
+        return blocking_order(jobs, static_policy)
+    return None
 
 
 def next_event_time(jobs: JobSet, state: SimState) -> jax.Array:
     pending = state.jstate == PENDING
     running = state.jstate == RUNNING
-    rel = _released(jobs, state.jstate)
-    arrivable = pending if rel is None else pending & rel
+    arrivable = (pending & (state.n_unmet == 0)
+                 if jobs.dep_dst is not None else pending)
     t_arr = jnp.min(jnp.where(arrivable, jobs.submit, INF_TIME))
     t_fin = jnp.min(jnp.where(running, state.finish, INF_TIME))
     return jnp.minimum(t_arr, t_fin)
@@ -351,14 +570,22 @@ def simulate_window(
 
     The multi-cluster engine (``repro.core.parallel``) calls this once per
     synchronization round — the JAX analogue of SST's conservative
-    per-lookahead-window execution (DESIGN.md §2).
+    per-lookahead-window execution (DESIGN.md §2).  ``policy`` is usually a
+    closed-over concrete array here, so the fast-path specialization
+    resolves at trace time exactly as in ``simulate``.
     """
+    static_policy = _static_policy_hint(policy)
+    static_strategy = _concrete_int(ctx[1]) if ctx is not None else None
+    fast_order = _fast_order(jobs, ctx, static_policy, static_strategy)
 
     def cond(st: SimState):
         return (next_event_time(jobs, st) <= t_hi) & (st.n_events < max_events)
 
     return jax.lax.while_loop(
-        cond, lambda st: _event_step(policy, jobs, st, ctx), state
+        cond,
+        lambda st: _event_step(policy, jobs, st, ctx, static_policy,
+                               fast_order),
+        state,
     )
 
 

@@ -59,13 +59,19 @@ class JobSet:
     (drives completion events) — mirroring how CQsim treats walltime vs. run
     time.
 
-    ``deps`` makes task dependencies a first-class axis of the cluster
-    engine (paper §3, DESIGN.md §13): ``deps[i, j]`` means job *i* cannot
-    enter the wait queue until job *j* is DONE.  It is ``None`` (statically
-    elided — the engine compiles to the exact seed path) for plain job
-    traces, and a dense ``bool[J, J]`` for workflow traces; being a pytree
-    leaf it batches through ``vmap`` ensembles and ``sweep()`` like any
-    other job attribute.
+    ``dep_dst``/``dep_src`` make task dependencies a first-class axis of the
+    cluster engine (paper §3, DESIGN.md §13/§14): edge *e* means job
+    ``dep_dst[e]`` cannot enter the wait queue until job ``dep_src[e]`` is
+    DONE.  The edge list is a *static-shape* padded representation — real
+    edges first, padding slots hold the out-of-range index ``capacity`` so
+    every scatter (``.at[...]`` with ``mode="drop"``) ignores them — which
+    keeps dependency memory at O(E) instead of the dense matrix's O(J²) and
+    lets the engine maintain an incremental unmet-dependency counter
+    (``SimState.n_unmet``) instead of re-reducing a matrix per event.  Both
+    are ``None`` (statically elided — the engine compiles to the exact seed
+    path) for plain job traces; being pytree leaves they batch through
+    ``vmap`` ensembles and ``sweep()`` like any other job attribute
+    (``stack_jobsets`` pads ragged edge counts to one shape).
     """
 
     submit: jax.Array    # i32[J]
@@ -74,11 +80,34 @@ class JobSet:
     nodes: jax.Array     # i32[J]  requested nodes, >= 1
     priority: jax.Array  # i32[J]  lower = more important (preempt policy)
     valid: jax.Array     # bool[J]
-    deps: jax.Array | None = None  # bool[J, J] or None (no dependencies)
+    dep_dst: jax.Array | None = None  # i32[E] dependent row  (capacity = pad)
+    dep_src: jax.Array | None = None  # i32[E] dependency row (capacity = pad)
 
     @property
     def capacity(self) -> int:
         return self.submit.shape[-1]
+
+    @property
+    def edge_capacity(self) -> int:
+        """Padded edge-list length (0 when the table carries no edges)."""
+        return 0 if self.dep_dst is None else self.dep_dst.shape[-1]
+
+    @property
+    def deps(self) -> jax.Array | None:
+        """Dense ``bool[J, J]`` reconstruction of the edge list (or ``None``).
+
+        Host-side convenience for tests/metrics on a single (unbatched) job
+        table; the engine itself never materializes this matrix.
+        """
+        if self.dep_dst is None:
+            return None
+        if self.dep_dst.ndim != 1:
+            raise ValueError(
+                "JobSet.deps reconstructs the dense matrix for unbatched "
+                "tables only; index into the batch dimension first")
+        J = self.capacity
+        return jnp.zeros((J, J), dtype=bool).at[
+            self.dep_dst, self.dep_src].set(True, mode="drop")
 
     def num_valid(self) -> jax.Array:
         return jnp.sum(self.valid.astype(jnp.int32), axis=-1)
@@ -137,6 +166,23 @@ def _dense_deps(deps, n: int) -> np.ndarray:
     return dense
 
 
+# Edge-list pads round up to this multiple so DAGs with nearby edge counts
+# share one compiled shape (the differential-test matrix reuses executables).
+_EDGE_ALIGN = 64
+
+
+def dep_edge_arrays(deps, n: int, order: np.ndarray) -> tuple:
+    """Normalize ``deps`` to (dst, src) index arrays in *sorted-row*
+    coordinates, in (dst, src) lexicographic order.
+
+    One shared path (validation + cycle check + sort permutation) for
+    ``make_jobset`` and ``repro.refsim.ReferenceSimulator.load``, so both
+    engines derive bit-identical edge sets from the same input.
+    """
+    dense = _dense_deps(deps, n)[order][:, order]
+    return np.nonzero(dense)
+
+
 def make_jobset(
     submit,
     runtime,
@@ -146,6 +192,7 @@ def make_jobset(
     *,
     deps=None,
     capacity: int | None = None,
+    edge_capacity: int | None = None,
     total_nodes: int | None = None,
 ) -> JobSet:
     """Build a normalized ``JobSet`` from host arrays.
@@ -157,9 +204,12 @@ def make_jobset(
 
     ``deps`` is either an iterable of ``(job, dependency)`` index pairs or a
     dense bool matrix, both in *input* order (indices into ``submit``); it is
-    cycle-checked, permuted into the sorted row order, and padded.  An empty
-    or all-False ``deps`` is elided to ``None`` so the no-dependency case
-    compiles to the exact seed path.
+    cycle-checked, permuted into the sorted row order, and lowered to the
+    padded ``dep_dst``/``dep_src`` edge list (length rounded up to a multiple
+    of 64, or exactly ``edge_capacity`` when given; padding slots hold the
+    out-of-range index ``capacity``).  An empty or all-False ``deps`` is
+    elided to ``None`` so the no-dependency case compiles to the exact seed
+    path.
     """
     submit = np.asarray(submit, dtype=np.int64)
     runtime = np.asarray(runtime, dtype=np.int64)
@@ -196,12 +246,22 @@ def make_jobset(
     if cap < n:
         raise ValueError(f"capacity {cap} < number of jobs {n}")
 
-    dep_mat = None
+    dep_dst = dep_src = None
     if deps is not None:
-        dense = _dense_deps(deps, n)
-        if dense.any():
-            dep_mat = np.zeros((cap, cap), dtype=bool)
-            dep_mat[:n, :n] = dense[order][:, order]
+        dst, src = dep_edge_arrays(deps, n, order)
+        n_edges = int(dst.size)
+        if n_edges:
+            if edge_capacity is None:
+                ecap = -(-n_edges // _EDGE_ALIGN) * _EDGE_ALIGN
+            else:
+                ecap = int(edge_capacity)
+                if ecap < n_edges:
+                    raise ValueError(
+                        f"edge_capacity {ecap} < number of edges {n_edges}")
+            dep_dst = np.full((ecap,), cap, dtype=np.int32)
+            dep_src = np.full((ecap,), cap, dtype=np.int32)
+            dep_dst[:n_edges] = dst
+            dep_src[:n_edges] = src
 
     def pad(a, fill):
         out = np.full((cap,), fill, dtype=np.int32)
@@ -217,7 +277,8 @@ def make_jobset(
         nodes=jnp.asarray(pad(nodes, 1)),
         priority=jnp.asarray(pad(priority, 0)),
         valid=jnp.asarray(valid),
-        deps=None if dep_mat is None else jnp.asarray(dep_mat),
+        dep_dst=None if dep_dst is None else jnp.asarray(dep_dst),
+        dep_src=None if dep_src is None else jnp.asarray(dep_src),
     )
 
 
@@ -235,10 +296,18 @@ class SimState:
     of 1-based node ids) for cross-engine node-map validation; the ``ev_*``
     ring records (clock, free nodes, largest free contiguous run) per event
     for fragmentation metrics.
+
+    ``n_unmet`` is the incremental unmet-dependency counter (DESIGN.md §14):
+    ``n_unmet[i]`` counts dependencies of job *i* not yet DONE, decremented
+    by an O(E) scatter-add at each completion event, so the release test is
+    an O(J) compare instead of an O(J²) matrix reduction.  Zero-size
+    placeholder when the job table carries no edges (same elision pattern as
+    the allocation fields).
     """
 
     clock: jax.Array        # i32 scalar
     jstate: jax.Array       # i32[J] in {PENDING, WAITING, RUNNING, DONE}
+    n_unmet: jax.Array      # i32[J] unmet-dependency count; [0] w/o deps
     start: jax.Array        # i32[J] FIRST start time (INF until started)
     finish: jax.Array       # i32[J] actual completion time (INF until started)
     rsv_finish: jax.Array   # i32[J] start + estimate; EASY shadow math input
@@ -261,9 +330,15 @@ class SimState:
         L = int(event_log) if machine is not None else 0
         inf = jnp.full((J,), INF_TIME, dtype=jnp.int32)
         jstate = jnp.where(jobs.valid, jnp.int32(PENDING), jnp.int32(DONE))
+        if jobs.dep_dst is None:
+            n_unmet = jnp.zeros((0,), dtype=jnp.int32)
+        else:
+            n_unmet = jnp.zeros((J,), dtype=jnp.int32).at[jobs.dep_dst].add(
+                1, mode="drop")
         return cls(
             clock=jnp.int32(0),
             jstate=jstate,
+            n_unmet=n_unmet,
             start=inf,
             finish=inf,
             rsv_finish=inf,
@@ -305,15 +380,17 @@ class SimResult:
 
 
 def result_from_state(jobs: JobSet, state: SimState) -> SimResult:
-    if jobs.deps is None:
+    if jobs.dep_dst is None:
         ready = jobs.submit
     else:
         # a job becomes *ready* when its last dependency finishes (submit for
         # roots); dep finishes are final whenever the job released, so the
-        # post-hoc max is exact for every DONE job.
-        dep_fin = jnp.max(
-            jnp.where(jobs.deps, state.finish[None, :], 0), axis=1
-        ).astype(jnp.int32)
+        # post-hoc segment-max over the edge list is exact for every DONE
+        # job (O(E), padding edges scatter out of range and drop).
+        J = jobs.capacity
+        src_fin = state.finish[jnp.clip(jobs.dep_src, 0, J - 1)]
+        dep_fin = jnp.zeros((J,), dtype=jnp.int32).at[jobs.dep_dst].max(
+            src_fin, mode="drop")
         ready = jnp.maximum(jobs.submit, dep_fin)
     wait = jnp.where(jobs.valid, state.start - ready, 0).astype(jnp.int32)
     fin = jnp.where(jobs.valid & (state.jstate == DONE), state.finish, 0)

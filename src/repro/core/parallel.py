@@ -41,20 +41,31 @@ from repro.core.jobs import (
 def stack_jobsets(jobsets: list[JobSet]) -> JobSet:
     """Stack equally-sized JobSets into a leading batch dimension.
 
-    Members may mix ``deps=None`` and dependency matrices (e.g. a sweep over
-    DAG seeds where one seed happens to generate zero edges): the dep-free
-    tables are padded with all-False matrices so every member shares one
-    pytree structure.  Their release checks are trivially true, so schedules
-    are unchanged.
+    Members may mix edge-free tables (``dep_dst is None``) and edge lists of
+    *different* padded lengths (e.g. a sweep over DAG seeds where each seed
+    generates a different edge count, or one seed generates zero edges):
+    every member is padded to the longest edge list with inert out-of-range
+    edges (index = capacity, the same padding ``make_jobset`` emits), so the
+    stacked pytree is uniform.  Padding edges scatter out of bounds and
+    drop, so schedules are unchanged.
     """
-    if any(j.deps is not None for j in jobsets) \
-            and any(j.deps is None for j in jobsets):
-        jobsets = [
-            j if j.deps is not None
-            else dataclasses.replace(
-                j, deps=jnp.zeros((j.capacity, j.capacity), dtype=bool))
-            for j in jobsets
-        ]
+    if any(j.dep_dst is not None for j in jobsets):
+        ecap = max(j.edge_capacity for j in jobsets)
+
+        def pad_edges(j: JobSet) -> JobSet:
+            extra = ecap - j.edge_capacity
+            if extra == 0:
+                return j
+            fill = jnp.full((extra,), j.capacity, dtype=jnp.int32)
+            if j.dep_dst is None:
+                return dataclasses.replace(j, dep_dst=fill, dep_src=fill)
+            return dataclasses.replace(
+                j,
+                dep_dst=jnp.concatenate([j.dep_dst, fill]),
+                dep_src=jnp.concatenate([j.dep_src, fill]),
+            )
+
+        jobsets = [pad_edges(j) for j in jobsets]
     return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *jobsets)
 
 
@@ -189,8 +200,14 @@ def _export_jobs(jobs: JobSet, state: SimState, t_hi, latency, max_export: int,
     """
     J = jobs.capacity
     movable = ((state.jstate == WAITING) | (state.jstate == PENDING)) & jobs.valid
-    if jobs.deps is not None:
-        has_edges = jnp.any(jobs.deps, axis=1) | jnp.any(jobs.deps, axis=0)
+    if jobs.dep_dst is not None:
+        # rows touched by any live edge (either endpoint) are pinned;
+        # padding / neutralized edges hold index J and drop out
+        has_edges = (
+            jnp.zeros((J,), bool)
+            .at[jobs.dep_dst].set(True, mode="drop")
+            .at[jobs.dep_src].set(True, mode="drop")
+        )
         movable = movable & ~has_edges
     # rank movable jobs by descending submit (non-movable sort last)
     key = jnp.where(movable, -jobs.submit, jnp.int32(INF_TIME))
@@ -232,12 +249,14 @@ def _import_jobs(jobs: JobSet, state: SimState, flat):
     rows = jnp.where(can, rows, J)  # J = out-of-bounds => dropped by mode="drop"
 
     # imported jobs are dependency-free by construction (_export_jobs pins
-    # edge endpoints), but clear the landing rows defensively so a reused
-    # row can never inherit stale edges
-    new_deps = jobs.deps
-    if new_deps is not None:
-        new_deps = new_deps.at[rows].set(False, mode="drop")
-        new_deps = new_deps.at[:, rows].set(False, mode="drop")
+    # edge endpoints), but neutralize edges touching the landing rows
+    # defensively — both endpoints move to the out-of-range pad index J —
+    # so a reused row can never inherit stale edges
+    new_dst, new_src = jobs.dep_dst, jobs.dep_src
+    if new_dst is not None:
+        hit = jnp.isin(new_dst, rows) | jnp.isin(new_src, rows)
+        new_dst = jnp.where(hit, jnp.int32(J), new_dst)
+        new_src = jnp.where(hit, jnp.int32(J), new_src)
     jobs = JobSet(
         submit=jobs.submit.at[rows].set(flat["submit"], mode="drop"),
         runtime=jobs.runtime.at[rows].set(flat["runtime"], mode="drop"),
@@ -245,11 +264,16 @@ def _import_jobs(jobs: JobSet, state: SimState, flat):
         nodes=jobs.nodes.at[rows].set(flat["nodes"], mode="drop"),
         priority=jobs.priority.at[rows].set(flat["priority"], mode="drop"),
         valid=jobs.valid.at[rows].set(True, mode="drop"),
-        deps=new_deps,
+        dep_dst=new_dst,
+        dep_src=new_src,
     )
+    n_unmet = state.n_unmet
+    if new_dst is not None:
+        n_unmet = n_unmet.at[rows].set(0, mode="drop")  # landing rows dep-free
     state = dataclasses.replace(
         state,
         jstate=state.jstate.at[rows].set(PENDING, mode="drop"),
+        n_unmet=n_unmet,
         start=state.start.at[rows].set(INF_TIME, mode="drop"),
         finish=state.finish.at[rows].set(INF_TIME, mode="drop"),
         rsv_finish=state.rsv_finish.at[rows].set(INF_TIME, mode="drop"),
@@ -388,10 +412,15 @@ def multicluster_result_np(res: MulticlusterResult) -> dict:
         "migrated": int(np.asarray(res.migrated).sum()),
         "dropped": int(np.asarray(res.dropped).sum()),
     }
-    if jobs.deps is not None:
-        deps = np.asarray(jobs.deps)                       # [C, J, J]
+    if jobs.dep_dst is not None:
+        dst = np.asarray(jobs.dep_dst)                     # [C, E]
+        src = np.asarray(jobs.dep_src)
         fin = np.asarray(state.finish)                     # [C, J]
-        dep_fin = np.max(np.where(deps, fin[:, None, :], 0), axis=2)
+        C, J = fin.shape
+        dep_fin = np.zeros((C, J), dtype=fin.dtype)
+        for c in range(C):                                 # host side, C small
+            live = dst[c] < J
+            np.maximum.at(dep_fin[c], dst[c][live], fin[c][src[c][live]])
         out["ready"] = np.maximum(np.asarray(jobs.submit), dep_fin).reshape(-1)
     else:
         out["ready"] = out["submit"]

@@ -192,14 +192,25 @@ _SELECTORS = (select_fcfs, select_sjf, select_ljf, select_bestfit,
               select_backfill, select_preempt)
 assert tuple(sorted((FCFS, SJF, LJF, BESTFIT, BACKFILL))) == tuple(range(5))
 
+# public view of the dispatch table: the engine's static-policy hint clamps
+# against its length, so growing the table updates every clip site at once
+SELECTOR_TABLE = _SELECTORS
+
 
 def select(policy: jax.Array, jobs: JobSet, state: SimState,
-           cap: jax.Array | None = None) -> jax.Array:
+           cap: jax.Array | None = None, *,
+           static_policy: int | None = None) -> jax.Array:
     """Dispatch on (possibly traced) policy id — vmap-able over policies.
 
     ``cap`` is the placement-feasibility cap (defaults to the scalar free
     counter, i.e. seed semantics); the engine passes ``placeable_cap`` when
-    an allocation context is active.
+    an allocation context is active.  When the engine resolved the policy id
+    at trace time it passes ``static_policy`` and the selector is called
+    directly — only that policy's reduction graph is traced, instead of a
+    six-way ``lax.switch`` per scheduling step (DESIGN.md §14).
     """
     cap = state.free if cap is None else cap
-    return jax.lax.switch(jnp.clip(policy, 0, 5), _SELECTORS, jobs, state, cap)
+    hi = len(_SELECTORS) - 1
+    if static_policy is not None:
+        return _SELECTORS[min(max(static_policy, 0), hi)](jobs, state, cap)
+    return jax.lax.switch(jnp.clip(policy, 0, hi), _SELECTORS, jobs, state, cap)

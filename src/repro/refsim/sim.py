@@ -32,7 +32,7 @@ import numpy as np
 from repro.alloc import contention as _con
 from repro.alloc import host as _host
 from repro.core.jobs import (
-    BACKFILL, BESTFIT, FCFS, LJF, PREEMPT, SJF, _dense_deps,
+    BACKFILL, BESTFIT, FCFS, LJF, PREEMPT, SJF, dep_edge_arrays,
 )
 
 _POL = {"fcfs": FCFS, "sjf": SJF, "ljf": LJF, "bestfit": BESTFIT,
@@ -86,10 +86,11 @@ class ReferenceSimulator:
         ]
         self.dep_pairs = []
         if deps is not None:
-            # one shared normalizer (validation + cycle check) with
-            # make_jobset, then the identical (submit, id) sort permutation
-            dense = _dense_deps(deps, len(submit))[order][:, order]
-            self.dep_pairs = list(zip(*np.nonzero(dense)))
+            # one shared normalizer (validation + cycle check + (submit, id)
+            # sort permutation) with make_jobset, so both engines hold
+            # bit-identical edge sets
+            dst, src = dep_edge_arrays(deps, len(submit), order)
+            self.dep_pairs = list(zip(dst.tolist(), src.tolist()))
         return self
 
     # ---- allocation helpers (mirror repro.alloc) ---------------------------

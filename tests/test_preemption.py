@@ -102,3 +102,52 @@ def test_work_conserved_under_preemption():
     v = out["valid"]
     # suspension delays completion but never loses work: finish - start >= runtime
     assert (out["finish"][v] - out["start"][v] >= out["runtime"][v]).all()
+
+
+def test_victim_order_survives_priorities_near_inf_time():
+    """Regression (ISSUE 4): the seed engine ranked victims with the packed
+    key ``-(priority * J + row)``, which overflows int32 once priority is
+    within a factor of J of INF_TIME and silently preempts the wrong jobs.
+    The two-stage lexicographic sort must agree with the reference simulator
+    even at sentinel-scale priorities."""
+    huge = int(2**29)
+    trace = {
+        "submit": np.array([0, 0, 0, 10]),
+        "runtime": np.array([100, 100, 100, 20]),
+        "nodes": np.array([2, 2, 2, 4]),
+        "estimate": np.array([100, 100, 100, 20]),
+        # three running jobs whose priorities straddle the int32 wrap point
+        # of the packed key (huge*J crosses 2**31): row 0 keeps a positive
+        # packed key while rows 1-2 wrap negative, so the seed ordering
+        # inverts and preempts the most-important victim first
+        "priority": np.array([huge - 1, huge + 2, huge + 1, 0]),
+    }
+    out = simulate_np(trace, "preempt", total_nodes=6)
+    ref = simulate_reference(trace, "preempt", total_nodes=6)
+    np.testing.assert_array_equal(out["start"][:4], ref["start"])
+    np.testing.assert_array_equal(out["finish"][:4], ref["finish"])
+    # victims are most-preemptible-first (priority desc, row desc): rows 1+2
+    # suspend for the 4-node preemptor, row 0 runs to completion untouched
+    assert out["finish"][0] == 100
+    assert out["start"][3] == 10 and out["finish"][3] == 30
+    assert out["finish"][1] > 100 and out["finish"][2] > 100
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_exact_match_vs_reference_huge_priorities(seed):
+    """Random near-INF priority levels: victim ordering must stay bit-exact
+    against the reference at any priority magnitude."""
+    rng = np.random.default_rng(seed)
+    n = 24
+    trace = {
+        "submit": rng.integers(0, 120, n),
+        "runtime": rng.integers(1, 60, n),
+        "nodes": rng.integers(1, 7, n),
+        "estimate": rng.integers(1, 120, n),
+        "priority": rng.integers(2**28, 2**30 - 1, n),
+    }
+    out = simulate_np(trace, "preempt", total_nodes=12)
+    ref = simulate_reference(trace, "preempt", total_nodes=12)
+    np.testing.assert_array_equal(out["start"][:n], ref["start"])
+    np.testing.assert_array_equal(out["finish"][:n], ref["finish"])
