@@ -78,7 +78,11 @@ def _galactic_jobs(tiles: int, width: int, total_nodes: int):
 
 def run_bench(outdir: str = "results", *, smoke: bool = False) -> dict:
     os.makedirs(outdir, exist_ok=True)
-    report: dict = {"schema": 1, "smoke": smoke, "cases": {}}
+    # schema 2: adds generated_unix/finished_unix (monotonic wall-clock
+    # stamps) so perf-trajectory tooling can order artifacts; pinned by
+    # tests/test_bench_schema.py — bump the version when keys change
+    report: dict = {"schema": 2, "smoke": smoke, "cases": {},
+                    "generated_unix": time.time()}
 
     # ---- no-deps policy throughput on the SDSC-SP2-like trace --------------
     J = 200 if smoke else 2000
@@ -128,6 +132,7 @@ def run_bench(outdir: str = "results", *, smoke: bool = False) -> dict:
                                                  "GBps": (N * 8 / t) / 1e9}
         emit(f"queue_select_N{N}", t, f"interpret_mode;GBps={(N * 8 / t) / 1e9:.2f}")
 
+    report["finished_unix"] = time.time()
     path = os.path.join(outdir, BENCH_JSON)
     with open(path, "w") as f:
         json.dump(report, f, indent=1, sort_keys=True)

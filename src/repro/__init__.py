@@ -21,14 +21,15 @@ import importlib
 
 _SUBMODULES = frozenset({
     "alloc", "api", "ckpt", "configs", "core", "data", "kernels", "launch",
-    "models", "optim", "refsim", "runtime", "sharding", "traces",
+    "models", "optim", "refsim", "reliability", "runtime", "sharding",
+    "traces",
 })
 
 # names re-exported from repro.api on first access
 _API_NAMES = frozenset({
-    "ArrayTrace", "Multicluster", "Result", "Scenario", "SweepResult",
-    "SwfTrace", "SyntheticTrace", "Topology", "WorkflowTrace", "run",
-    "run_ref", "sweep",
+    "ArrayTrace", "FailureModel", "Multicluster", "Result", "Scenario",
+    "SweepResult", "SwfTrace", "SyntheticTrace", "Topology", "WorkflowTrace",
+    "run", "run_ref", "sweep",
 })
 
 __all__ = sorted(_SUBMODULES | _API_NAMES)

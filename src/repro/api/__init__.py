@@ -28,10 +28,11 @@ from repro.api.scenario import (
     TRACED_AXES, WorkflowTrace, as_trace_spec,
 )
 from repro.api.sweep import SweepResult, sweep
+from repro.reliability import FailureModel
 
 __all__ = [
-    "ArrayTrace", "Multicluster", "Result", "Scenario", "SweepResult",
-    "SwfTrace", "SyntheticTrace", "Topology", "TRACED_AXES", "WorkflowTrace",
-    "as_trace_spec", "build_jobset", "run", "run_ref", "simresult_to_np",
-    "sweep",
+    "ArrayTrace", "FailureModel", "Multicluster", "Result", "Scenario",
+    "SweepResult", "SwfTrace", "SyntheticTrace", "Topology", "TRACED_AXES",
+    "WorkflowTrace", "as_trace_spec", "build_jobset", "run", "run_ref",
+    "simresult_to_np", "sweep",
 ]

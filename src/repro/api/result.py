@@ -77,6 +77,8 @@ class Result:
         s = metrics.summary(out, total)
         if "ev_time" in out and "alloc_span" in out:
             s.update(metrics.alloc_summary(out))
+        if "n_restarts" in out:
+            s.update(metrics.reliability_summary(out))
         return s
 
     @property
@@ -120,4 +122,8 @@ def simresult_to_np(res: SimResult, jobs: JobSet, *,
         out["ev_time"] = np.asarray(res.ev_time)[:n_ev]
         out["ev_free"] = np.asarray(res.ev_free)[:n_ev]
         out["ev_lfb"] = np.asarray(res.ev_lfb)[:n_ev]
+    if res.rel is not None:
+        out["n_restarts"] = np.asarray(res.rel.n_restarts)
+        out["lost_work"] = np.asarray(res.rel.lost_work)
+        out["aborted"] = np.asarray(res.rel.aborted)
     return out

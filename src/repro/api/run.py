@@ -50,6 +50,14 @@ def _machine(scenario: Scenario):
     return scenario.topology.build() if scenario.topology is not None else None
 
 
+def _failure_trace(scenario: Scenario):
+    """The ONE materialized failure trace both engines consume (cached by
+    the model's lru, so ``run`` and ``run_ref`` see identical arrays)."""
+    if scenario.failures is None:
+        return None
+    return scenario.failures.materialize(int(scenario.total_nodes))
+
+
 def run(scenario: Scenario) -> Result:
     """Run one scenario on the JAX engine and return a unified ``Result``."""
     if scenario.multicluster is not None:
@@ -62,6 +70,7 @@ def run(scenario: Scenario) -> Result:
         machine=_machine(scenario),
         alloc=scenario.alloc,
         contention=scenario.contention,
+        failures=_failure_trace(scenario),
         max_events=scenario.max_events,
     )
     return Result(scenario=scenario, backend="jax", raw=res, jobs=jobs)
@@ -86,6 +95,7 @@ def run_ref(scenario: Scenario) -> Result:
         machine=machine,
         alloc=alloc_name,
         contention=scenario.contention,
+        failures=_failure_trace(scenario),
     )
     return Result(scenario=scenario, backend="ref", raw=out)
 

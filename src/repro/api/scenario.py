@@ -33,6 +33,7 @@ from typing import Any, Dict, Optional, Tuple, Union
 import numpy as np
 
 from repro import alloc as _alloc
+from repro.reliability import FailureModel
 from repro.traces import das2_like, load_swf, sdsc_sp2_like, synthetic_trace
 from repro.traces import workflows as _workflows
 from repro.traces.workflows import workflow_to_trace
@@ -308,8 +309,14 @@ class Multicluster:
 
 # dotted axis paths vmap-batched by repro.api.sweep; everything else forces
 # a recompile bucket ("total_nodes" moves to static when a topology pins the
-# machine size — see sweep._static_key)
-TRACED_AXES = ("policy", "alloc", "contention", "total_nodes", "trace.seed")
+# machine size — see sweep._static_key).  Every FailureModel field except
+# max_failures (the padded capacity, a compiled shape) is trace data: the
+# materialized failure arrays are ordinary vmap leaves, so an MTBF /
+# checkpoint / requeue grid compiles to ONE executable (DESIGN.md §15).
+TRACED_AXES = ("policy", "alloc", "contention", "total_nodes", "trace.seed",
+               "failures.mtbf", "failures.seed", "failures.mean_repair",
+               "failures.requeue", "failures.checkpoint_interval",
+               "failures.restart_overhead")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -320,6 +327,11 @@ class Scenario:
     count.  ``alloc``/``contention`` require a ``topology`` (without one the
     engine runs in scalar-counter mode and would silently ignore them —
     ``run`` rejects the combination, mirroring the engine's own check).
+
+    ``failures`` (a frozen ``repro.reliability.FailureModel``) switches on
+    reliability-aware simulation (DESIGN.md §15); both engines consume the
+    one materialized trace, and ``failures=None`` statically elides the
+    whole subsystem.
     """
 
     trace: Union[TraceSpec, Dict[str, Any], str, Tuple[TraceSpec, ...]]
@@ -331,8 +343,20 @@ class Scenario:
     multicluster: Optional[Multicluster] = None
     capacity: Optional[int] = None
     max_events: Optional[int] = None
+    failures: Optional[FailureModel] = None
 
     def __post_init__(self):
+        if self.failures is not None:
+            if not isinstance(self.failures, FailureModel):
+                raise TypeError(
+                    "Scenario.failures must be a repro.reliability."
+                    f"FailureModel, got {type(self.failures).__name__} "
+                    "(specs stay frozen/hashable; materialized FailureTraces "
+                    "belong to the engine call, not the scenario)")
+            if self.multicluster is not None:
+                raise ValueError(
+                    "failures are not supported in multicluster scenarios "
+                    "yet; simulate the clusters individually")
         if self.multicluster is None:
             object.__setattr__(self, "trace", as_trace_spec(self.trace))
         else:

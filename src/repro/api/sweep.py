@@ -51,7 +51,14 @@ from repro.api.scenario import Scenario
 
 
 def _static_key(scenario: Scenario) -> tuple:
-    """Hashable compile-bucket key: everything that forces a recompile."""
+    """Hashable compile-bucket key: everything that forces a recompile.
+
+    A failure model contributes only its padded capacity: the failure
+    *arrays* are ordinary vmap leaves (materialization is host-side per
+    scenario and no compiled shape depends on ``total_nodes`` without a
+    topology), so MTBF / checkpoint / requeue — and ``total_nodes`` in
+    scalar-counter mode — batch into one executable (DESIGN.md §15).
+    """
     tn: Any = None
     if scenario.topology is not None or scenario.multicluster is not None:
         tn = scenario.total_nodes  # pins machine / cluster shapes
@@ -62,6 +69,7 @@ def _static_key(scenario: Scenario) -> tuple:
         scenario.multicluster,
         scenario.capacity,
         scenario.max_events,
+        None if scenario.failures is None else scenario.failures.static_key(),
     )
 
 
@@ -161,14 +169,26 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence[Any]], *,
 
 
 @functools.lru_cache(maxsize=None)
-def _bucket_fn(with_alloc: bool, max_events: Optional[int],
+def _bucket_fn(with_alloc: bool, with_fail: bool, max_events: Optional[int],
                mesh: Optional[Mesh], axis: Optional[str]):
-    if with_alloc:
+    if with_alloc and with_fail:
+        fn = lambda jobs_b, pol_b, tn_b, alloc_b, con_b, fail_b, machine: \
+            jax.vmap(
+                lambda j, p, t, a, c, f: engine.simulate(
+                    j, p, t, machine=machine, alloc=a, contention=c,
+                    failures=f, max_events=max_events)
+            )(jobs_b, pol_b, tn_b, alloc_b, con_b, fail_b)
+    elif with_alloc:
         fn = lambda jobs_b, pol_b, tn_b, alloc_b, con_b, machine: jax.vmap(
             lambda j, p, t, a, c: engine.simulate(
                 j, p, t, machine=machine, alloc=a, contention=c,
                 max_events=max_events)
         )(jobs_b, pol_b, tn_b, alloc_b, con_b)
+    elif with_fail:
+        fn = lambda jobs_b, pol_b, tn_b, fail_b: jax.vmap(
+            lambda j, p, t, f: engine.simulate(
+                j, p, t, failures=f, max_events=max_events)
+        )(jobs_b, pol_b, tn_b, fail_b)
     else:
         fn = lambda jobs_b, pol_b, tn_b: jax.vmap(
             lambda j, p, t: engine.simulate(j, p, t, max_events=max_events)
@@ -222,8 +242,19 @@ def _run_bucket(bucket: List[Scenario], mesh: Optional[Mesh]) -> List[Result]:
               + [_alloc.Contention.off()] * pad))
         args = (jobs_b, pol_b, tn_b, alloc_b, con_b)
 
+    with_fail = base.failures is not None
+    if with_fail:
+        # per-point materialized streams stack into ordinary vmap leaves
+        # (uniform shapes: max_failures is part of the static bucket key)
+        from repro.reliability import make_fail_ctx
+
+        fctxs = [make_fail_ctx(s.failures, n_nodes=int(s.total_nodes))
+                 for s in bucket]
+        fctxs += [fctxs[-1]] * pad
+        args = args + (jax.tree.map(lambda *xs: jnp.stack(xs), *fctxs),)
+
     axis = mesh.axis_names[0] if mesh is not None else None
-    fn = _bucket_fn(machine is not None, max_events, mesh, axis)
+    fn = _bucket_fn(machine is not None, with_fail, max_events, mesh, axis)
     if mesh is not None:
         shard = NamedSharding(mesh, P(axis))
         args = tuple(jax.device_put(a, shard) for a in args)

@@ -44,6 +44,20 @@ jobs' nodes, starts place concrete nodes via the chosen strategy, and the
 policy fit checks use ``placeable_cap`` — for the count-based strategies
 that cap *is* the scalar free counter, so ``alloc="simple"`` with
 contention off reproduces the seed scalar-counter schedule bit-for-bit.
+
+Reliability (DESIGN.md §15): with a ``failures`` model the event loop gains
+a third event source — a pre-materialized, padded failure/repair stream
+(``repro.reliability``) consumed through a per-event pointer.  A failure
+takes one node out of service until its repair; if the node was busy, the
+running job is killed and either *requeues* (re-enters the wait queue at
+its submit rank, re-charged for the work since its last checkpoint plus a
+restart overhead) or *aborts* (terminates; dependents release with
+after-any semantics).  Down nodes are masked out of every placement and
+fit check by painting them with an out-of-range owner id at the strategy
+call sites — the strategies themselves are untouched.  ``failures=None``
+statically elides all of it: ``SimState.rel`` is ``None`` (no leaves, not
+zero-size placeholders) and the no-failure executable is HLO-identical to
+the pre-reliability engine (fingerprint-tested).
 """
 
 from __future__ import annotations
@@ -61,6 +75,7 @@ from repro.core.jobs import (
     DONE, FCFS, INF_TIME, LJF, PENDING, PREEMPT, RUNNING, SJF, WAITING,
     JobSet, SimResult, SimState, result_from_state,
 )
+from repro.reliability.model import FAIL, REQUEUE, make_fail_ctx
 
 # An allocation context is either None (seed scalar-counter mode) or the
 # pytree tuple (machine, strategy_i32, contention); its None-ness is static
@@ -111,6 +126,22 @@ def _release_nodes(state_owner: jax.Array, released: jax.Array,
     return jnp.where(hit, jnp.int32(-1), own)
 
 
+def _owner_eff(jobs: JobSet, state: SimState) -> jax.Array:
+    """The occupancy map as the placement strategies should see it.
+
+    With reliability active, down nodes are painted with the out-of-range
+    owner id ``capacity`` — "busy, owned by nobody" — so every existing
+    ``owner < 0`` free test and ``owner >= 0`` busy test excludes them
+    without touching the strategies (DESIGN.md §15).  The *true*
+    ``node_owner`` map (which release scatters read) never holds the
+    sentinel, so a down node can never be freed by a job completion.
+    """
+    if state.rel is None:
+        return state.node_owner
+    return jnp.where(state.rel.down, jnp.int32(jobs.capacity),
+                     state.node_owner)
+
+
 def _start_job(jobs: JobSet, state: SimState, idx: jax.Array,
                ctx: Optional[AllocCtx]) -> SimState:
     """Allocate nodes to job ``idx`` and schedule its completion event.
@@ -122,11 +153,17 @@ def _start_job(jobs: JobSet, state: SimState, idx: jax.Array,
     the remaining runtime by the allocation's group span.
     """
     start = state.clock
+    if state.rel is not None:
+        state = dataclasses.replace(
+            state, rel=dataclasses.replace(
+                state.rel,
+                last_start=state.rel.last_start.at[idx].set(start)))
     if ctx is None:
         dil_rem = state.remaining[idx]
     else:
         machine, strategy, con = ctx
-        mask = _alloc.place(strategy, machine, state.node_owner, jobs.nodes[idx])
+        mask = _alloc.place(strategy, machine, _owner_eff(jobs, state),
+                            jobs.nodes[idx])
         span = _alloc.group_span(machine, mask)
         first, asum = _alloc.alloc_fingerprint(mask)
         dil_rem = _alloc.dilate(con, state.remaining[idx], span)
@@ -202,7 +239,7 @@ def _select(policy: jax.Array, jobs: JobSet, state: SimState,
             static_policy: Optional[int] = None) -> jax.Array:
     """Policy selection under the active allocation feasibility cap."""
     cap = (state.free if ctx is None
-           else _alloc.placeable_cap(ctx[1], state.node_owner))
+           else _alloc.placeable_cap(ctx[1], _owner_eff(jobs, state)))
     return policies.select(policy, jobs, state, cap,
                            static_policy=static_policy)
 
@@ -263,6 +300,33 @@ def _batched_pass(jobs: JobSet, state: SimState, ctx: Optional[AllocCtx],
     # XLA copies every carried buffer at the loop boundary per event, so a
     # full-state carry would tax the (common) zero-start event with ~10
     # J-sized copies and halve trickle-workload throughput
+    if state.rel is not None:
+        # reliability adds exactly one more leaf: the checkpoint base
+        # ``last_start`` every dispatch must stamp (DESIGN.md §15)
+        def place_slim_rel(i, carry):
+            jstate, start, finish, rsv, free, last = carry
+            pos = jnp.searchsorted(n_take, i + 1)
+            idx = order[pos]
+            t0 = state.clock
+            return (
+                jstate.at[idx].set(RUNNING),
+                start.at[idx].set(jnp.minimum(start[idx], t0)),
+                finish.at[idx].set(t0 + state.remaining[idx]),
+                rsv.at[idx].set(t0 + jobs.estimate[idx]),
+                free - jobs.nodes[idx],
+                last.at[idx].set(t0),
+            )
+
+        jstate, start, finish, rsv, free, last = jax.lax.fori_loop(
+            0, n_started, place_slim_rel,
+            (state.jstate, state.start, state.finish, state.rsv_finish,
+             state.free, state.rel.last_start),
+        )
+        return dataclasses.replace(
+            state, jstate=jstate, start=start, finish=finish,
+            rsv_finish=rsv, free=free,
+            rel=dataclasses.replace(state.rel, last_start=last))
+
     def place_slim(i, carry):
         jstate, start, finish, rsv, free = carry
         pos = jnp.searchsorted(n_take, i + 1)
@@ -343,11 +407,135 @@ def dep_csr(jobs: JobSet) -> Optional[tuple]:
     return bounds[:-1], bounds[1:]
 
 
+def _process_rel_events(jobs: JobSet, state: SimState,
+                        ctx: Optional[AllocCtx], rel: tuple) -> SimState:
+    """Consume every failure/repair stream entry with time <= clock.
+
+    Entries are processed one at a time in stream order (an inner
+    ``while_loop`` over the pointer) because each kill changes the running
+    set the next kill's victim rule reads.  Semantics, pinned identically
+    in ``repro.refsim`` (DESIGN.md §15):
+
+    - *fail* in machine mode: node ``ev_node`` goes down; if it was owned
+      by a job, that job is the victim.  In scalar-counter mode nodes are
+      anonymous: with ``busy`` running node-seconds and ``n_up`` nodes in
+      service, slot ``ev_node % n_up`` hits a running job iff it lands in
+      ``[0, busy)`` (utilization-proportional), and the victim is the job
+      covering the slot in row-order node cumsum.
+    - victim *requeue*: back to WAITING at its submit rank, remaining
+      re-charged by the work since its last checkpoint (all of it when
+      ``checkpoint_interval == 0``) plus the restart overhead.
+    - victim *abort*: DONE + ``aborted``; ``finish`` records the kill
+      time, and dependents release (after-any), so DAGs never deadlock.
+    - *repair*: the node returns to service.
+
+    The per-node renewal construction guarantees a node never fails while
+    down; the machine-mode guards (``down[node]``) only make the
+    semantics total under hand-built streams.
+    """
+    ev_time, ev_node, ev_kind, requeue, ckpt, overhead = rel
+    K = ev_time.shape[0]
+    J = jobs.capacity
+    # A finished simulation never needs its remaining stream entries — and
+    # under vmap this guard is load-bearing: a batched while_loop keeps
+    # executing (and discarding) finished members' bodies, and without it a
+    # done member whose clock snaps to its leftover stream tail re-drains
+    # that whole tail on EVERY lockstep iteration (measured 50-100x on
+    # heterogeneous-MTBF sweeps; live members always pass the guard, so
+    # semantics are untouched).
+    live = jnp.any(state.jstate != DONE)
+
+    def cond(st: SimState):
+        p = st.rel.ptr
+        return (p < K) & (ev_time[jnp.minimum(p, K - 1)] <= st.clock) & live
+
+    def body(st: SimState) -> SimState:
+        r = st.rel
+        e = jnp.minimum(r.ptr, K - 1)
+        node = ev_node[e]
+        is_fail = ev_kind[e] == FAIL
+
+        if ctx is None:
+            runn = st.jstate == RUNNING
+            rn = jnp.where(runn, jobs.nodes, 0)
+            busy = jnp.sum(rn)
+            n_up = st.free + busy
+            slot = node % jnp.maximum(n_up, 1)
+            cum = jnp.cumsum(rn)
+            victim = jnp.argmax(cum > slot).astype(jnp.int32)
+            has_victim = is_fail & (slot < busy)
+            goes_down = is_fail
+            comes_up = ~is_fail
+            new_down = r.down                     # [0] placeholder
+        else:
+            own = st.node_owner[node]
+            was_down = r.down[node]
+            has_victim = is_fail & (own >= 0) & ~was_down
+            victim = jnp.maximum(own, 0)
+            goes_down = is_fail & ~was_down
+            comes_up = ~is_fail & was_down
+            new_down = r.down.at[node].set(is_fail)
+
+        # checkpoint rework: work since the last checkpoint (the whole run
+        # when ckpt == 0) is lost and re-charged on requeue; remaining is
+        # in the same post-dilation units preemption pins (DESIGN.md §11)
+        el = st.clock - r.last_start[victim]
+        saved = jnp.where(ckpt > 0, (el // jnp.maximum(ckpt, 1)) * ckpt, 0)
+        lost = el - saved
+        req = requeue == REQUEUE
+        kill_req = has_victim & req
+        kill_abort = has_victim & ~req
+        new_rem = jnp.maximum(st.finish[victim] - st.clock + lost + overhead,
+                              1)
+
+        jstate = st.jstate.at[victim].set(jnp.where(
+            has_victim,
+            jnp.where(req, jnp.int32(WAITING), jnp.int32(DONE)),
+            st.jstate[victim]))
+        finish = st.finish.at[victim].set(jnp.where(
+            has_victim, jnp.where(req, jnp.int32(INF_TIME), st.clock),
+            st.finish[victim]))
+        rsv = st.rsv_finish.at[victim].set(jnp.where(
+            has_victim, jnp.int32(INF_TIME), st.rsv_finish[victim]))
+        remaining = st.remaining.at[victim].set(jnp.where(
+            kill_req, new_rem, st.remaining[victim]))
+        n_restarts = r.n_restarts.at[victim].add(kill_req.astype(jnp.int32))
+        lost_work = r.lost_work.at[victim].add(jnp.where(
+            kill_req, lost + overhead, jnp.where(kill_abort, el, 0)))
+        aborted = r.aborted.at[victim].set(kill_abort | r.aborted[victim])
+
+        n_unmet = st.n_unmet
+        if jobs.dep_dst is not None:
+            dec = ((jobs.dep_src == victim) & kill_abort).astype(jnp.int32)
+            n_unmet = n_unmet.at[jobs.dep_dst].add(-dec, mode="drop")
+
+        freed = jnp.where(has_victim, jobs.nodes[victim], 0)
+        free = (st.free + freed - goes_down.astype(jnp.int32)
+                + comes_up.astype(jnp.int32))
+
+        node_owner = st.node_owner
+        if ctx is not None:
+            vmask = jnp.zeros((J,), bool).at[victim].set(has_victim)
+            node_owner = _release_nodes(st.node_owner, vmask, J)
+
+        new_rel = dataclasses.replace(
+            r, ptr=r.ptr + 1,
+            n_restarts=n_restarts, lost_work=lost_work, aborted=aborted,
+            down=new_down)
+        return dataclasses.replace(
+            st, jstate=jstate, finish=finish, rsv_finish=rsv,
+            remaining=remaining, n_unmet=n_unmet, free=free,
+            node_owner=node_owner, rel=new_rel)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
 def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
                 ctx: Optional[AllocCtx] = None,
                 static_policy: Optional[int] = None,
                 fast_order: Optional[jax.Array] = None,
-                csr: Optional[tuple] = None) -> SimState:
+                csr: Optional[tuple] = None,
+                rel: Optional[tuple] = None) -> SimState:
     pending = state.jstate == PENDING
     running = state.jstate == RUNNING
     has_deps = jobs.dep_dst is not None
@@ -360,6 +548,12 @@ def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
     t_arr = jnp.min(jnp.where(arrivable, jobs.submit, INF_TIME))
     t_fin = jnp.min(jnp.where(running, state.finish, INF_TIME))
     clock = jnp.minimum(t_arr, t_fin)
+    if rel is not None:
+        K = rel[0].shape[0]
+        p = state.rel.ptr
+        t_rel = jnp.where(p < K, rel[0][jnp.minimum(p, K - 1)],
+                          jnp.int32(INF_TIME))
+        clock = jnp.minimum(clock, t_rel)
 
     # completions first (frees nodes for arrivals at the same timestamp)
     completed = running & (state.finish <= clock)
@@ -385,20 +579,36 @@ def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
             n_unmet = n_unmet - (c[row_end] - c[row_start])
         else:
             n_unmet = n_unmet.at[jobs.dep_dst].add(-dec, mode="drop")
-    arrived = (jstate == PENDING) & (jobs.submit <= clock)
-    if has_deps:
-        arrived = arrived & (n_unmet == 0)
-    jstate = jnp.where(arrived, WAITING, jstate)
+    if rel is not None:
+        # reliability events run after completions (a job finishing at the
+        # failure instant has completed) and before arrivals (a job whose
+        # last dependency aborts still releases within this same event)
+        state = dataclasses.replace(
+            state, clock=clock, jstate=jstate, n_unmet=n_unmet,
+            free=state.free + freed, node_owner=node_owner)
+        state = _process_rel_events(jobs, state, ctx, rel)
+        jstate, n_unmet = state.jstate, state.n_unmet
+        arrived = (jstate == PENDING) & (jobs.submit <= clock)
+        if has_deps:
+            arrived = arrived & (n_unmet == 0)
+        jstate = jnp.where(arrived, WAITING, jstate)
+        state = dataclasses.replace(
+            state, jstate=jstate, n_events=state.n_events + 1)
+    else:
+        arrived = (jstate == PENDING) & (jobs.submit <= clock)
+        if has_deps:
+            arrived = arrived & (n_unmet == 0)
+        jstate = jnp.where(arrived, WAITING, jstate)
 
-    state = dataclasses.replace(
-        state,
-        clock=clock,
-        jstate=jstate,
-        n_unmet=n_unmet,
-        free=state.free + freed,
-        n_events=state.n_events + 1,
-        node_owner=node_owner,
-    )
+        state = dataclasses.replace(
+            state,
+            clock=clock,
+            jstate=jstate,
+            n_unmet=n_unmet,
+            free=state.free + freed,
+            n_events=state.n_events + 1,
+            node_owner=node_owner,
+        )
     state = _schedule_pass(policy, jobs, state, ctx, static_policy,
                            fast_order)
     if ctx is None:
@@ -410,7 +620,7 @@ def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
         ev_time=state.ev_time.at[slot].set(state.clock, mode="drop"),
         ev_free=state.ev_free.at[slot].set(state.free, mode="drop"),
         ev_lfb=state.ev_lfb.at[slot].set(
-            _alloc.largest_free_run(state.node_owner), mode="drop"),
+            _alloc.largest_free_run(_owner_eff(jobs, state)), mode="drop"),
     )
 
 
@@ -453,6 +663,7 @@ def simulate(
     machine=None,
     alloc: jax.Array | int | str | None = None,
     contention=None,
+    failures=None,
     max_events: Optional[int] = None,
 ) -> SimResult:
     """Run the full job-scheduling simulation for one cluster.
@@ -482,13 +693,19 @@ def simulate(
     take the batched scheduling pass (DESIGN.md §14).  Each concrete policy
     then compiles its own executable; traced values (vmap axes) keep the
     shared fully-dynamic executable with seed semantics.
+
+    ``failures`` (None, a ``repro.reliability.FailureModel``, a
+    ``FailureTrace``, or a prebuilt fail-ctx tuple) switches on the
+    reliability subsystem (DESIGN.md §15); ``None`` statically elides it.
     """
     ctx = make_alloc_ctx(machine, alloc, contention, total_nodes)
+    fctx = make_fail_ctx(failures, n_nodes=_concrete_int(total_nodes))
     static_policy = _static_policy_hint(policy)
     static_strategy = _concrete_int(ctx[1]) if ctx is not None else None
     return _simulate_jit(
         jobs, jnp.asarray(policy, dtype=jnp.int32),
-        jnp.asarray(total_nodes, dtype=jnp.int32), ctx, max_events=max_events,
+        jnp.asarray(total_nodes, dtype=jnp.int32), ctx, fctx=fctx,
+        max_events=max_events,
         static_policy=static_policy, static_strategy=static_strategy,
     )
 
@@ -501,14 +718,34 @@ def _simulate_jit(
     policy: jax.Array,
     total_nodes: jax.Array,
     ctx: Optional[AllocCtx],
+    fctx: Optional[tuple] = None,
     *,
     max_events: Optional[int] = None,
     static_policy: Optional[int] = None,
     static_strategy: Optional[int] = None,
 ) -> SimResult:
-    cap = max_events if max_events is not None else 6 * jobs.capacity + 8
+    if fctx is None:
+        cap = max_events if max_events is not None else 6 * jobs.capacity + 8
+        rel = None
+    else:
+        # every failure adds at most one kill (an extra start + completion
+        # cycle) and two stream entries, so the event bound grows with the
+        # padded failure capacity F — a static shape, known at trace time
+        F = fctx[0].shape[-1]
+        cap = (max_events if max_events is not None
+               else 6 * jobs.capacity + 6 * F + 8)
+        # one loop-invariant stable merge of the failure + repair streams,
+        # pinned identically (host-side) in repro.reliability.merge_stream
+        times = jnp.concatenate([fctx[0], fctx[2]])
+        nodes = jnp.concatenate([fctx[1], fctx[1]])
+        kind = jnp.concatenate([jnp.zeros_like(fctx[1]),
+                                jnp.ones_like(fctx[1])])
+        order = jnp.argsort(times, stable=True)
+        rel = (times[order], nodes[order], kind[order],
+               fctx[3], fctx[4], fctx[5])
     machine = ctx[0] if ctx is not None else None
-    state = SimState.init(jobs, total_nodes, machine=machine, event_log=cap)
+    state = SimState.init(jobs, total_nodes, machine=machine, event_log=cap,
+                          failures=fctx is not None)
     fast_order = _fast_order(jobs, ctx, static_policy, static_strategy)
     csr = dep_csr(jobs)   # jobs are immutable here, dst order guaranteed
 
@@ -519,7 +756,7 @@ def _simulate_jit(
     state = jax.lax.while_loop(
         cond,
         lambda st: _event_step(policy, jobs, st, ctx, static_policy,
-                               fast_order, csr),
+                               fast_order, csr, rel),
         state,
     )
     return result_from_state(jobs, state)

@@ -284,6 +284,40 @@ def make_jobset(
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class RelState:
+    """Reliability bookkeeping (DESIGN.md §15), present only when the
+    simulation carries a failure model.
+
+    Like ``JobSet.dep_dst``, the whole subtree is ``None`` on
+    ``SimState`` for failure-free runs — not zero-size placeholders —
+    so the no-failure engine lowers to the *exact* pre-reliability HLO
+    module (fingerprint-tested).  ``down`` is the per-node outage mask
+    in machine mode ([0] in scalar-counter mode, where outages are pure
+    capacity accounting on the ``free`` counter); ``last_start`` is the
+    clock of each job's latest dispatch, the base of the checkpoint
+    rework math.
+    """
+
+    ptr: jax.Array         # i32 scalar: next unconsumed failure-stream entry
+    last_start: jax.Array  # i32[J] clock of the latest dispatch (0 = never)
+    n_restarts: jax.Array  # i32[J] requeue kills survived so far
+    lost_work: jax.Array   # i32[J] rework + overhead (+ aborted work) charged
+    aborted: jax.Array     # bool[J] terminated by a failure under "abort"
+    down: jax.Array        # bool[N] node outage mask; [0] w/o machine
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FailureInfo:
+    """Per-job reliability outcome columns (``SimResult.rel``)."""
+
+    n_restarts: jax.Array  # i32[J]
+    lost_work: jax.Array   # i32[J]
+    aborted: jax.Array     # bool[J]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class SimState:
     """Mutable (functionally) simulation state for one cluster.
 
@@ -321,10 +355,11 @@ class SimState:
     ev_time: jax.Array      # i32[L] event clock log (-1 = unused slot); [0] w/o machine
     ev_free: jax.Array      # i32[L] free nodes after each event
     ev_lfb: jax.Array       # i32[L] largest free contiguous block after each event
+    rel: RelState | None = None  # reliability state; None = statically elided
 
     @classmethod
     def init(cls, jobs: JobSet, total_nodes: int, machine=None,
-             event_log: int = 0) -> "SimState":
+             event_log: int = 0, failures: bool = False) -> "SimState":
         J = jobs.capacity
         N = machine.n_nodes if machine is not None else 0
         L = int(event_log) if machine is not None else 0
@@ -352,6 +387,14 @@ class SimState:
             ev_time=jnp.full((L,), -1, dtype=jnp.int32),
             ev_free=jnp.zeros((L,), dtype=jnp.int32),
             ev_lfb=jnp.zeros((L,), dtype=jnp.int32),
+            rel=None if not failures else RelState(
+                ptr=jnp.int32(0),
+                last_start=jnp.zeros((J,), dtype=jnp.int32),
+                n_restarts=jnp.zeros((J,), dtype=jnp.int32),
+                lost_work=jnp.zeros((J,), dtype=jnp.int32),
+                aborted=jnp.zeros((J,), dtype=bool),
+                down=jnp.zeros((N,), dtype=bool),
+            ),
         )
 
 
@@ -377,6 +420,7 @@ class SimResult:
     ev_time: jax.Array      # i32[L] per-event clock (-1 = unused slot)
     ev_free: jax.Array      # i32[L] per-event free-node count
     ev_lfb: jax.Array       # i32[L] per-event largest free contiguous block
+    rel: FailureInfo | None = None  # reliability columns; None w/o failures
 
 
 def result_from_state(jobs: JobSet, state: SimState) -> SimResult:
@@ -393,7 +437,29 @@ def result_from_state(jobs: JobSet, state: SimState) -> SimResult:
             src_fin, mode="drop")
         ready = jnp.maximum(jobs.submit, dep_fin)
     wait = jnp.where(jobs.valid, state.start - ready, 0).astype(jnp.int32)
-    fin = jnp.where(jobs.valid & (state.jstate == DONE), state.finish, 0)
+    if state.rel is None:
+        # pinned expression (and trace) order: the failure-free path must
+        # lower to the exact pre-reliability HLO module (fingerprint-tested)
+        fin = jnp.where(jobs.valid & (state.jstate == DONE), state.finish, 0)
+        return SimResult(
+            start=state.start,
+            finish=state.finish,
+            ready=ready,
+            wait=wait,
+            makespan=jnp.max(fin).astype(jnp.int32),
+            n_events=state.n_events,
+            done=(state.jstate == DONE) & jobs.valid,
+            alloc_first=state.alloc_first,
+            alloc_span=state.alloc_span,
+            alloc_sum=state.alloc_sum,
+            ev_time=state.ev_time,
+            ev_free=state.ev_free,
+            ev_lfb=state.ev_lfb,
+        )
+    # an aborted job reached DONE only to terminate the event loop; it is
+    # not a completion — excluded from `done` and the makespan
+    done = jobs.valid & (state.jstate == DONE) & ~state.rel.aborted
+    fin = jnp.where(done, state.finish, 0)
     return SimResult(
         start=state.start,
         finish=state.finish,
@@ -401,11 +467,14 @@ def result_from_state(jobs: JobSet, state: SimState) -> SimResult:
         wait=wait,
         makespan=jnp.max(fin).astype(jnp.int32),
         n_events=state.n_events,
-        done=(state.jstate == DONE) & jobs.valid,
+        done=done,
         alloc_first=state.alloc_first,
         alloc_span=state.alloc_span,
         alloc_sum=state.alloc_sum,
         ev_time=state.ev_time,
         ev_free=state.ev_free,
         ev_lfb=state.ev_lfb,
+        rel=FailureInfo(n_restarts=state.rel.n_restarts,
+                        lost_work=state.rel.lost_work,
+                        aborted=state.rel.aborted),
     )

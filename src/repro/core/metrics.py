@@ -135,6 +135,39 @@ def alloc_summary(res) -> Dict[str, float]:
     }
 
 
+def reliability_summary(res) -> Dict[str, float]:
+    """Scalar reliability metrics (results carrying failure columns,
+    DESIGN.md §15).
+
+    ``goodput`` is the fraction of consumed node-seconds that produced
+    completed work: useful / (useful + lost), where *useful* counts
+    completed (non-aborted) jobs' runtimes and *lost* counts every
+    node-second of checkpoint rework, restart overhead, and aborted
+    partial work the failure model charged.
+
+    Unit caveat: with a contention model active, *lost* accrues in
+    dilated wall-clock units (elapsed time of a dilated run) while
+    *useful* counts nominal runtimes, biasing goodput low by up to the
+    dilation factor — compare goodput across contention settings with
+    care, or run reliability studies with contention off (as
+    ``benchmarks/fig_reliability.py`` does).
+    """
+    valid = np.asarray(res["valid"], dtype=bool)
+    done = valid & np.asarray(res["done"], dtype=bool)
+    nodes = np.asarray(res["nodes"], dtype=np.float64)
+    runtime = np.asarray(res["runtime"], dtype=np.float64)
+    lost = np.asarray(res["lost_work"], dtype=np.float64)
+    useful_ns = float((nodes * runtime)[done].sum())
+    lost_ns = float((nodes * lost)[valid].sum())
+    denom = useful_ns + lost_ns
+    return {
+        "total_restarts": float(np.asarray(res["n_restarts"])[valid].sum()),
+        "n_aborted": float(np.asarray(res["aborted"])[valid].sum()),
+        "lost_node_s": lost_ns,
+        "goodput": useful_ns / denom if denom > 0 else 1.0,
+    }
+
+
 def summary(res, total_nodes: int) -> Dict[str, float]:
     """Scalar metrics used by the five-policy comparison (paper Fig. 4b).
 

@@ -77,6 +77,7 @@ def simulate_ensemble(
     machine=None,
     alloc_b=None,
     contention=None,
+    failures_b=None,
     mesh: Optional[Mesh] = None,
     max_events: Optional[int] = None,
 ) -> SimResult:
@@ -90,6 +91,11 @@ def simulate_ensemble(
     Allocation sweep axis (DESIGN.md §11): with ``machine`` (one static
     topology broadcast to all members) ``alloc_b`` is an i32[B] of placement
     strategy ids — strategy is ensemble data, exactly like policy.
+
+    Reliability sweep axis (DESIGN.md §15): ``failures_b`` is a stacked fail
+    ctx — ``jax.tree.map(jnp.stack, *[make_fail_ctx(t) for t in traces])``
+    — whose leaves carry a leading B dim; per-member failure streams are
+    ensemble data too (uniform ``max_failures`` padding required).
     """
     policies_b = jnp.asarray(policies_b, dtype=jnp.int32)
     total_nodes_b = jnp.asarray(total_nodes_b, dtype=jnp.int32)
@@ -99,8 +105,14 @@ def simulate_ensemble(
                 "alloc_b/contention require machine=; without a Machine the "
                 "ensemble runs in scalar-counter mode and would silently "
                 "ignore them")
-        fn = jax.vmap(functools.partial(simulate, max_events=max_events))
-        args = (jobs_b, policies_b, total_nodes_b)
+        if failures_b is None:
+            fn = jax.vmap(functools.partial(simulate, max_events=max_events))
+            args = (jobs_b, policies_b, total_nodes_b)
+        else:
+            fn = jax.vmap(
+                lambda j, p, t, f: simulate(j, p, t, failures=f,
+                                            max_events=max_events))
+            args = (jobs_b, policies_b, total_nodes_b, failures_b)
     else:
         bad = np.asarray(total_nodes_b) != machine.n_nodes
         if bad.any():
@@ -113,12 +125,20 @@ def simulate_ensemble(
         # ids, numpy arrays, and mixed str/int sequences identically here, in
         # make_alloc_ctx, and in the Scenario sweep layer
         alloc_b = jnp.asarray(_alloc.canonical_id(alloc_b), dtype=jnp.int32)
-        fn = jax.vmap(
-            lambda j, p, t, a: simulate(
-                j, p, t, machine=machine, alloc=a, contention=contention,
-                max_events=max_events)
-        )
-        args = (jobs_b, policies_b, total_nodes_b, alloc_b)
+        if failures_b is None:
+            fn = jax.vmap(
+                lambda j, p, t, a: simulate(
+                    j, p, t, machine=machine, alloc=a, contention=contention,
+                    max_events=max_events)
+            )
+            args = (jobs_b, policies_b, total_nodes_b, alloc_b)
+        else:
+            fn = jax.vmap(
+                lambda j, p, t, a, f: simulate(
+                    j, p, t, machine=machine, alloc=a, contention=contention,
+                    failures=f, max_events=max_events)
+            )
+            args = (jobs_b, policies_b, total_nodes_b, alloc_b, failures_b)
     if mesh is None:
         return jax.jit(fn)(*args)
 

@@ -19,6 +19,15 @@ places nodes through the ``repro.alloc.host`` mirrors (identical
 tie-breaking), applies the same contention dilation, and reports the same
 allocation fingerprints — the host-side oracle for bit-exact validation of
 starts, finishes *and* node maps.
+
+Reliability (DESIGN.md §15): given a ``repro.reliability.FailureTrace``
+this simulator walks the *same* merged failure/repair stream as the JAX
+engine (one shared stable sort, ``repro.reliability.merge_stream``) with
+the same kill rule — machine mode kills the failed node's owner, scalar
+mode kills the job covering slot ``node % n_up`` of the row-order running
+node cumsum — the same requeue/abort transitions, and the same checkpoint
+rework accounting, recording every kill in an explicit ``kill_log`` the
+differential tests audit ``n_restarts`` against.
 """
 
 from __future__ import annotations
@@ -34,6 +43,7 @@ from repro.alloc import host as _host
 from repro.core.jobs import (
     BACKFILL, BESTFIT, FCFS, LJF, PREEMPT, SJF, dep_edge_arrays,
 )
+from repro.reliability.model import FAIL, REQUEUE, merge_stream
 
 _POL = {"fcfs": FCFS, "sjf": SJF, "ljf": LJF, "bestfit": BESTFIT,
         "backfill": BACKFILL, "preempt": PREEMPT}
@@ -53,6 +63,10 @@ class _Job:
     alloc_first: int = -1
     alloc_span: int = 0
     alloc_sum: int = 0
+    last_start: int = -1   # latest dispatch (checkpoint base, shadow math)
+    n_restarts: int = 0
+    lost_work: int = 0
+    aborted: bool = False
 
 
 @dataclass
@@ -62,6 +76,7 @@ class ReferenceSimulator:
     machine: object = None          # repro.alloc.Machine or its to_host() dict
     alloc: str = "simple"
     contention: object = None       # repro.alloc.Contention, (num, den), or None
+    failures: object = None         # repro.reliability.FailureTrace or None
     jobs: List[_Job] = field(default_factory=list)
     dep_pairs: List[tuple] = field(default_factory=list)  # sorted-row indices
 
@@ -136,9 +151,11 @@ class ReferenceSimulator:
             head = min(waiting, key=lambda j: j.idx)
             if head.nodes <= cap:
                 return head
-            # shadow via estimates of running jobs (free-count based, pinned)
+            # shadow via estimates of running jobs (free-count based, pinned;
+            # keyed on the LATEST dispatch — the engine's rsv_finish — which
+            # equals the first start unless a failure requeued the job)
             rel = sorted(
-                (max(j.start + j.estimate, clock + 1), j.idx, j.nodes)
+                (max(j.last_start + j.estimate, clock + 1), j.idx, j.nodes)
                 for j in running
             )
             cum, shadow, extra = free, None, free
@@ -202,22 +219,81 @@ class ReferenceSimulator:
         ev_free: List[int] = []
         ev_lfb: List[int] = []
 
+        # reliability: the merged failure/repair stream (one shared stable
+        # sort with the engine), outage bookkeeping, and the kill log
+        fail = self.failures
+        if fail is not None:
+            from repro.core.jobs import INF_TIME
+            st_time, st_node, st_kind = merge_stream(fail)
+            n_stream = int((st_time < int(INF_TIME)).sum())
+            requeue = int(fail.requeue) == REQUEUE
+            ckpt = int(fail.checkpoint_interval)
+            overhead = int(fail.restart_overhead)
+        ptr = 0
+        down = (np.zeros(self.total_nodes, dtype=bool)
+                if (fail is not None and owner is not None) else None)
+        kill_log: List[dict] = []
+        live = n  # jobs not yet completed or aborted
+
+        def owner_view() -> np.ndarray:
+            """Occupancy map as the placement strategies see it: down nodes
+            painted with the out-of-range owner id ``n`` (engine mirror)."""
+            if down is None:
+                return owner
+            return np.where(down, n, owner)
+
         def cap_now() -> int:
             if owner is None:
                 return free
-            return _host.placeable_cap_host(self.alloc, owner)
+            return _host.placeable_cap_host(self.alloc, owner_view())
 
-        while n_unarrived or heap:
+        def kill(j: _Job, node: int) -> None:
+            """Apply the requeue/abort rule to a job hit by a node failure."""
+            nonlocal free, live
+            el = clock - j.last_start
+            saved = (el // ckpt) * ckpt if ckpt > 0 else 0
+            lost = el - saved
+            del running[j.idx]
+            free += j.nodes
+            if owner is not None:
+                owner[owner == j.idx] = -1
+            if requeue:
+                j.remaining = max(j.finish - clock + lost + overhead, 1)
+                j.finish = -1
+                j.n_restarts += 1
+                j.lost_work += lost + overhead
+                waiting.append(j)
+            else:
+                j.aborted = True
+                j.finish = clock
+                j.lost_work += el
+                live -= 1
+                for t in dependents[j.idx]:   # after-any release
+                    unmet[t] -= 1
+                    last_dep_fin[t] = max(last_dep_fin[t], clock)
+                    if unmet[t] == 0:
+                        heapq.heappush(rel_heap, t)
+            kill_log.append({"time": clock, "node": node, "job": j.idx,
+                             "requeued": requeue, "lost": lost})
+
+        def more_events() -> bool:
+            if fail is None:
+                return bool(n_unarrived or heap)
+            return live > 0
+
+        while more_events():
             while heap and (heap[0][1] not in running
                             or running[heap[0][1]].finish != heap[0][0]):
-                heapq.heappop(heap)   # stale entry from a preemption
+                heapq.heappop(heap)   # stale entry from a preemption/kill
             # released PENDING jobs only: a job with unmet dependencies
             # generates no arrival event (mirrors the engine's release rule)
             t_arr = jobs[rel_heap[0]].submit if rel_heap else None
             t_fin = heap[0][0] if heap else None
-            assert t_arr is not None or t_fin is not None, \
+            t_rel = (st_time[ptr] if fail is not None and ptr < n_stream
+                     else None)
+            assert t_arr is not None or t_fin is not None or t_rel is not None, \
                 "deadlock: blocked jobs with no running dependency"
-            clock = min(x for x in (t_arr, t_fin) if x is not None)
+            clock = min(x for x in (t_arr, t_fin, t_rel) if x is not None)
             n_events += 1
             # completions first (skip heap entries stale after preemption);
             # completing a job releases its dependents *now*, before the
@@ -229,6 +305,7 @@ class ReferenceSimulator:
                     continue  # stale: the job was preempted and re-queued
                 del running[idx]
                 free += j.nodes
+                live -= 1
                 for t in dependents[idx]:
                     unmet[t] -= 1
                     last_dep_fin[t] = max(last_dep_fin[t], fin)
@@ -236,6 +313,43 @@ class ReferenceSimulator:
                         heapq.heappush(rel_heap, t)
                 if owner is not None:
                     owner[owner == idx] = -1
+            # reliability events: after completions (a job finishing at the
+            # failure instant has completed), before arrivals (a dependent
+            # of an aborted job releases within this same event)
+            while fail is not None and ptr < n_stream \
+                    and st_time[ptr] <= clock:
+                node, kind = int(st_node[ptr]), int(st_kind[ptr])
+                ptr += 1
+                if kind == FAIL:
+                    if owner is not None:
+                        if down[node]:
+                            continue  # total-semantics guard (never renewal)
+                        victim = int(owner[node])
+                        down[node] = True
+                        free -= 1
+                        if victim >= 0:
+                            kill(running[victim], node)
+                    else:
+                        # anonymous nodes: slot rule over the row-order
+                        # running cumsum (engine mirror, DESIGN.md §15)
+                        busy = sum(j.nodes for j in running.values())
+                        n_up = free + busy
+                        slot = node % max(n_up, 1)
+                        free -= 1
+                        if slot < busy:
+                            cum = 0
+                            for j in sorted(running.values(),
+                                            key=lambda v: v.idx):
+                                cum += j.nodes
+                                if cum > slot:
+                                    kill(j, node)
+                                    break
+                else:  # REPAIR
+                    if owner is not None:
+                        if not down[node]:
+                            continue
+                        down[node] = False
+                    free += 1
             # arrivals: submit reached AND all dependencies DONE
             while rel_heap and jobs[rel_heap[0]].submit <= clock:
                 i = heapq.heappop(rel_heap)
@@ -268,9 +382,13 @@ class ReferenceSimulator:
                 waiting.remove(j)
                 if j.start < 0:
                     j.start = clock   # first dispatch only
+                j.last_start = clock  # checkpoint base / rsv shadow key
                 dilated = j.remaining
                 if owner is not None:
-                    ids = _host.place_host(self.alloc, mach, owner, j.nodes)
+                    ids = _host.place_host(self.alloc, mach, owner_view(),
+                                           j.nodes)
+                    assert down is None or not down[ids].any(), \
+                        "placement invariant violated: job on a down node"
                     owner[ids] = j.idx
                     j.alloc_span = _host.group_span_host(mach, ids)
                     j.alloc_first, j.alloc_sum = _host.fingerprint_host(ids)
@@ -283,7 +401,7 @@ class ReferenceSimulator:
             if owner is not None:
                 ev_time.append(clock)
                 ev_free.append(free)
-                ev_lfb.append(_host.largest_free_run_host(owner))
+                ev_lfb.append(_host.largest_free_run_host(owner_view()))
 
         out = {
             "submit": np.array([j.submit for j in jobs], dtype=np.int64),
@@ -296,7 +414,18 @@ class ReferenceSimulator:
         out["wait"] = out["start"] - out["ready"]
         out["done"] = out["start"] >= 0
         out["valid"] = np.ones(n, dtype=bool)
-        out["makespan"] = int(out["finish"].max(initial=0))
+        if fail is not None:
+            aborted = np.array([j.aborted for j in jobs], dtype=bool)
+            out["done"] = out["done"] & ~aborted
+            out["aborted"] = aborted
+            out["n_restarts"] = np.array(
+                [j.n_restarts for j in jobs], dtype=np.int64)
+            out["lost_work"] = np.array(
+                [j.lost_work for j in jobs], dtype=np.int64)
+            out["kill_log"] = kill_log
+            out["makespan"] = int(out["finish"][out["done"]].max(initial=0))
+        else:
+            out["makespan"] = int(out["finish"].max(initial=0))
         out["n_events"] = n_events
         if mach is not None:
             out["alloc_first"] = np.array(
@@ -312,10 +441,13 @@ class ReferenceSimulator:
 
 
 def simulate_reference(trace, policy: str, *, total_nodes: int, machine=None,
-                       alloc: str = "simple", contention=None):
+                       alloc: str = "simple", contention=None, failures=None):
+    """One-call host oracle.  ``failures`` is a materialized
+    ``repro.reliability.FailureTrace`` (NOT a ``FailureModel`` — both
+    engines must consume the identical arrays, so materialize once)."""
     sim = ReferenceSimulator(total_nodes=total_nodes, policy=policy,
                              machine=machine, alloc=alloc,
-                             contention=contention)
+                             contention=contention, failures=failures)
     sim.load(trace["submit"], trace["runtime"], trace["nodes"],
              trace.get("estimate"), trace.get("priority"),
              deps=trace.get("deps"))

@@ -1,0 +1,19 @@
+"""Reliability-aware simulation (DESIGN.md §15).
+
+Node failures, job requeue/abort, and checkpoint-restart rework as a
+first-class scenario axis: a frozen :class:`FailureModel` materializes
+deterministic seeded failure/repair event streams that both engines
+consume bit-identically.  ``failures=None`` statically elides the whole
+subsystem — the no-failure engine compiles to the exact pre-reliability
+event graph (property-tested via HLO fingerprints).
+"""
+
+from repro.reliability.model import (
+    ABORT, FAIL, REPAIR, REQUEUE, REQUEUE_IDS, REQUEUE_NAMES,
+    FailureModel, FailureTrace, make_fail_ctx, merge_stream,
+)
+
+__all__ = [
+    "ABORT", "FAIL", "REPAIR", "REQUEUE", "REQUEUE_IDS", "REQUEUE_NAMES",
+    "FailureModel", "FailureTrace", "make_fail_ctx", "merge_stream",
+]

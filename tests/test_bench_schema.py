@@ -1,0 +1,79 @@
+"""Schema regression tests for the engine perf artifact (ISSUE 5).
+
+``benchmarks/des_throughput.py`` emits ``results/BENCH_engine.json`` — the
+machine-readable perf trajectory future PRs regress against.  A benchmark
+refactor that silently changes keys or units would corrupt that trajectory
+without failing anything; these tests pin the schema:
+
+- every case carries a positive ``run_s``; engine cases carry ``n_events``
+  / ``events_per_s`` / ``compile_s`` that are mutually consistent;
+- wall-clock stamps are present and monotonic (schema >= 2);
+- the checked-in artifact (if present) parses under the same validator;
+- the smoke variant produces the identical shape (slow lane: it runs the
+  real benchmark at tiny sizes).
+"""
+
+import json
+import os
+
+import pytest
+
+RESULTS_JSON = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "BENCH_engine.json")
+
+
+def validate_bench_report(report: dict) -> None:
+    assert isinstance(report.get("schema"), int) and report["schema"] >= 1
+    assert isinstance(report.get("smoke"), bool)
+    cases = report.get("cases")
+    assert isinstance(cases, dict) and cases, "report carries no cases"
+    for name, case in cases.items():
+        assert isinstance(case, dict), name
+        assert case.get("run_s", 0) > 0, f"{name}: run_s must be positive"
+        if "n_events" in case:  # engine throughput case
+            assert case["n_events"] > 0, name
+            assert case.get("events_per_s", 0) > 0, name
+            assert case.get("compile_s", -1) >= 0, name
+            # events/s == n_events / run_s (same units: events, seconds)
+            want = case["n_events"] / case["run_s"]
+            assert abs(case["events_per_s"] - want) <= 1e-6 * max(want, 1), \
+                f"{name}: events_per_s inconsistent with n_events/run_s"
+        if "GBps" in case:      # kernel bandwidth case
+            assert case["GBps"] > 0, name
+    if report["schema"] >= 2:
+        t0, t1 = report["generated_unix"], report["finished_unix"]
+        assert t0 > 1e9, "generated_unix is not an epoch timestamp"
+        assert t1 >= t0, "timestamps must be monotonic"
+
+
+def test_checked_in_artifact_parses():
+    """The committed perf artifact stays machine-readable."""
+    if not os.path.exists(RESULTS_JSON):
+        pytest.skip("no committed BENCH_engine.json")
+    with open(RESULTS_JSON) as f:
+        report = json.load(f)
+    validate_bench_report(report)
+    # the perf trajectory needs the headline cases to exist under stable
+    # names; renaming them silently orphans every historical comparison
+    full_run_cases = {"nodeps_fcfs", "nodeps_backfill"}
+    smoke_cases = {"nodeps_fcfs", "galactic_smoke_fcfs"}
+    have = set(report["cases"])
+    assert (full_run_cases <= have) or (smoke_cases <= have), sorted(have)
+
+
+@pytest.mark.slow
+def test_smoke_run_emits_valid_schema(tmp_path):
+    """`--smoke` produces the same artifact shape the full run does (CI
+    uploads it), validated end-to-end."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.des_throughput import run_bench
+
+    report = run_bench(str(tmp_path), smoke=True)
+    validate_bench_report(report)
+    assert report["smoke"] is True
+    assert report["schema"] >= 2
+    with open(tmp_path / "BENCH_engine.json") as f:
+        on_disk = json.load(f)
+    validate_bench_report(on_disk)
+    assert on_disk["cases"].keys() == report["cases"].keys()

@@ -260,6 +260,73 @@ def test_batched_pass_starts_exact_feasible_prefix():
     np.testing.assert_array_equal(np.asarray(res.finish), ref["finish"])
 
 
+# ---------------------------------------------------------------------------
+# reliability elision (ISSUE 5): failures=None is the pre-reliability engine
+# ---------------------------------------------------------------------------
+
+
+def test_failures_none_hlo_identical_to_pre_reliability_head():
+    """The strongest seed-identity property: lowering the engine with
+    ``failures=None`` across the policy x alloc x DAG differential grid
+    produces byte-identical StableHLO modules to the commit BEFORE the
+    reliability subsystem existed (hashes recorded in
+    ``tests/data/hlo_nofail.json`` at that commit).  Identical programs
+    imply bit-identical results, so this subsumes output comparison.
+
+    Regenerate the fixture ONLY for intentional engine-graph changes:
+    ``PYTHONPATH=src:tests python tests/_hlo_fixture.py --write``.
+    """
+    import jax
+
+    from _hlo_fixture import fingerprints, load_fixture
+
+    fixture = load_fixture()
+    if fixture["jax_version"] != jax.__version__:
+        pytest.skip(f"fixture lowered with jax {fixture['jax_version']}, "
+                    f"running {jax.__version__}")
+    got = fingerprints()
+    want = fixture["hashes"]
+    assert set(got) == set(want)
+    bad = sorted(k for k in want if want[k] != got[k])
+    assert not bad, (
+        f"failures=None no longer lowers to the pre-reliability HLO for "
+        f"{bad}; the reliability subsystem must stay statically elided")
+
+
+def test_failures_none_result_carries_no_reliability_state():
+    jobs = make_jobset([0, 0], [5, 5], [1, 1], total_nodes=4)
+    res = simulate(jobs, 0, 4)
+    assert res.rel is None
+    from repro.core.jobs import SimState
+    assert SimState.init(jobs, 4).n_unmet.shape == (0,)
+    assert SimState.init(jobs, 4).rel is None
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       policy=st.sampled_from(ALL_POLICIES))
+def test_empty_failure_stream_is_semantically_elided(seed, policy):
+    """Property over random traces: an attached-but-eventless failure model
+    never perturbs the schedule (the executables differ, the event graphs
+    agree — HLO identity for failures=None itself is the test above)."""
+    from repro.reliability import FailureModel
+
+    rng = np.random.default_rng(seed)
+    n = 50
+    trace = dict(submit=rng.integers(0, 300, n), runtime=rng.integers(1, 60, n),
+                 nodes=rng.integers(1, 8, n), estimate=rng.integers(1, 80, n),
+                 priority=rng.integers(0, 3, n))
+    jobs = make_jobset(**trace, total_nodes=16)
+    quiet = FailureModel(mtbf=1e12, max_failures=8).materialize(16)
+    assert quiet.n_failures == 0
+    a = simulate(jobs, POLICY_IDS[policy], 16)
+    b = simulate(jobs, POLICY_IDS[policy], 16, failures=quiet)
+    for f in ("start", "finish", "ready", "wait"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), f)
+    assert int(a.n_events) == int(b.n_events)
+
+
 def test_traced_policy_keeps_seed_semantics_under_vmap():
     """A vmapped policy axis cannot specialize statically; the ensemble path
     must still match per-policy single runs (i.e. the dynamic loop is intact

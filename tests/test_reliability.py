@@ -1,0 +1,513 @@
+"""Reliability-aware simulation (ISSUE 5, DESIGN.md §15): node failures,
+requeue, and checkpoint-restart, locked down by a differential
+failure-trace harness.
+
+- model: deterministic seeded renewal streams (a node never fails while
+  down, failures and repairs are kept/dropped in pairs, padding is inert),
+  and the merged stream both engines walk is pinned by one shared sort;
+- semantics: hand-built failure traces exercise the kill rule, the
+  checkpoint rework charge, requeue-at-submit-rank, and abort's after-any
+  dependent release, against closed-form expected schedules;
+- differential: engine vs refsim bit-exact (starts, finishes, restarts,
+  lost work, aborts, node maps) over {3 MTBF levels} x {requeue, abort} x
+  {3 policies} x {scalar, mesh2d+contiguous} — the big grid rides the
+  ``slow`` lane, a 4-config corner stays in the fast lane;
+- properties (hypothesis): random failure streams on random traces keep
+  the engines bit-identical, ``n_restarts`` matches the refsim kill log,
+  completed work never exceeds submitted work plus charged rework, and no
+  job is ever placed on a down node (asserted inside the refsim oracle);
+- sweeps: an MTBF x requeue-policy grid compiles to ONE executable.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.api import (
+    ArrayTrace, FailureModel, Scenario, SyntheticTrace, Topology, run,
+    run_ref, sweep,
+)
+from repro.core.engine import simulate
+from repro.core.jobs import INF_TIME, POLICY_IDS, make_jobset
+from repro.refsim import simulate_reference
+from repro.reliability import (
+    FAIL, REPAIR, FailureTrace, make_fail_ctx, merge_stream,
+)
+
+MTBFS = (300.0, 800.0, 2500.0)
+POLICIES = ("fcfs", "sjf", "backfill")
+REQUEUE_MODES = ("requeue", "abort")
+
+
+def _model(mtbf, requeue="requeue", **kw):
+    kw.setdefault("seed", 7)
+    kw.setdefault("mean_repair", 50)
+    kw.setdefault("horizon", 4000)
+    kw.setdefault("max_failures", 32)
+    kw.setdefault("checkpoint_interval", 20)
+    kw.setdefault("restart_overhead", 5)
+    return FailureModel(mtbf=mtbf, requeue=requeue, **kw)
+
+
+def _trace(n=60, seed=1, total_nodes=16):
+    rng = np.random.default_rng(seed)
+    return dict(submit=rng.integers(0, 400, n), runtime=rng.integers(5, 80, n),
+                nodes=rng.integers(1, 6, n), estimate=rng.integers(5, 100, n))
+
+
+def _scenario(mode, mtbf, requeue, policy, trace=None):
+    trace = trace if trace is not None else _trace()
+    kw = dict(trace=ArrayTrace.from_dict(trace), policy=policy,
+              failures=_model(mtbf, requeue))
+    if mode == "scalar":
+        return Scenario(total_nodes=16, **kw)
+    return Scenario(topology=Topology.mesh2d(4, 4), alloc="contiguous", **kw)
+
+
+def _assert_bit_exact(scn):
+    res, ref = run(scn), run_ref(scn)
+    assert res.matches(ref, node_maps=scn.topology is not None), scn
+    a, b = res.to_np(), ref.to_np()
+    for key in ("n_restarts", "lost_work", "aborted", "done", "ready",
+                "wait"):
+        n = int(b["valid"].sum())
+        np.testing.assert_array_equal(a[key][:n], b[key][:n], err_msg=key)
+    assert int(a["n_events"]) == int(b["n_events"])
+
+
+# ---------------------------------------------------------------------------
+# model: deterministic materialization, renewal invariants, stream pinning
+# ---------------------------------------------------------------------------
+
+
+def test_materialize_is_deterministic_and_padded():
+    fm = _model(500.0)
+    a, b = fm.materialize(16), fm.materialize(16)
+    np.testing.assert_array_equal(a.fail_time, b.fail_time)
+    np.testing.assert_array_equal(a.fail_node, b.fail_node)
+    np.testing.assert_array_equal(a.repair_time, b.repair_time)
+    assert a.capacity == fm.max_failures
+    assert (a.fail_time[a.n_failures:] == INF_TIME).all()
+    assert (a.repair_time[a.n_failures:] == INF_TIME).all()
+    # sorted by (fail_time, node), repairs strictly after failures
+    live_t = a.fail_time[:a.n_failures]
+    assert (np.diff(live_t) >= 0).all()
+    assert (a.repair_time[:a.n_failures] > live_t).all()
+
+
+def test_renewal_never_fails_a_down_node():
+    fm = _model(120.0, mean_repair=200, max_failures=64)
+    tr = fm.materialize(8)
+    for node in range(8):
+        sel = tr.fail_node[:tr.n_failures] == node
+        fails = tr.fail_time[:tr.n_failures][sel]
+        repairs = tr.repair_time[:tr.n_failures][sel]
+        # per-node intervals [fail, repair) are disjoint and ordered
+        assert (fails[1:] > repairs[:-1]).all()
+
+
+def test_merge_stream_orders_fail_before_repair_on_ties():
+    tr = FailureTrace(
+        fail_time=np.array([10, 20], np.int32),
+        fail_node=np.array([0, 1], np.int32),
+        repair_time=np.array([20, 30], np.int32),   # node 0 repair ties node 1 fail
+        requeue=1, checkpoint_interval=0, restart_overhead=0, n_failures=2)
+    t, node, kind = merge_stream(tr)
+    assert t.tolist() == [10, 20, 20, 30]
+    # stable sort over [fails..., repairs...]: the t=20 fail precedes the repair
+    assert kind.tolist() == [FAIL, FAIL, REPAIR, REPAIR]
+    assert node.tolist() == [0, 1, 0, 1]
+
+
+def test_failure_model_validation():
+    with pytest.raises(ValueError, match="mtbf"):
+        FailureModel(mtbf=0.0)
+    with pytest.raises(ValueError, match="distribution"):
+        FailureModel(mtbf=10.0, distribution="pareto")
+    with pytest.raises(ValueError, match="requeue"):
+        FailureModel(mtbf=10.0, requeue="retry")
+    with pytest.raises(ValueError, match="horizon"):
+        FailureModel(mtbf=10.0, horizon=int(INF_TIME))
+    with pytest.raises(TypeError, match="FailureModel"):
+        Scenario(trace=_trace(), total_nodes=16,
+                 failures=_model(100.0).materialize(16))
+    with pytest.raises(ValueError, match="multicluster"):
+        from repro.api import Multicluster
+        Scenario(trace=(SyntheticTrace(n_jobs=10), SyntheticTrace(n_jobs=10)),
+                 total_nodes=8, multicluster=Multicluster(window=64),
+                 failures=_model(100.0))
+
+
+def test_truncation_is_flagged_and_warned():
+    """A stream that saturates max_failures keeps only the earliest window
+    — legitimate for bounded differential tests, but a silent saturation
+    would turn an MTBF sweep into a truncation study, so it is loud."""
+    import repro.reliability.model as _m
+
+    harsh = FailureModel(mtbf=50.0, mean_repair=10, horizon=4000,
+                         max_failures=8)
+    _m._materialize.cache_clear()       # the warning fires once per cache miss
+    with pytest.warns(UserWarning, match="keeping only the earliest"):
+        tr = harsh.materialize(16)
+    assert tr.truncated and tr.n_failures == 8
+    quiet = FailureModel(mtbf=1e9, max_failures=8)
+    assert not quiet.materialize(16).truncated
+
+
+def test_weibull_stream_differs_from_exponential():
+    exp = FailureModel(mtbf=300.0, seed=0).materialize(8)
+    wei = FailureModel(mtbf=300.0, seed=0, distribution="weibull",
+                       k=0.7).materialize(8)
+    assert not np.array_equal(exp.fail_time, wei.fail_time)
+
+
+# ---------------------------------------------------------------------------
+# semantics: hand-built traces against closed-form schedules
+# ---------------------------------------------------------------------------
+
+
+def _one_failure(t_fail, node, t_repair, requeue=1, ckpt=0, overhead=0):
+    return FailureTrace(
+        fail_time=np.array([t_fail], np.int32),
+        fail_node=np.array([node], np.int32),
+        repair_time=np.array([t_repair], np.int32),
+        requeue=requeue, checkpoint_interval=ckpt, restart_overhead=overhead,
+        n_failures=1)
+
+
+def test_checkpoint_rework_closed_form():
+    """One 4-node job on 4 nodes, killed at t=50 with 20s checkpoints:
+    work since the last checkpoint (10s) is lost, the job waits out the
+    repair (t=80) because it needs the whole machine, and finishes at
+    80 + remaining(50) + lost(10) + overhead(5) = 145."""
+    jobs = make_jobset([0], [100], [4], total_nodes=4)
+    ft = _one_failure(50, 2, 80, ckpt=20, overhead=5)
+    res = simulate(jobs, POLICY_IDS["fcfs"], 4, failures=ft)
+    assert int(res.start[0]) == 0
+    assert int(res.finish[0]) == 145
+    assert int(res.rel.n_restarts[0]) == 1
+    assert int(res.rel.lost_work[0]) == 15       # 10 rework + 5 overhead
+    assert not bool(res.rel.aborted[0])
+    ref = simulate_reference(dict(submit=[0], runtime=[100], nodes=[4]),
+                             "fcfs", total_nodes=4, failures=ft)
+    assert ref["finish"][0] == 145 and ref["n_restarts"][0] == 1
+    assert len(ref["kill_log"]) == 1 and ref["kill_log"][0]["lost"] == 10
+
+
+def test_no_checkpoint_means_full_rework():
+    """checkpoint_interval=0: the whole 50s of progress is lost."""
+    jobs = make_jobset([0], [100], [4], total_nodes=4)
+    ft = _one_failure(50, 0, 60, ckpt=0)
+    res = simulate(jobs, POLICY_IDS["fcfs"], 4, failures=ft)
+    # restart at repair (t=60): remaining 50 + lost 50 => finish 160
+    assert int(res.finish[0]) == 160
+    assert int(res.rel.lost_work[0]) == 50
+
+
+def test_requeue_rejoins_at_submit_rank():
+    """The killed job outranks later submits when it requeues: FCFS keys on
+    submit, so the victim (submit=0) restarts before the t=5 job."""
+    trace = dict(submit=[0, 5], runtime=[100, 30], nodes=[4, 4])
+    jobs = make_jobset(**trace, total_nodes=4)
+    ft = _one_failure(50, 1, 55, ckpt=0)
+    res = simulate(jobs, POLICY_IDS["fcfs"], 4, failures=ft)
+    ref = simulate_reference(trace, "fcfs", total_nodes=4, failures=ft)
+    np.testing.assert_array_equal(np.asarray(res.start)[:2], ref["start"])
+    np.testing.assert_array_equal(np.asarray(res.finish)[:2], ref["finish"])
+    # victim restarts at t=55 (repair), job 1 waits for it to finish
+    assert int(res.start[1]) > int(res.finish[0]) - 30 - 1  # sanity
+    assert ref["start"][1] == ref["finish"][0]
+
+
+def test_abort_terminates_and_releases_dependents():
+    """Under "abort" the killed job is DONE-but-failed at the kill time and
+    its dependents release immediately (after-any), not at its would-be
+    completion."""
+    trace = dict(submit=[0, 0], runtime=[100, 10], nodes=[4, 1],
+                 deps=[(1, 0)])
+    jobs = make_jobset(**trace, total_nodes=4)
+    ft = _one_failure(40, 3, 90, requeue=0)
+    res = simulate(jobs, POLICY_IDS["fcfs"], 4, failures=ft)
+    assert bool(res.rel.aborted[0]) and not bool(res.rel.aborted[1])
+    assert int(res.finish[0]) == 40              # abort time, not 100
+    assert not bool(res.done[0]) and bool(res.done[1])
+    assert int(res.ready[1]) == 40               # released by the abort
+    ref = simulate_reference(trace, "fcfs", total_nodes=4, failures=ft)
+    assert ref["aborted"][0] and ref["ready"][1] == 40
+    np.testing.assert_array_equal(np.asarray(res.start)[:2], ref["start"])
+    # makespan excludes the aborted job's would-be finish
+    assert int(res.makespan) == int(res.finish[1]) == ref["makespan"]
+
+
+def test_requeue_does_not_release_dependents_early():
+    """A requeued dependency is WAITING, not DONE: its dependent releases
+    only at the real (post-restart) completion."""
+    trace = dict(submit=[0, 0], runtime=[100, 10], nodes=[4, 1],
+                 deps=[(1, 0)])
+    jobs = make_jobset(**trace, total_nodes=4)
+    ft = _one_failure(40, 3, 45, requeue=1, ckpt=0)
+    res = simulate(jobs, POLICY_IDS["fcfs"], 4, failures=ft)
+    # restart at 45 with full 100s rework => finish 145; dependent after
+    assert int(res.finish[0]) == 145
+    assert int(res.ready[1]) == 145
+    ref = simulate_reference(trace, "fcfs", total_nodes=4, failures=ft)
+    np.testing.assert_array_equal(np.asarray(res.finish)[:2], ref["finish"])
+
+
+def test_idle_node_failure_shrinks_capacity_only():
+    """A failure landing on an idle slot kills nobody but removes one node
+    from service until the repair."""
+    trace = dict(submit=[0, 10], runtime=[20, 20], nodes=[2, 4])
+    jobs = make_jobset(**trace, total_nodes=4)
+    # scalar slot rule: at t=5 busy=2 (job 0), n_up=4, node id 2 -> slot 2
+    # >= busy -> idle hit; job 1 (4 nodes) must wait for the repair at 30
+    ft = _one_failure(5, 2, 30)
+    res = simulate(jobs, POLICY_IDS["fcfs"], 4, failures=ft)
+    assert int(res.rel.n_restarts.sum()) == 0
+    assert int(res.start[1]) == 30
+    ref = simulate_reference(trace, "fcfs", total_nodes=4, failures=ft)
+    assert ref["kill_log"] == [] and ref["start"][1] == 30
+
+
+def test_down_node_is_never_placed_on_mesh():
+    """Machine mode: the failed node is excluded from placement until its
+    repair — the job that fits only with that node waits."""
+    topo = Topology.mesh2d(2, 2)
+    trace = dict(submit=[0, 2], runtime=[50, 20], nodes=[2, 2])
+    scn = Scenario(trace=ArrayTrace.from_dict(trace), topology=topo,
+                   policy="fcfs", alloc="simple",
+                   failures=_model(1e9, max_failures=1))
+    # node 3 fails at t=1 (idle — job 0 holds nodes 0,1; job 1 submits later),
+    # and is back only at t=100
+    ft = _one_failure(1, 3, 100)
+    jobs = make_jobset(**trace, total_nodes=4)
+    res = simulate(jobs, POLICY_IDS["fcfs"], 4, machine=topo.build(),
+                   alloc="simple", failures=ft)
+    # job 1 needs 2 nodes; only node 2 is up+free until t=50... then job 0's
+    # nodes free at 50 -> job 1 starts at 50 on nodes 0,1 (first-fit)
+    assert int(res.start[1]) == 50
+    assert int(res.alloc_first[1]) == 0
+    ref = simulate_reference(trace, "fcfs", total_nodes=4,
+                             machine=topo.build(), alloc="simple", failures=ft)
+    np.testing.assert_array_equal(np.asarray(res.start)[:2], ref["start"])
+    np.testing.assert_array_equal(np.asarray(res.alloc_sum)[:2],
+                                  ref["alloc_sum"])
+    assert scn.failures.max_failures == 1  # scenario spec sanity
+
+
+# ---------------------------------------------------------------------------
+# differential grid: engine vs refsim bit-exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ("scalar", "mesh"))
+@pytest.mark.parametrize("requeue", REQUEUE_MODES)
+def test_differential_corner_fast(mode, requeue):
+    """Fast-lane corner of the big grid: one MTBF, FCFS, both kill rules,
+    both machine modes."""
+    _assert_bit_exact(_scenario(mode, 800.0, requeue, "fcfs"))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ("scalar", "mesh"))
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("requeue", REQUEUE_MODES)
+@pytest.mark.parametrize("mtbf", MTBFS)
+def test_differential_grid(mtbf, requeue, policy, mode):
+    """The full {3 MTBF} x {requeue, abort} x {3 policies} x {scalar,
+    mesh2d+contiguous} differential grid (ISSUE 5 acceptance)."""
+    _assert_bit_exact(_scenario(mode, mtbf, requeue, policy))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ("preempt", "bestfit", "ljf"))
+def test_differential_remaining_policies_scalar(policy):
+    """The policies outside the headline grid stay bit-exact too (preempt
+    composes kills with preemption suspends)."""
+    trace = _trace(seed=3)
+    trace["priority"] = np.random.default_rng(3).integers(0, 3, 60)
+    _assert_bit_exact(_scenario("scalar", 500.0, "requeue", policy, trace))
+
+
+def test_zero_failure_stream_matches_failures_none():
+    """A failure model whose horizon produces no events is semantically the
+    no-failure engine: bit-identical schedules (the executables differ —
+    HLO identity for failures=None itself is pinned in
+    test_engine_fastpath)."""
+    trace = _trace(seed=5)
+    jobs = make_jobset(**trace, total_nodes=16)
+    quiet = FailureModel(mtbf=1e12, max_failures=8, horizon=1 << 19)
+    ft = quiet.materialize(16)
+    assert ft.n_failures == 0
+    for policy in ("fcfs", "backfill"):
+        a = simulate(jobs, POLICY_IDS[policy], 16)
+        b = simulate(jobs, POLICY_IDS[policy], 16, failures=ft)
+        np.testing.assert_array_equal(np.asarray(a.start), np.asarray(b.start))
+        np.testing.assert_array_equal(np.asarray(a.finish),
+                                      np.asarray(b.finish))
+        assert int(b.rel.n_restarts.sum()) == 0
+        assert int(a.n_events) == int(b.n_events)
+    assert a.rel is None and b.rel is not None
+
+
+# ---------------------------------------------------------------------------
+# sweeps: failure arrays are vmap leaves
+# ---------------------------------------------------------------------------
+
+
+def test_mtbf_sweep_single_executable():
+    scn = Scenario(trace=SyntheticTrace(n_jobs=50, seed=0, kind="sdsc_sp2",
+                                        congest=4),
+                   total_nodes=32, policy="fcfs", failures=_model(500.0))
+    grid = sweep(scn, axes={
+        "failures.mtbf": (200.0, 400.0, 600.0, 900.0, 1500.0, 3000.0),
+        "failures.requeue": ("requeue", "abort"),
+    })
+    assert grid.n_compiles == 1
+    for point, res in grid:
+        ref = run_ref(res.scenario)
+        assert res.matches(ref), point
+        np.testing.assert_array_equal(res["n_restarts"], ref["n_restarts"])
+    # the reliability axis is live: kills happen, and low MTBF materializes
+    # at least as many failures as high MTBF (restart *counts* need not be
+    # monotone — max_failures truncates the low-MTBF stream to its earliest
+    # window, so late-arriving jobs there run failure-free)
+    n_restarts = {p["failures.mtbf"]: s["total_restarts"]
+                  for p, s in zip(grid.points, grid.summaries())
+                  if p["failures.requeue"] == "requeue"}
+    assert any(v > 0 for v in n_restarts.values())
+    fails_at = {m: _model(m, "requeue").materialize(32).n_failures
+                for m in (200.0, 3000.0)}
+    assert fails_at[200.0] >= fails_at[3000.0]
+
+
+def test_total_nodes_stays_a_vmap_axis_with_failures():
+    """Scalar-counter mode: machine size is traced data even with a failure
+    model attached (streams materialize host-side per point; no compiled
+    shape depends on total_nodes without a topology)."""
+    scn = Scenario(trace=SyntheticTrace(n_jobs=30, seed=0), total_nodes=16,
+                   failures=_model(800.0))
+    grid = sweep(scn, axes={"total_nodes": (12, 16, 24),
+                            "failures.mtbf": (400.0, 2500.0)})
+    assert grid.n_compiles == 1
+    for point, res in grid:
+        assert res.matches(run_ref(res.scenario)), point
+
+
+def test_max_failures_is_a_static_axis():
+    scn = Scenario(trace=SyntheticTrace(n_jobs=30, seed=0), total_nodes=16,
+                   failures=_model(500.0))
+    grid = sweep(scn, axes={"failures.max_failures": (16, 32)})
+    assert grid.n_compiles == 2          # padded capacity recompiles
+    for point, res in grid:
+        assert res.matches(run_ref(res.scenario)), point
+
+
+def test_ensemble_failures_axis():
+    """repro.core.parallel.simulate_ensemble batches stacked fail ctxs."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.parallel import simulate_ensemble, stack_jobsets
+
+    trace = _trace(n=30, seed=2)
+    jobs = make_jobset(**trace, total_nodes=16)
+    models = [_model(m) for m in (300.0, 900.0, 2500.0)]
+    fctxs = [make_fail_ctx(m, n_nodes=16) for m in models]
+    fail_b = jax.tree.map(lambda *xs: jnp.stack(xs), *fctxs)
+    batched = simulate_ensemble(
+        stack_jobsets([jobs] * 3),
+        np.full(3, POLICY_IDS["fcfs"], np.int32),
+        np.full(3, 16, np.int32), failures_b=fail_b)
+    for i, m in enumerate(models):
+        single = simulate(jobs, POLICY_IDS["fcfs"], 16, failures=fctxs[i])
+        np.testing.assert_array_equal(np.asarray(batched.start)[i],
+                                      np.asarray(single.start), f"member {i}")
+        np.testing.assert_array_equal(np.asarray(batched.rel.n_restarts)[i],
+                                      np.asarray(single.rel.n_restarts))
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_reliability_summary_scalars():
+    scn = _scenario("scalar", 300.0, "requeue", "fcfs")
+    s = run(scn).summary()
+    for key in ("total_restarts", "n_aborted", "lost_node_s", "goodput"):
+        assert key in s
+    assert 0.0 < s["goodput"] <= 1.0
+    assert s["n_aborted"] == 0.0
+    s_abort = run(_scenario("scalar", 300.0, "abort", "fcfs")).summary()
+    assert s_abort["n_aborted"] > 0
+    # failure-free summaries stay clean
+    s0 = run(Scenario(trace=SyntheticTrace(n_jobs=20), total_nodes=8)).summary()
+    assert "goodput" not in s0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random failure streams
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       mtbf=st.sampled_from([150.0, 500.0, 2000.0]),
+       requeue=st.sampled_from(REQUEUE_MODES),
+       ckpt=st.sampled_from([0, 15, 40]),
+       policy=st.sampled_from(POLICIES))
+def test_random_streams_engines_bit_exact(seed, mtbf, requeue, ckpt, policy):
+    """Engine vs refsim over random traces x random failure streams, plus
+    the kill-log audit: n_restarts == per-job requeue kills, aborted ==
+    per-job abort kills, and (refsim-internal assert) no job ever lands on
+    a down node."""
+    rng = np.random.default_rng(seed)
+    n = 40
+    trace = dict(submit=rng.integers(0, 300, n).tolist(),
+                 runtime=rng.integers(5, 60, n).tolist(),
+                 nodes=rng.integers(1, 5, n).tolist())
+    fm = FailureModel(mtbf=mtbf, seed=seed % 1000, mean_repair=40,
+                      horizon=3000, max_failures=32, requeue=requeue,
+                      checkpoint_interval=ckpt)
+    ft = fm.materialize(16)
+    jobs = make_jobset(**trace, total_nodes=16)
+    res = simulate(jobs, POLICY_IDS[policy], 16, failures=ft)
+    ref = simulate_reference(trace, policy, total_nodes=16, failures=ft)
+    np.testing.assert_array_equal(np.asarray(res.start)[:n], ref["start"])
+    np.testing.assert_array_equal(np.asarray(res.finish)[:n], ref["finish"])
+    np.testing.assert_array_equal(np.asarray(res.rel.n_restarts)[:n],
+                                  ref["n_restarts"])
+    np.testing.assert_array_equal(np.asarray(res.rel.aborted)[:n],
+                                  ref["aborted"])
+    # kill-log audit
+    log = ref["kill_log"]
+    from collections import Counter
+    requeues = Counter(k["job"] for k in log if k["requeued"])
+    aborts = Counter(k["job"] for k in log if not k["requeued"])
+    for i in range(n):
+        assert ref["n_restarts"][i] == requeues.get(i, 0)
+        assert ref["aborted"][i] == (aborts.get(i, 0) > 0)
+    # completed work never exceeds submitted work + charged rework:
+    # elapsed wall time >= runtime + lost rework for every completed job
+    done = ref["done"]
+    elapsed = (ref["finish"] - ref["start"])[done]
+    assert (elapsed >= (ref["runtime"] + ref["lost_work"])[done]).all()
+    assert (ref["lost_work"] >= 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_streams_on_mesh_with_node_maps(seed):
+    """Machine-mode random streams: node maps agree and the refsim
+    placement assert guarantees down nodes are never allocated."""
+    rng = np.random.default_rng(seed)
+    n = 30
+    trace = dict(submit=rng.integers(0, 200, n).tolist(),
+                 runtime=rng.integers(5, 50, n).tolist(),
+                 nodes=rng.integers(1, 5, n).tolist())
+    fm = FailureModel(mtbf=300.0, seed=seed % 1000, mean_repair=30,
+                      horizon=2000, max_failures=24)
+    scn = Scenario(trace=ArrayTrace.from_dict(trace),
+                   topology=Topology.mesh2d(4, 4), policy="fcfs",
+                   alloc="contiguous", failures=fm)
+    assert run(scn).matches(run_ref(scn), node_maps=True)
