@@ -33,7 +33,8 @@ from repro.traces.workflows import galactic_like, workflow_to_trace
 BENCH_JSON = "BENCH_engine.json"
 
 
-def _measure(jobs, policy: str, total_nodes: int, iters: int = 3) -> dict:
+def _measure(jobs, policy: str, total_nodes: int, iters: int = 3,
+             service=None) -> dict:
     """events/s for one compiled engine call, with the compile/run split.
 
     The first call pays trace+compile; steady-state is the median of at
@@ -44,13 +45,13 @@ def _measure(jobs, policy: str, total_nodes: int, iters: int = 3) -> dict:
     """
     pol = POLICY_IDS[policy]
     t0 = time.perf_counter()
-    res = simulate(jobs, pol, total_nodes)
+    res = simulate(jobs, pol, total_nodes, service=service)
     res.n_events.block_until_ready()
     first = time.perf_counter() - t0
     times = []
     while len(times) < iters or (sum(times) < 0.6 and len(times) < 15):
         t0 = time.perf_counter()
-        res = simulate(jobs, pol, total_nodes)
+        res = simulate(jobs, pol, total_nodes, service=service)
         res.n_events.block_until_ready()
         times.append(time.perf_counter() - t0)
     run_s = float(np.median(times))
@@ -120,6 +121,32 @@ def run_bench(outdir: str = "results", *, smoke: bool = False) -> dict:
             emit(f"des_throughput_{name}_{pol}", m["run_s"],
                  f"jax_events_per_s={m['events_per_s']:.0f};"
                  f"n_edges={meta['n_edges']}")
+
+    # ---- open-arrival serving case (deadline state + autoscale ticks) ------
+    from repro.api import (AutoscalePolicy, Scenario, ServiceClass,
+                           ServiceTrace, build_jobset)
+
+    svc_spec = ServiceTrace(
+        horizon=4096 if smoke else 1 << 16, rate=0.04, seed=5,
+        max_jobs=256 if smoke else 4096,
+        classes=(ServiceClass("interactive", nodes=1, mean_runtime=30,
+                              slo_wait=60),
+                 ServiceClass("batch", nodes=8, mean_runtime=600,
+                              dist="exponential", slo_wait=1800, weight=0.3)),
+        autoscale=AutoscalePolicy(up_threshold=48, down_threshold=8,
+                                  min_nodes=16, max_nodes=64, step=8,
+                                  interval=256,
+                                  max_ticks=16 if smoke else 256))
+    svc_scn = Scenario(trace=svc_spec, total_nodes=64, policy="fcfs")
+    svc_jobs = build_jobset(svc_scn)
+    m = _measure(svc_jobs, "fcfs", 64, service=svc_spec.plan())
+    report["cases"]["serving_open_fcfs"] = {
+        **m, "trace": "service_poisson", "n_jobs": svc_spec.plan().n_requests,
+        "total_nodes": 64,
+    }
+    emit("des_throughput_serving_open_fcfs", m["run_s"],
+         f"jax_events_per_s={m['events_per_s']:.0f};"
+         f"n_requests={svc_spec.plan().n_requests}")
 
     # ---- scheduler hot-spot kernel at production queue sizes ---------------
     rng = np.random.default_rng(0)

@@ -1,0 +1,158 @@
+"""Serving figure (DESIGN.md §16): throughput-vs-SLO frontier.
+
+The scenario family the serving subsystem opens: an interactive+batch
+request mix under Poisson open arrivals, swept over an arrival-rate grid
+under both queue policies with the queue-pressure autoscaler on and off.
+Every grid point shares one static bucket (rate, class mix, and autoscale
+thresholds are trace *data*; only ``max_jobs`` / ``max_ticks`` are static),
+so the whole rate × policy × autoscale grid compiles to ONE executable.
+
+The smoke pass validates EVERY grid point bit-exactly against the host
+reference simulator (schedules, SLO verdicts, and the capacity log); the
+full run oracle-checks a sampled highest-rate point.
+
+Emits ``fig_serving/<policy>/<autoscale>/rate=<r>`` rows with
+``attainment:p99_wait:goodput`` in the derived column; the table lands in
+``results/fig_serving.csv`` and a machine-readable
+``results/fig_serving.json`` — including the frontier (max sustainable
+rate at >= 95% SLO attainment per policy × autoscale cell) — uploaded by
+CI next to ``BENCH_engine.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+from benchmarks import common
+from repro.api import (
+    AutoscalePolicy, Scenario, ServiceClass, ServiceTrace, run_ref, sweep,
+)
+
+# offered load ~= rate * E[nodes * runtime] ~= rate * 1461 node-s/request
+# on 64 nodes -> saturation near rate 0.044: the grid spans under- to
+# over-subscribed so the attainment frontier sits strictly inside it
+RATES = (0.010, 0.020, 0.030, 0.040, 0.050)
+ATTAINMENT_TARGET = 0.95
+
+CLASSES = (
+    ServiceClass("interactive", nodes=1, mean_runtime=30, slo_wait=60),
+    ServiceClass("batch", nodes=8, mean_runtime=600, dist="exponential",
+                 slo_wait=1800, weight=0.3),
+)
+
+
+def _base(horizon: int, max_jobs: int, max_ticks: int) -> Scenario:
+    auto = AutoscalePolicy(up_threshold=48, down_threshold=8, min_nodes=16,
+                           max_nodes=64, step=8, interval=256,
+                           max_ticks=max_ticks)
+    return Scenario(
+        trace=ServiceTrace(horizon=horizon, rate=RATES[0], seed=5,
+                           max_jobs=max_jobs, classes=CLASSES,
+                           autoscale=auto),
+        total_nodes=64, policy="fcfs")
+
+
+def _run(horizon: int, max_jobs: int, max_ticks: int, *, validate: bool,
+         outdir: str = "results", smoke: bool = False):
+    import numpy as np
+
+    os.makedirs(outdir, exist_ok=True)
+    report = {"schema": 1, "smoke": smoke, "generated_unix": time.time(),
+              "points": [], "frontier": {}}
+    base = _base(horizon, max_jobs, max_ticks)
+    auto_on = base.trace.autoscale
+    axes = {
+        "trace.rate": RATES,
+        "policy": ("fcfs", "sjf"),
+        "trace.autoscale": (auto_on,
+                            dataclasses.replace(auto_on, enabled=False)),
+    }
+
+    grid_holder = []
+
+    def run_grid():
+        grid_holder[:] = [sweep(base, axes=axes)]
+        return [r.raw.n_events for r in grid_holder[0].results]
+
+    secs = common.time_call(run_grid, warmup=1, iters=1)
+    grid = grid_holder[0]
+    # rate / policy / thresholds are vmap data: the frontier is ONE compile
+    assert grid.n_compiles == 1, grid.n_compiles
+
+    rows = []
+    for point, res in grid:
+        if validate:
+            ref = run_ref(res.scenario)
+            assert res.matches(ref), point
+            n = int(ref["valid"].sum())
+            for col in ("slo_met", "deadline", "class_id"):
+                assert np.array_equal(res[col][:n], ref[col]), (point, col)
+            assert np.array_equal(res["cap_online"], ref["cap_online"]), point
+        s = res.summary()
+        scaled = point["trace.autoscale"].enabled
+        label = (f"{point['policy']}/{'auto' if scaled else 'fixed'}"
+                 f"/rate={point['trace.rate']}")
+        derived = (f"{s['slo_attainment']:.4f}:{s['p99_wait']:.1f}"
+                   f":{s['slo_goodput']:.4f}")
+        common.emit(f"fig_serving/{label}", secs / len(grid), derived)
+        rows.append((point["policy"], "auto" if scaled else "fixed",
+                     point["trace.rate"], s["slo_attainment"],
+                     s["deadline_miss_rate"], s["p50_wait"], s["p99_wait"],
+                     s["slo_goodput"], s["n_requests"], s["makespan"]))
+        report["points"].append({
+            "policy": point["policy"], "autoscale": bool(scaled),
+            "rate": point["trace.rate"],
+            **{k: s[k] for k in ("slo_attainment", "deadline_miss_rate",
+                                 "p50_wait", "p99_wait", "slo_goodput",
+                                 "n_requests", "makespan")}})
+
+    # frontier: max rate whose attainment clears the target, per cell
+    for pol in axes["policy"]:
+        for scaled in (True, False):
+            ok = [p["rate"] for p in report["points"]
+                  if p["policy"] == pol and p["autoscale"] is scaled
+                  and p["slo_attainment"] >= ATTAINMENT_TARGET]
+            report["frontier"][f"{pol}/{'auto' if scaled else 'fixed'}"] = (
+                max(ok) if ok else None)
+
+    if not validate:
+        # the full run still oracle-checks one sampled (highest-rate) point
+        probe = grid.get(**{"trace.rate": RATES[-1], "policy": "fcfs",
+                            "trace.autoscale": auto_on})
+        ref = run_ref(probe.scenario)
+        assert probe.matches(ref), "sampled oracle check failed"
+        print("# sampled oracle check ok", flush=True)
+
+    common.series_to_csv(
+        os.path.join(outdir, "fig_serving.csv"),
+        ["policy", "autoscale", "rate", "slo_attainment",
+         "deadline_miss_rate", "p50_wait", "p99_wait", "slo_goodput",
+         "n_requests", "makespan"],
+        rows)
+    report["finished_unix"] = time.time()
+    path = os.path.join(outdir, "fig_serving.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
+    return report
+
+
+def main():
+    # 2^16 s horizon at the top rate generates ~3.3k requests; max_jobs
+    # 4096 leaves headroom (materialize warns loudly on truncation)
+    _run(1 << 16, 4096, 256, validate=False)
+
+
+def smoke():
+    """CI dry pass: short horizon, every grid point validated vs refsim
+    (schedules, SLO verdicts, and capacity logs)."""
+    _run(4096, 256, 16, validate=True, smoke=True)
+
+
+if __name__ == "__main__":
+    import sys
+
+    smoke() if "--smoke" in sys.argv else main()

@@ -21,14 +21,15 @@ import importlib
 
 _SUBMODULES = frozenset({
     "alloc", "api", "ckpt", "configs", "core", "data", "kernels", "launch",
-    "models", "optim", "refsim", "reliability", "runtime", "sharding",
-    "traces",
+    "models", "optim", "refsim", "reliability", "runtime", "serving",
+    "sharding", "traces",
 })
 
 # names re-exported from repro.api on first access
 _API_NAMES = frozenset({
-    "ArrayTrace", "FailureModel", "Multicluster", "Result", "Scenario",
-    "SweepResult", "SwfTrace", "SyntheticTrace", "Topology", "WorkflowTrace",
+    "ArrayTrace", "AutoscalePolicy", "FailureModel", "Multicluster",
+    "Result", "Scenario", "ServiceClass", "ServiceTrace", "SweepResult",
+    "SwfTrace", "SyntheticTrace", "Topology", "WorkflowTrace",
     "run", "run_ref", "sweep",
 })
 

@@ -29,10 +29,12 @@ from repro.api.scenario import (
 )
 from repro.api.sweep import SweepResult, sweep
 from repro.reliability import FailureModel
+from repro.serving import AutoscalePolicy, ServiceClass, ServiceTrace
 
 __all__ = [
-    "ArrayTrace", "FailureModel", "Multicluster", "Result", "Scenario",
-    "SweepResult", "SwfTrace", "SyntheticTrace", "Topology", "TRACED_AXES",
+    "ArrayTrace", "AutoscalePolicy", "FailureModel", "Multicluster",
+    "Result", "Scenario", "ServiceClass", "ServiceTrace", "SweepResult",
+    "SwfTrace", "SyntheticTrace", "Topology", "TRACED_AXES",
     "WorkflowTrace", "as_trace_spec", "build_jobset", "run", "run_ref",
     "simresult_to_np", "sweep",
 ]

@@ -61,7 +61,12 @@ class Result:
             from repro.core.parallel import multicluster_result_np
             return multicluster_result_np(self.raw)
         return simresult_to_np(self.raw, self.jobs,
-                               with_alloc=self.scenario.topology is not None)
+                               with_alloc=self.scenario.topology is not None,
+                               service=self._service_plan())
+
+    def _service_plan(self):
+        spec = self.scenario.trace_specs()[0]
+        return spec.plan() if hasattr(spec, "plan") else None
 
     def __getitem__(self, key: str) -> np.ndarray:
         return self.to_np()[key]
@@ -79,6 +84,11 @@ class Result:
             s.update(metrics.alloc_summary(out))
         if "n_restarts" in out:
             s.update(metrics.reliability_summary(out))
+        if "slo_met" in out:
+            plan = self._service_plan()
+            names = plan.class_names if plan is not None else None
+            s.update(metrics.slo_summary(out, class_names=names,
+                                         total_nodes=total))
         return s
 
     @property
@@ -97,8 +107,8 @@ class Result:
         return all(bool(np.array_equal(a[k][:n], b[k][:n])) for k in keys)
 
 
-def simresult_to_np(res: SimResult, jobs: JobSet, *,
-                    with_alloc: bool) -> Dict[str, np.ndarray]:
+def simresult_to_np(res: SimResult, jobs: JobSet, *, with_alloc: bool,
+                    service=None) -> Dict[str, np.ndarray]:
     """``SimResult`` + ``JobSet`` -> the canonical numpy dict (the schema
     ``simulate_np`` established; shared by every backend)."""
     out = {
@@ -126,4 +136,17 @@ def simresult_to_np(res: SimResult, jobs: JobSet, *,
         out["n_restarts"] = np.asarray(res.rel.n_restarts)
         out["lost_work"] = np.asarray(res.rel.lost_work)
         out["aborted"] = np.asarray(res.rel.aborted)
+    if res.svc is not None:
+        out["slo_met"] = np.asarray(res.svc.slo_met)
+        out["deadline"] = np.asarray(res.svc.deadline)
+        # capacity series: the engine logs the online level per consumed
+        # tick (-1 = never consumed); the times come from the plan's tick
+        # stream, which is how the refsim emits the same two columns
+        cap = np.asarray(res.svc.cap_online)
+        used = cap >= 0
+        out["cap_online"] = cap[used].astype(np.int64)
+        if service is not None:
+            out["class_id"] = np.asarray(service.class_id, dtype=np.int64)
+            out["cap_time"] = np.asarray(
+                service.tick_time, dtype=np.int64)[used]
     return out

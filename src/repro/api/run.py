@@ -37,11 +37,17 @@ def build_jobset(scenario: Scenario, *, cluster: int = 0,
     spec = scenario.trace_specs()[cluster]
     total_nodes = scenario.nodes_per_cluster()[cluster]
     trace = spec.materialize()
+    if capacity is None:
+        capacity = scenario.capacity
+    if capacity is None:
+        # ServiceTrace pads to max_jobs so the deadline/class columns stay
+        # row-aligned with the job table across every rate point
+        capacity = getattr(spec, "pad_capacity", None)
     return make_jobset(
         trace["submit"], trace["runtime"], trace["nodes"],
         trace.get("estimate"), trace.get("priority"),
         deps=trace.get("deps"),
-        capacity=capacity if capacity is not None else scenario.capacity,
+        capacity=capacity,
         total_nodes=total_nodes,
     )
 
@@ -58,6 +64,13 @@ def _failure_trace(scenario: Scenario):
     return scenario.failures.materialize(int(scenario.total_nodes))
 
 
+def _service_plan(scenario: Scenario):
+    """The ONE materialized serving plan both engines consume (cached by
+    the spec's lru, so ``run`` and ``run_ref`` see identical arrays)."""
+    spec = scenario.trace_specs()[0]
+    return spec.plan() if hasattr(spec, "plan") else None
+
+
 def run(scenario: Scenario) -> Result:
     """Run one scenario on the JAX engine and return a unified ``Result``."""
     if scenario.multicluster is not None:
@@ -71,6 +84,7 @@ def run(scenario: Scenario) -> Result:
         alloc=scenario.alloc,
         contention=scenario.contention,
         failures=_failure_trace(scenario),
+        service=_service_plan(scenario),
         max_events=scenario.max_events,
     )
     return Result(scenario=scenario, backend="jax", raw=res, jobs=jobs)
@@ -96,6 +110,7 @@ def run_ref(scenario: Scenario) -> Result:
         alloc=alloc_name,
         contention=scenario.contention,
         failures=_failure_trace(scenario),
+        service=_service_plan(scenario),
     )
     return Result(scenario=scenario, backend="ref", raw=out)
 

@@ -33,7 +33,9 @@ from typing import Any, Dict, Optional, Tuple, Union
 import numpy as np
 
 from repro import alloc as _alloc
+from repro.core.jobs import INF_TIME
 from repro.reliability import FailureModel
+from repro.serving import ServiceTrace
 from repro.traces import das2_like, load_swf, sdsc_sp2_like, synthetic_trace
 from repro.traces import workflows as _workflows
 from repro.traces.workflows import workflow_to_trace
@@ -93,7 +95,24 @@ class SwfTrace:
     max_jobs: Optional[int] = None
 
     def materialize(self) -> Dict[str, np.ndarray]:
-        return load_swf(self.path, max_jobs=self.max_jobs)
+        trace = load_swf(self.path, max_jobs=self.max_jobs)
+        # int32 clock-overflow guard (mirrors ServiceTrace.materialize):
+        # the engine runs the clock in int32, so the span of the log plus
+        # the largest completion must stay below INF_TIME — a silent
+        # wraparound would corrupt every downstream metric
+        sub = np.asarray(trace["submit"], dtype=np.int64)
+        if len(sub):
+            run = np.asarray(trace["runtime"], dtype=np.int64)
+            est = np.asarray(trace.get("estimate", run), dtype=np.int64)
+            top = int(sub.max() - sub.min()) + 2 * int(
+                max(run.max(initial=1), est.max(initial=1)))
+            if top >= int(INF_TIME):
+                raise ValueError(
+                    f"SWF trace {self.path!r} overflows int32 clock range: "
+                    f"submit span + 2*max runtime = {top} >= {int(INF_TIME)} "
+                    "(INF_TIME); trim the log with max_jobs= or rescale "
+                    "its time unit")
+        return trace
 
     def static_key(self):
         return ("swf", self.path, self.max_jobs)
@@ -216,13 +235,14 @@ class ArrayTrace:
         return len(np.asarray(self.submit))
 
 
-TraceSpec = Union[SyntheticTrace, SwfTrace, ArrayTrace, WorkflowTrace]
+TraceSpec = Union[SyntheticTrace, SwfTrace, ArrayTrace, WorkflowTrace,
+                  ServiceTrace]
 
 
 def as_trace_spec(trace) -> TraceSpec:
     """Accept a spec, a plain dict-of-arrays, or an .swf path string."""
     if isinstance(trace, (SyntheticTrace, SwfTrace, ArrayTrace,
-                          WorkflowTrace)):
+                          WorkflowTrace, ServiceTrace)):
         return trace
     if isinstance(trace, dict):
         return ArrayTrace.from_dict(trace)
@@ -316,7 +336,13 @@ class Multicluster:
 TRACED_AXES = ("policy", "alloc", "contention", "total_nodes", "trace.seed",
                "failures.mtbf", "failures.seed", "failures.mean_repair",
                "failures.requeue", "failures.checkpoint_interval",
-               "failures.restart_overhead")
+               "failures.restart_overhead",
+               # ServiceTrace (DESIGN.md §16): everything except max_jobs
+               # and autoscale.max_ticks is trace data, so arrival-rate /
+               # horizon / class-mix / autoscale-threshold sweeps compile
+               # once per static bucket
+               "trace.rate", "trace.horizon", "trace.classes",
+               "trace.autoscale")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -367,6 +393,24 @@ class Scenario:
                     "(a tuple); got a single trace")
             object.__setattr__(
                 self, "trace", tuple(as_trace_spec(t) for t in traces))
+            if any(isinstance(t, ServiceTrace) for t in self.trace):
+                raise ValueError(
+                    "ServiceTrace is not supported in multicluster "
+                    "scenarios yet; serve each cluster individually")
+        if isinstance(self.trace, ServiceTrace):
+            if (self.failures is not None and self.topology is not None
+                    and self.trace.autoscale is not None):
+                raise ValueError(
+                    "machine-mode failures cannot be combined with an "
+                    "autoscaling ServiceTrace; drop topology=, failures=, "
+                    "or autoscale (engine restriction, DESIGN.md §16)")
+            if (self.capacity is not None
+                    and int(self.capacity) != self.trace.max_jobs):
+                raise ValueError(
+                    f"capacity={self.capacity} disagrees with "
+                    f"ServiceTrace.max_jobs={self.trace.max_jobs}; the "
+                    "deadline/class columns are padded to max_jobs, so the "
+                    "job table must share that shape")
         if self.topology is None and (self.alloc is not None
                                       or self.contention is not None):
             raise ValueError(

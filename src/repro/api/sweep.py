@@ -169,30 +169,34 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence[Any]], *,
 
 
 @functools.lru_cache(maxsize=None)
-def _bucket_fn(with_alloc: bool, with_fail: bool, max_events: Optional[int],
+def _bucket_fn(with_alloc: bool, with_fail: bool, with_svc: bool,
+               max_events: Optional[int],
                mesh: Optional[Mesh], axis: Optional[str]):
-    if with_alloc and with_fail:
-        fn = lambda jobs_b, pol_b, tn_b, alloc_b, con_b, fail_b, machine: \
-            jax.vmap(
-                lambda j, p, t, a, c, f: engine.simulate(
-                    j, p, t, machine=machine, alloc=a, contention=c,
-                    failures=f, max_events=max_events)
-            )(jobs_b, pol_b, tn_b, alloc_b, con_b, fail_b)
-    elif with_alloc:
-        fn = lambda jobs_b, pol_b, tn_b, alloc_b, con_b, machine: jax.vmap(
-            lambda j, p, t, a, c: engine.simulate(
-                j, p, t, machine=machine, alloc=a, contention=c,
-                max_events=max_events)
-        )(jobs_b, pol_b, tn_b, alloc_b, con_b)
-    elif with_fail:
-        fn = lambda jobs_b, pol_b, tn_b, fail_b: jax.vmap(
-            lambda j, p, t, f: engine.simulate(
-                j, p, t, failures=f, max_events=max_events)
-        )(jobs_b, pol_b, tn_b, fail_b)
-    else:
-        fn = lambda jobs_b, pol_b, tn_b: jax.vmap(
-            lambda j, p, t: engine.simulate(j, p, t, max_events=max_events)
-        )(jobs_b, pol_b, tn_b)
+    # one generic batched runner: the optional subsystem args ride behind
+    # (jobs, policy, total_nodes) in a fixed order — alloc pair, fail ctx,
+    # svc ctx — and the machine (a non-batched pytree) comes last
+    def fn(*args):
+        if with_alloc:
+            *batched, machine = args
+        else:
+            batched, machine = args, None
+
+        def one(*leaves):
+            it = iter(leaves)
+            j, p, t = next(it), next(it), next(it)
+            kw = {}
+            if with_alloc:
+                kw["alloc"] = next(it)
+                kw["contention"] = next(it)
+            if with_fail:
+                kw["failures"] = next(it)
+            if with_svc:
+                kw["service"] = next(it)
+            return engine.simulate(j, p, t, machine=machine,
+                                   max_events=max_events, **kw)
+
+        return jax.vmap(one)(*batched)
+
     if mesh is None:
         return jax.jit(fn)
     # a single prefix sharding applies the batch-axis partition to every
@@ -210,8 +214,11 @@ def _run_bucket(bucket: List[Scenario], mesh: Optional[Mesh]) -> List[Result]:
     jobsets = []
     for scn in bucket:
         spec = scn.trace_specs()[0]
-        key = (spec.static_key(), getattr(spec, "seed", None),
-               int(scn.total_nodes))
+        # key on the full spec (all specs are hashable; ArrayTrace by
+        # identity): two points sharing a static bucket may still differ
+        # in trace *data* — seed, arrival rate, class mix — and must not
+        # collide onto one job table
+        key = (spec, int(scn.total_nodes))
         if key not in jobs_cache:
             jobs_cache[key] = build_jobset(scn)
         jobsets.append(jobs_cache[key])
@@ -253,8 +260,21 @@ def _run_bucket(bucket: List[Scenario], mesh: Optional[Mesh]) -> List[Result]:
         fctxs += [fctxs[-1]] * pad
         args = args + (jax.tree.map(lambda *xs: jnp.stack(xs), *fctxs),)
 
+    with_svc = hasattr(base.trace_specs()[0], "plan")
+    if with_svc:
+        # materialized serving plans stack into ordinary vmap leaves
+        # (uniform shapes: max_jobs / max_ticks key the static bucket), so
+        # a rate × mix × threshold grid is ONE executable (DESIGN.md §16)
+        from repro.serving import make_svc_ctx
+
+        sctxs = [make_svc_ctx(s.trace_specs()[0].plan(),
+                              n_nodes=int(s.total_nodes)) for s in bucket]
+        sctxs += [sctxs[-1]] * pad
+        args = args + (jax.tree.map(lambda *xs: jnp.stack(xs), *sctxs),)
+
     axis = mesh.axis_names[0] if mesh is not None else None
-    fn = _bucket_fn(machine is not None, with_fail, max_events, mesh, axis)
+    fn = _bucket_fn(machine is not None, with_fail, with_svc, max_events,
+                    mesh, axis)
     if mesh is not None:
         shard = NamedSharding(mesh, P(axis))
         args = tuple(jax.device_put(a, shard) for a in args)

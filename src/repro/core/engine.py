@@ -76,6 +76,7 @@ from repro.core.jobs import (
     JobSet, SimResult, SimState, result_from_state,
 )
 from repro.reliability.model import FAIL, REQUEUE, make_fail_ctx
+from repro.serving.model import make_svc_ctx
 
 # An allocation context is either None (seed scalar-counter mode) or the
 # pytree tuple (machine, strategy_i32, contention); its None-ness is static
@@ -135,11 +136,20 @@ def _owner_eff(jobs: JobSet, state: SimState) -> jax.Array:
     without touching the strategies (DESIGN.md §15).  The *true*
     ``node_owner`` map (which release scatters read) never holds the
     sentinel, so a down node can never be freed by a job completion.
+
+    The serving autoscaler (DESIGN.md §16) masks scaled-out nodes the
+    same way: an offline node is "busy, owned by nobody" to every
+    strategy, and since scale-down only ever takes *free* nodes, the true
+    ``node_owner`` map never references an offline node either.
     """
-    if state.rel is None:
+    if state.rel is None and state.svc is None:
         return state.node_owner
-    return jnp.where(state.rel.down, jnp.int32(jobs.capacity),
-                     state.node_owner)
+    own = state.node_owner
+    if state.svc is not None:
+        own = jnp.where(state.svc.offline, jnp.int32(jobs.capacity), own)
+    if state.rel is not None:
+        own = jnp.where(state.rel.down, jnp.int32(jobs.capacity), own)
+    return own
 
 
 def _start_job(jobs: JobSet, state: SimState, idx: jax.Array,
@@ -530,12 +540,80 @@ def _process_rel_events(jobs: JobSet, state: SimState,
     return jax.lax.while_loop(cond, body, state)
 
 
+def _process_capacity_ticks(jobs: JobSet, state: SimState,
+                            ctx: Optional[AllocCtx], svc: tuple) -> SimState:
+    """Consume every autoscaler tick with time <= clock (DESIGN.md §16).
+
+    Ticks are processed one at a time in stream order (an inner
+    ``while_loop`` over the pointer) because each tick's capacity change
+    feeds the next tick's bounds.  Semantics, pinned identically in
+    ``repro.refsim``:
+
+    - queued demand is the node-request sum over WAITING jobs (this
+      event's arrivals have NOT happened yet — capacity ticks run after
+      completions and reliability entries, before arrivals);
+    - demand >= up_threshold: up to ``step`` nodes come back online,
+      never beyond ``max_nodes`` (pre-clamped to the machine size).  In
+      machine mode the *lowest-index* offline nodes return;
+    - else if demand <= down_threshold: up to ``step`` nodes go offline,
+      never below ``min_nodes`` and never more than the free count — a
+      busy node is never taken, so a running job is never stranded (drain
+      semantics: capacity leaves only as it frees up).  In machine mode
+      the *highest-index* free online nodes leave;
+    - the online count after the tick is logged to ``cap_online[ptr]``
+      (the capacity series goodput-under-autoscaling integrates).
+    """
+    deadline, tick_time, up_t, down_t, step, min_n, max_n = svc
+    T = tick_time.shape[0]
+    # same vmap liveness guard as the reliability stream: a finished batch
+    # member must not re-drain its leftover tick tail every lockstep
+    # iteration (and a finished simulation needs no capacity changes)
+    live = jnp.any(state.jstate != DONE)
+
+    def cond(st: SimState):
+        p = st.svc.ptr
+        return (p < T) & (tick_time[jnp.minimum(p, T - 1)] <= st.clock) & live
+
+    def body(st: SimState) -> SimState:
+        s = st.svc
+        demand = jnp.sum(jnp.where(st.jstate == WAITING, jobs.nodes, 0))
+        up = demand >= up_t
+        down = ~up & (demand <= down_t)
+        k_up = jnp.where(up, jnp.clip(max_n - s.n_online, 0, step), 0)
+        k_down = jnp.where(
+            down,
+            jnp.minimum(jnp.clip(s.n_online - min_n, 0, step),
+                        jnp.maximum(st.free, 0)),
+            0)
+        delta = (k_up - k_down).astype(jnp.int32)
+        if ctx is None:
+            offline = s.offline               # [0] placeholder
+        else:
+            # scale-up reactivates the lowest-index offline nodes;
+            # scale-down deactivates the highest-index FREE online nodes
+            # (cumsum rank masks; k_down <= free so enough candidates)
+            on_rank = jnp.cumsum(s.offline.astype(jnp.int32))
+            react = s.offline & (on_rank <= k_up)
+            free_node = (st.node_owner < 0) & ~s.offline
+            down_rank = jnp.cumsum(free_node[::-1].astype(jnp.int32))[::-1]
+            deact = free_node & (down_rank <= k_down)
+            offline = (s.offline & ~react) | deact
+        n_online = s.n_online + delta
+        new_svc = dataclasses.replace(
+            s, ptr=s.ptr + 1, n_online=n_online, offline=offline,
+            cap_online=s.cap_online.at[s.ptr].set(n_online, mode="drop"))
+        return dataclasses.replace(st, free=st.free + delta, svc=new_svc)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
 def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
                 ctx: Optional[AllocCtx] = None,
                 static_policy: Optional[int] = None,
                 fast_order: Optional[jax.Array] = None,
                 csr: Optional[tuple] = None,
-                rel: Optional[tuple] = None) -> SimState:
+                rel: Optional[tuple] = None,
+                svc: Optional[tuple] = None) -> SimState:
     pending = state.jstate == PENDING
     running = state.jstate == RUNNING
     has_deps = jobs.dep_dst is not None
@@ -554,6 +632,13 @@ def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
         t_rel = jnp.where(p < K, rel[0][jnp.minimum(p, K - 1)],
                           jnp.int32(INF_TIME))
         clock = jnp.minimum(clock, t_rel)
+    if svc is not None and svc[1].shape[0] > 0:
+        # T == 0 (no autoscaler) statically elides the tick clock source
+        T = svc[1].shape[0]
+        p = state.svc.ptr
+        t_svc = jnp.where(p < T, svc[1][jnp.minimum(p, T - 1)],
+                          jnp.int32(INF_TIME))
+        clock = jnp.minimum(clock, t_svc)
 
     # completions first (frees nodes for arrivals at the same timestamp)
     completed = running & (state.finish <= clock)
@@ -579,14 +664,20 @@ def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
             n_unmet = n_unmet - (c[row_end] - c[row_start])
         else:
             n_unmet = n_unmet.at[jobs.dep_dst].add(-dec, mode="drop")
-    if rel is not None:
-        # reliability events run after completions (a job finishing at the
-        # failure instant has completed) and before arrivals (a job whose
-        # last dependency aborts still releases within this same event)
+    if rel is not None or svc is not None:
+        # stream events run after completions (a job finishing at the
+        # failure/tick instant has completed) and before arrivals (a job
+        # whose last dependency aborts still releases within this same
+        # event; autoscale ticks read queued demand *before* this event's
+        # arrivals join the queue) — order: completions, reliability,
+        # capacity ticks, arrivals
         state = dataclasses.replace(
             state, clock=clock, jstate=jstate, n_unmet=n_unmet,
             free=state.free + freed, node_owner=node_owner)
-        state = _process_rel_events(jobs, state, ctx, rel)
+        if rel is not None:
+            state = _process_rel_events(jobs, state, ctx, rel)
+        if svc is not None and svc[1].shape[0] > 0:
+            state = _process_capacity_ticks(jobs, state, ctx, svc)
         jstate, n_unmet = state.jstate, state.n_unmet
         arrived = (jstate == PENDING) & (jobs.submit <= clock)
         if has_deps:
@@ -664,6 +755,7 @@ def simulate(
     alloc: jax.Array | int | str | None = None,
     contention=None,
     failures=None,
+    service=None,
     max_events: Optional[int] = None,
 ) -> SimResult:
     """Run the full job-scheduling simulation for one cluster.
@@ -697,15 +789,30 @@ def simulate(
     ``failures`` (None, a ``repro.reliability.FailureModel``, a
     ``FailureTrace``, or a prebuilt fail-ctx tuple) switches on the
     reliability subsystem (DESIGN.md §15); ``None`` statically elides it.
+
+    ``service`` (None, a ``repro.serving.ServiceTrace``, a ``ServicePlan``,
+    or a prebuilt svc-ctx tuple) switches on the online-serving subsystem
+    (DESIGN.md §16): per-job SLO deadlines in the result and a hysteresis
+    autoscaler consuming a deterministic capacity-tick stream.  ``None``
+    statically elides it to the pre-serving event graph.
     """
     ctx = make_alloc_ctx(machine, alloc, contention, total_nodes)
     fctx = make_fail_ctx(failures, n_nodes=_concrete_int(total_nodes))
+    sctx = make_svc_ctx(service, n_nodes=_concrete_int(total_nodes))
+    if (ctx is not None and fctx is not None and sctx is not None
+            and sctx[1].shape[-1] > 0):
+        # the autoscaler's offline mask and the reliability down mask would
+        # double-count the shared free counter (a node can be failed and
+        # drained at once); scalar-counter mode composes fine
+        raise ValueError(
+            "machine-mode failures cannot be combined with an active "
+            "autoscaler; drop machine=, failures=, or autoscale")
     static_policy = _static_policy_hint(policy)
     static_strategy = _concrete_int(ctx[1]) if ctx is not None else None
     return _simulate_jit(
         jobs, jnp.asarray(policy, dtype=jnp.int32),
         jnp.asarray(total_nodes, dtype=jnp.int32), ctx, fctx=fctx,
-        max_events=max_events,
+        sctx=sctx, max_events=max_events,
         static_policy=static_policy, static_strategy=static_strategy,
     )
 
@@ -719,21 +826,21 @@ def _simulate_jit(
     total_nodes: jax.Array,
     ctx: Optional[AllocCtx],
     fctx: Optional[tuple] = None,
+    sctx: Optional[tuple] = None,
     *,
     max_events: Optional[int] = None,
     static_policy: Optional[int] = None,
     static_strategy: Optional[int] = None,
 ) -> SimResult:
     if fctx is None:
-        cap = max_events if max_events is not None else 6 * jobs.capacity + 8
+        base_cap = 6 * jobs.capacity + 8
         rel = None
     else:
         # every failure adds at most one kill (an extra start + completion
         # cycle) and two stream entries, so the event bound grows with the
         # padded failure capacity F — a static shape, known at trace time
         F = fctx[0].shape[-1]
-        cap = (max_events if max_events is not None
-               else 6 * jobs.capacity + 6 * F + 8)
+        base_cap = 6 * jobs.capacity + 6 * F + 8
         # one loop-invariant stable merge of the failure + repair streams,
         # pinned identically (host-side) in repro.reliability.merge_stream
         times = jnp.concatenate([fctx[0], fctx[2]])
@@ -743,9 +850,21 @@ def _simulate_jit(
         order = jnp.argsort(times, stable=True)
         rel = (times[order], nodes[order], kind[order],
                fctx[3], fctx[4], fctx[5])
+    if sctx is None:
+        svc = None
+        svc_T = None
+    else:
+        # each capacity tick consumes exactly one event; T is static
+        svc_T = sctx[1].shape[-1]
+        base_cap = base_cap + svc_T
+        # clamp max_nodes to the actual cluster size here (total_nodes may
+        # be traced, so the spec layer cannot always do it)
+        svc = sctx[:6] + (
+            jnp.minimum(sctx[6], jnp.asarray(total_nodes, jnp.int32)),)
+    cap = max_events if max_events is not None else base_cap
     machine = ctx[0] if ctx is not None else None
     state = SimState.init(jobs, total_nodes, machine=machine, event_log=cap,
-                          failures=fctx is not None)
+                          failures=fctx is not None, service=svc_T)
     fast_order = _fast_order(jobs, ctx, static_policy, static_strategy)
     csr = dep_csr(jobs)   # jobs are immutable here, dst order guaranteed
 
@@ -756,10 +875,11 @@ def _simulate_jit(
     state = jax.lax.while_loop(
         cond,
         lambda st: _event_step(policy, jobs, st, ctx, static_policy,
-                               fast_order, csr, rel),
+                               fast_order, csr, rel, svc),
         state,
     )
-    return result_from_state(jobs, state)
+    return result_from_state(
+        jobs, state, deadline=None if sctx is None else sctx[0])
 
 
 def _fast_order(jobs: JobSet, ctx: Optional[AllocCtx],

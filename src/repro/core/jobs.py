@@ -318,6 +318,38 @@ class FailureInfo:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class SvcState:
+    """Serving/autoscaler bookkeeping (DESIGN.md §16), present only when
+    the simulation carries a service plan.
+
+    Like ``SimState.rel``, the whole subtree is ``None`` for serving-free
+    runs — not zero-size placeholders — so the serving-free engine lowers
+    to the *exact* pre-serving HLO module (fingerprint-tested).
+    ``offline`` is the autoscaler's per-node out-of-service mask in
+    machine mode ([0] in scalar-counter mode, where capacity is pure
+    accounting on the ``free`` counter); ``cap_online`` logs the online
+    node count after each consumed tick (-1 = tick never consumed), the
+    capacity series goodput-under-autoscaling integrates.
+    """
+
+    ptr: jax.Array         # i32 scalar: next unconsumed autoscale tick
+    n_online: jax.Array    # i32 scalar: nodes currently in service
+    offline: jax.Array     # bool[N] scaled-out mask; [0] w/o machine
+    cap_online: jax.Array  # i32[T] online count after each consumed tick
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SvcInfo:
+    """Per-request serving outcome columns (``SimResult.svc``)."""
+
+    slo_met: jax.Array     # bool[J] started within the class SLO deadline
+    deadline: jax.Array    # i32[J] submit + slo_wait (INF_TIME = padding)
+    cap_online: jax.Array  # i32[T] online nodes after each consumed tick
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class SimState:
     """Mutable (functionally) simulation state for one cluster.
 
@@ -356,10 +388,12 @@ class SimState:
     ev_free: jax.Array      # i32[L] free nodes after each event
     ev_lfb: jax.Array       # i32[L] largest free contiguous block after each event
     rel: RelState | None = None  # reliability state; None = statically elided
+    svc: SvcState | None = None  # serving state; None = statically elided
 
     @classmethod
     def init(cls, jobs: JobSet, total_nodes: int, machine=None,
-             event_log: int = 0, failures: bool = False) -> "SimState":
+             event_log: int = 0, failures: bool = False,
+             service: int | None = None) -> "SimState":
         J = jobs.capacity
         N = machine.n_nodes if machine is not None else 0
         L = int(event_log) if machine is not None else 0
@@ -395,6 +429,14 @@ class SimState:
                 aborted=jnp.zeros((J,), dtype=bool),
                 down=jnp.zeros((N,), dtype=bool),
             ),
+            # ``service`` is the padded autoscale tick capacity T (an int);
+            # every node starts online, so n_online == total_nodes
+            svc=None if service is None else SvcState(
+                ptr=jnp.int32(0),
+                n_online=jnp.int32(total_nodes),
+                offline=jnp.zeros((N,), dtype=bool),
+                cap_online=jnp.full((int(service),), -1, dtype=jnp.int32),
+            ),
         )
 
 
@@ -421,9 +463,11 @@ class SimResult:
     ev_free: jax.Array      # i32[L] per-event free-node count
     ev_lfb: jax.Array       # i32[L] per-event largest free contiguous block
     rel: FailureInfo | None = None  # reliability columns; None w/o failures
+    svc: SvcInfo | None = None      # serving columns; None w/o service
 
 
-def result_from_state(jobs: JobSet, state: SimState) -> SimResult:
+def result_from_state(jobs: JobSet, state: SimState,
+                      deadline: jax.Array | None = None) -> SimResult:
     if jobs.dep_dst is None:
         ready = jobs.submit
     else:
@@ -439,9 +483,11 @@ def result_from_state(jobs: JobSet, state: SimState) -> SimResult:
     wait = jnp.where(jobs.valid, state.start - ready, 0).astype(jnp.int32)
     if state.rel is None:
         # pinned expression (and trace) order: the failure-free path must
-        # lower to the exact pre-reliability HLO module (fingerprint-tested)
+        # lower to the exact pre-reliability HLO module (fingerprint-tested);
+        # serving columns are appended AFTER construction (below) so this
+        # expression order never changes with the svc subtree elided
         fin = jnp.where(jobs.valid & (state.jstate == DONE), state.finish, 0)
-        return SimResult(
+        res = SimResult(
             start=state.start,
             finish=state.finish,
             ready=ready,
@@ -456,11 +502,12 @@ def result_from_state(jobs: JobSet, state: SimState) -> SimResult:
             ev_free=state.ev_free,
             ev_lfb=state.ev_lfb,
         )
+        return _with_svc(res, state, deadline)
     # an aborted job reached DONE only to terminate the event loop; it is
     # not a completion — excluded from `done` and the makespan
     done = jobs.valid & (state.jstate == DONE) & ~state.rel.aborted
     fin = jnp.where(done, state.finish, 0)
-    return SimResult(
+    res = SimResult(
         start=state.start,
         finish=state.finish,
         ready=ready,
@@ -477,4 +524,26 @@ def result_from_state(jobs: JobSet, state: SimState) -> SimResult:
         rel=FailureInfo(n_restarts=state.rel.n_restarts,
                         lost_work=state.rel.lost_work,
                         aborted=state.rel.aborted),
+    )
+    return _with_svc(res, state, deadline)
+
+
+def _with_svc(res: SimResult, state: SimState,
+              deadline: jax.Array | None) -> SimResult:
+    """Append serving outcome columns when the run carried a service plan.
+
+    The SLO verdict is fixed at start time: a request meets its SLO iff it
+    dispatched no later than ``submit + slo_wait`` (and actually
+    completed).  A no-op (the same ``res`` object) when ``state.svc`` is
+    ``None``, so the pinned serving-free expression order is untouched.
+    """
+    if state.svc is None:
+        return res
+    return dataclasses.replace(
+        res,
+        svc=SvcInfo(
+            slo_met=res.done & (state.start <= deadline),
+            deadline=deadline,
+            cap_online=state.svc.cap_online,
+        ),
     )

@@ -18,6 +18,33 @@ from typing import Dict
 import numpy as np
 
 
+def percentiles(values, qs, mask=None):
+    """Exact linear-interpolation percentiles over (optionally masked)
+    job columns — the one implementation ``summary`` and ``slo_summary``
+    share, numerically identical to ``numpy.percentile`` (the same
+    ``(q/100)·(n-1)`` position with the lerp evaluated from the nearer
+    endpoint).  ``qs`` may be a scalar (returns ``float``) or a sequence
+    (returns ``float64[len(qs)]``); an empty selection returns NaN."""
+    scalar = np.ndim(qs) == 0
+    values = np.asarray(values, dtype=np.float64).ravel()
+    if mask is not None:
+        values = values[np.asarray(mask, dtype=bool).ravel()]
+    qs_arr = np.atleast_1d(np.asarray(qs, dtype=np.float64))
+    if np.any((qs_arr < 0) | (qs_arr > 100)):
+        raise ValueError(f"percentiles must lie in [0, 100]; got {qs!r}")
+    if values.size == 0:
+        out = np.full(qs_arr.shape, np.nan)
+    else:
+        s = np.sort(values)
+        pos = qs_arr / 100.0 * (s.size - 1)
+        lo = np.floor(pos).astype(np.int64)
+        hi = np.minimum(lo + 1, s.size - 1)
+        t = pos - lo
+        d = s[hi] - s[lo]
+        out = np.where(t >= 0.5, s[hi] - d * (1.0 - t), s[lo] + d * t)
+    return float(out[0]) if scalar else out
+
+
 def _select_valid(res: Dict[str, np.ndarray]):
     v = np.asarray(res["valid"], dtype=bool) & np.asarray(res["done"], dtype=bool)
     return (
@@ -168,6 +195,62 @@ def reliability_summary(res) -> Dict[str, float]:
     }
 
 
+def slo_summary(res, class_names=None, total_nodes=None) -> Dict[str, float]:
+    """Scalar serving metrics (results carrying SLO columns, DESIGN.md §16).
+
+    - ``slo_attainment`` / ``deadline_miss_rate``: fraction of completed
+      requests that started by / after their deadline (the verdict both
+      engines fix at start time);
+    - ``p50_wait`` / ``p99_wait``: exact wait percentiles over completed
+      requests (and ``{class}_p50_wait`` / ``{class}_p99_wait`` /
+      ``{class}_miss_rate`` per class when ``class_names`` is given);
+    - ``slo_goodput``: SLO-met node-seconds over the *provisioned capacity
+      integral* — under autoscaling the capacity level steps through the
+      consumed tick stream (``cap_time``/``cap_online``), so scaling down
+      idle capacity raises goodput even at equal attainment.  Requires
+      ``total_nodes`` (the level before the first tick); omitted when
+      unavailable or when the makespan is empty.
+    """
+    valid = np.asarray(res["valid"], dtype=bool)
+    done = valid & np.asarray(res["done"], dtype=bool)
+    met = np.asarray(res["slo_met"], dtype=bool)
+    wait = np.asarray(res["wait"], dtype=np.float64)
+    n_done = int(done.sum())
+    attain = float(met[done].sum()) / n_done if n_done else 1.0
+    out = {
+        "n_requests": float(valid.sum()),
+        "slo_attainment": attain,
+        "deadline_miss_rate": 1.0 - attain,
+        "p50_wait": percentiles(wait, 50, mask=done),
+        "p99_wait": percentiles(wait, 99, mask=done),
+    }
+    if class_names is not None and "class_id" in res:
+        cid = np.asarray(res["class_id"], dtype=np.int64)
+        for c, name in enumerate(class_names):
+            sel = done & (cid == c)
+            k = int(sel.sum())
+            out[f"{name}_p50_wait"] = percentiles(wait, 50, mask=sel)
+            out[f"{name}_p99_wait"] = percentiles(wait, 99, mask=sel)
+            out[f"{name}_miss_rate"] = (
+                float((~met[sel]).sum()) / k if k else 0.0)
+    if total_nodes is not None and n_done:
+        nodes = np.asarray(res["nodes"], dtype=np.float64)
+        start = np.asarray(res["start"], dtype=np.float64)
+        finish = np.asarray(res["finish"], dtype=np.float64)
+        useful = float((nodes * (finish - start))[done & met].sum())
+        makespan = float(finish[done].max())
+        # capacity integral: total_nodes until the first consumed tick,
+        # then the logged online level between ticks, clipped to makespan
+        t = np.asarray(res.get("cap_time", ()), dtype=np.float64)
+        lvl = np.asarray(res.get("cap_online", ()), dtype=np.float64)
+        edges = np.clip(np.r_[0.0, t, makespan], 0.0, makespan)
+        levels = np.r_[float(total_nodes), lvl]
+        cap_int = float((np.maximum(np.diff(edges), 0.0) * levels).sum())
+        if cap_int > 0:
+            out["slo_goodput"] = useful / cap_int
+    return out
+
+
 def summary(res, total_nodes: int) -> Dict[str, float]:
     """Scalar metrics used by the five-policy comparison (paper Fig. 4b).
 
@@ -197,8 +280,8 @@ def summary(res, total_nodes: int) -> Dict[str, float]:
     return {
         "n_jobs": float(len(submit)),
         "avg_wait": float(wait.mean()),
-        "p50_wait": float(np.percentile(wait, 50)),
-        "p95_wait": float(np.percentile(wait, 95)),
+        "p50_wait": percentiles(wait, 50),
+        "p95_wait": percentiles(wait, 95),
         "max_wait": float(wait.max()),
         "avg_bounded_slowdown": float(bsld.mean()),
         "makespan": makespan,

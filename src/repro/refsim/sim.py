@@ -28,6 +28,15 @@ mode kills the job covering slot ``node % n_up`` of the row-order running
 node cumsum — the same requeue/abort transitions, and the same checkpoint
 rework accounting, recording every kill in an explicit ``kill_log`` the
 differential tests audit ``n_restarts`` against.
+
+Serving (DESIGN.md §16): given a ``repro.serving.ServicePlan`` this
+simulator carries the per-job SLO deadline column, fixes the met/missed
+verdict at start time, and walks the *same* autoscaler tick stream as the
+JAX engine — one hysteresis rule application per consumed tick, after the
+reliability stream and before arrivals, with scale-down bounded by the
+free count (drain semantics: a running job is never stranded) and
+machine-mode deactivation taking the highest-index free nodes /
+reactivation the lowest-index offline ones.
 """
 
 from __future__ import annotations
@@ -77,8 +86,10 @@ class ReferenceSimulator:
     alloc: str = "simple"
     contention: object = None       # repro.alloc.Contention, (num, den), or None
     failures: object = None         # repro.reliability.FailureTrace or None
+    service: object = None          # repro.serving.ServicePlan or None
     jobs: List[_Job] = field(default_factory=list)
     dep_pairs: List[tuple] = field(default_factory=list)  # sorted-row indices
+    _order: np.ndarray = None       # input-row -> sorted-row permutation
 
     def load(self, submit, runtime, nodes, estimate=None, priority=None,
              deps=None):
@@ -94,6 +105,7 @@ class ReferenceSimulator:
         priority = (np.asarray(priority, dtype=np.int64) if priority is not None
                     else np.zeros(len(submit), dtype=np.int64))
         order = np.lexsort((np.arange(len(submit)), submit))
+        self._order = order
         self.jobs = [
             _Job(i, int(submit[o]), int(runtime[o]), int(estimate[o]),
                  int(nodes[o]), int(priority[o]), remaining=int(runtime[o]))
@@ -235,12 +247,41 @@ class ReferenceSimulator:
         kill_log: List[dict] = []
         live = n  # jobs not yet completed or aborted
 
+        # serving: SLO deadlines plus the autoscaler tick stream (the same
+        # hysteresis rule as engine._process_capacity_ticks, applied once
+        # per consumed tick, after reliability and before arrivals)
+        svc = self.service
+        if svc is not None:
+            from repro.core.jobs import INF_TIME as _SVC_INF
+            tick = np.asarray(svc.tick_time, dtype=np.int64)
+            svc_T = len(tick)
+            svc_up, svc_down = int(svc.up_threshold), int(svc.down_threshold)
+            svc_step, svc_min = int(svc.step), int(svc.min_nodes)
+            svc_max = min(
+                self.total_nodes if svc.max_nodes is None
+                else int(svc.max_nodes), self.total_nodes)
+            if owner is not None and down is not None and svc_T > 0:
+                raise ValueError(
+                    "machine-mode failures cannot be combined with an "
+                    "active autoscaler (engine parity)")
+        else:
+            tick, svc_T = None, 0
+        ptr_s = 0
+        n_online = self.total_nodes
+        svc_offline = (np.zeros(self.total_nodes, dtype=bool)
+                       if (svc is not None and owner is not None) else None)
+        cap_log: List[tuple] = []  # (tick time, online count after rule)
+
         def owner_view() -> np.ndarray:
-            """Occupancy map as the placement strategies see it: down nodes
-            painted with the out-of-range owner id ``n`` (engine mirror)."""
-            if down is None:
-                return owner
-            return np.where(down, n, owner)
+            """Occupancy map as the placement strategies see it: down and
+            drained nodes painted with the out-of-range owner id ``n``
+            (engine mirror)."""
+            ov = owner
+            if svc_offline is not None:
+                ov = np.where(svc_offline, n, ov)
+            if down is not None:
+                ov = np.where(down, n, ov)
+            return ov
 
         def cap_now() -> int:
             if owner is None:
@@ -291,9 +332,14 @@ class ReferenceSimulator:
             t_fin = heap[0][0] if heap else None
             t_rel = (st_time[ptr] if fail is not None and ptr < n_stream
                      else None)
-            assert t_arr is not None or t_fin is not None or t_rel is not None, \
+            t_svc = None
+            if ptr_s < svc_T and int(tick[ptr_s]) < int(_SVC_INF):
+                t_svc = int(tick[ptr_s])   # INF padding is never a source
+            assert (t_arr is not None or t_fin is not None
+                    or t_rel is not None or t_svc is not None), \
                 "deadlock: blocked jobs with no running dependency"
-            clock = min(x for x in (t_arr, t_fin, t_rel) if x is not None)
+            clock = min(x for x in (t_arr, t_fin, t_rel, t_svc)
+                        if x is not None)
             n_events += 1
             # completions first (skip heap entries stale after preemption);
             # completing a job releases its dependents *now*, before the
@@ -350,6 +396,32 @@ class ReferenceSimulator:
                             continue
                         down[node] = False
                     free += 1
+            # autoscaler ticks: after reliability (capacity reacts to this
+            # instant's failures), before arrivals (queued demand is read
+            # BEFORE this event's arrivals join the queue — engine mirror)
+            while ptr_s < svc_T and int(tick[ptr_s]) <= clock and live > 0:
+                demand = sum(j.nodes for j in waiting)
+                up = demand >= svc_up
+                dn = (not up) and demand <= svc_down
+                k_up = min(max(svc_max - n_online, 0), svc_step) if up else 0
+                k_down = (min(max(n_online - svc_min, 0), svc_step,
+                              max(free, 0)) if dn else 0)
+                if svc_offline is not None:
+                    if k_up:
+                        # reactivate the lowest-index offline nodes
+                        ids = np.nonzero(svc_offline)[0][:k_up]
+                        svc_offline[ids] = False
+                    if k_down:
+                        # drain the highest-index FREE online nodes; the
+                        # free counter bounds k_down, so a busy node is
+                        # never taken (no running job is ever stranded)
+                        cand = np.nonzero((owner < 0) & ~svc_offline)[0]
+                        assert len(cand) >= k_down, "autoscale drain invariant"
+                        svc_offline[cand[len(cand) - k_down:]] = True
+                n_online += k_up - k_down
+                free += k_up - k_down
+                cap_log.append((int(tick[ptr_s]), n_online))
+                ptr_s += 1
             # arrivals: submit reached AND all dependencies DONE
             while rel_heap and jobs[rel_heap[0]].submit <= clock:
                 i = heapq.heappop(rel_heap)
@@ -389,6 +461,8 @@ class ReferenceSimulator:
                                            j.nodes)
                     assert down is None or not down[ids].any(), \
                         "placement invariant violated: job on a down node"
+                    assert svc_offline is None or not svc_offline[ids].any(), \
+                        "placement invariant violated: job on a drained node"
                     owner[ids] = j.idx
                     j.alloc_span = _host.group_span_host(mach, ids)
                     j.alloc_first, j.alloc_sum = _host.fingerprint_host(ids)
@@ -427,6 +501,19 @@ class ReferenceSimulator:
         else:
             out["makespan"] = int(out["finish"].max(initial=0))
         out["n_events"] = n_events
+        if svc is not None:
+            # SLO verdict fixed at start time: met iff the job started by
+            # its deadline (deadline rows are input-order; map through the
+            # (submit, id) sort like every other job column)
+            dl = np.asarray(svc.deadline, dtype=np.int64)[self._order]
+            out["deadline"] = dl
+            out["slo_met"] = out["done"] & (out["start"] <= dl)
+            out["class_id"] = np.asarray(
+                svc.class_id, dtype=np.int64)[self._order]
+            out["cap_time"] = np.array([t for t, _ in cap_log],
+                                       dtype=np.int64)
+            out["cap_online"] = np.array([v for _, v in cap_log],
+                                         dtype=np.int64)
         if mach is not None:
             out["alloc_first"] = np.array(
                 [j.alloc_first for j in jobs], dtype=np.int64)
@@ -441,13 +528,16 @@ class ReferenceSimulator:
 
 
 def simulate_reference(trace, policy: str, *, total_nodes: int, machine=None,
-                       alloc: str = "simple", contention=None, failures=None):
+                       alloc: str = "simple", contention=None, failures=None,
+                       service=None):
     """One-call host oracle.  ``failures`` is a materialized
-    ``repro.reliability.FailureTrace`` (NOT a ``FailureModel`` — both
-    engines must consume the identical arrays, so materialize once)."""
+    ``repro.reliability.FailureTrace`` (NOT a ``FailureModel``) and
+    ``service`` a materialized ``repro.serving.ServicePlan`` — both
+    engines must consume the identical arrays, so materialize once."""
     sim = ReferenceSimulator(total_nodes=total_nodes, policy=policy,
                              machine=machine, alloc=alloc,
-                             contention=contention, failures=failures)
+                             contention=contention, failures=failures,
+                             service=service)
     sim.load(trace["submit"], trace["runtime"], trace["nodes"],
              trace.get("estimate"), trace.get("priority"),
              deps=trace.get("deps"))

@@ -1,0 +1,19 @@
+"""Online serving subsystem (DESIGN.md §16).
+
+Open-arrival service traffic as a first-class scenario family: a frozen
+:class:`ServiceTrace` materializes deterministic per-class request
+streams with per-request SLO deadlines, and a queue-pressure
+:class:`AutoscalePolicy` drives a deterministic capacity event stream
+both engines consume bit-identically.  ``service=None`` statically
+elides the whole subsystem — the serving-free engine compiles to the
+exact pre-serving event graph (property-tested via HLO fingerprints).
+"""
+
+from repro.serving.model import (
+    AutoscalePolicy, ServiceClass, ServicePlan, ServiceTrace, make_svc_ctx,
+)
+
+__all__ = [
+    "AutoscalePolicy", "ServiceClass", "ServicePlan", "ServiceTrace",
+    "make_svc_ctx",
+]

@@ -1,0 +1,410 @@
+"""Online serving subsystem (ISSUE 6, DESIGN.md §16): open arrivals,
+per-class SLOs, and queue-pressure autoscaling.
+
+- model: deterministic seeded materialization into padded job arrays
+  (deadline/class columns row-aligned with the job table), loud truncation,
+  int32 clock-overflow guards (ServiceTrace AND SwfTrace), validation;
+- semantics: a hand-built tie collision (completion == tick == arrival at
+  one timestamp) pins the completions -> capacity -> arrivals order via a
+  closed-form capacity log; drain semantics (scale-down never strands a
+  running job) are asserted inside the refsim oracle on every run;
+- differential: engine vs refsim bit-exact (starts, finishes, SLO verdicts,
+  capacity log, event counts, p50/p99 wait and deadline-miss summary
+  columns) over {3 rates} x {2 class mixes} x {autoscale on/off} x
+  {fcfs, sjf} x {scalar, mesh2d} — the big grid rides the ``slow`` lane,
+  a 4-config corner stays in the fast lane;
+- properties (hypothesis): random rates/thresholds/seeds keep the engines
+  bit-identical and the capacity log inside [min_nodes, max_nodes];
+- sweeps: a rate x autoscale x seed grid compiles to ONE executable;
+- metrics: ``percentiles()`` matches ``numpy.percentile`` exactly.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.api import (
+    AutoscalePolicy, FailureModel, Multicluster, Scenario, ServiceClass,
+    ServiceTrace, SwfTrace, Topology, run, run_ref, sweep,
+)
+from repro.core import metrics
+from repro.core.jobs import INF_TIME
+from repro.serving import ServicePlan, make_svc_ctx
+
+RATES = (0.02, 0.06, 0.11)
+POLICIES = ("fcfs", "sjf")
+
+ONE_CLASS = (ServiceClass("default", nodes=1, mean_runtime=45, slo_wait=60),)
+TWO_CLASS = (
+    ServiceClass("small", nodes=1, mean_runtime=30, slo_wait=40),
+    ServiceClass("big", nodes=4, mean_runtime=120, dist="exponential",
+                 slo_wait=200, weight=0.3),
+)
+SCALER = AutoscalePolicy(up_threshold=6, down_threshold=1, min_nodes=4,
+                         max_nodes=16, step=2, interval=50, max_ticks=64)
+
+
+def _spec(rate=0.06, classes=TWO_CLASS, autoscale=SCALER, **kw):
+    kw.setdefault("horizon", 1500)
+    kw.setdefault("seed", 7)
+    kw.setdefault("max_jobs", 256)
+    return ServiceTrace(rate=rate, classes=classes, autoscale=autoscale, **kw)
+
+
+def _scenario(mode, rate, classes, autoscale, policy):
+    kw = dict(policy=policy)
+    if mode == "mesh2d":
+        kw.update(topology=Topology.mesh2d(4, 4), alloc="simple")
+    else:
+        kw.update(total_nodes=16)
+    return Scenario(trace=_spec(rate, classes, autoscale), **kw)
+
+
+def _assert_bit_exact(scn):
+    res, ref = run(scn), run_ref(scn)
+    assert res.matches(ref)
+    a, b = res.to_np(), ref.to_np()
+    n = int(b["valid"].sum())
+    for key in ("slo_met", "deadline", "class_id"):
+        np.testing.assert_array_equal(a[key][:n], b[key])
+    np.testing.assert_array_equal(a["cap_online"], b["cap_online"])
+    np.testing.assert_array_equal(a["cap_time"], b["cap_time"])
+    assert a["n_events"] == b["n_events"]
+    sa, sb = res.summary(), ref.summary()
+    for key in sa:
+        np.testing.assert_allclose(sa[key], sb[key], rtol=0, atol=0,
+                                   err_msg=key)
+    return res, ref
+
+
+# ---------------------------------------------------------------------------
+# model / materialization
+# ---------------------------------------------------------------------------
+
+
+def test_materialize_is_deterministic_and_padded():
+    plan = _spec().plan()
+    again = _spec().plan()
+    assert isinstance(plan, ServicePlan)
+    for key in ("submit", "runtime", "nodes", "deadline", "class_id",
+                "tick_time"):
+        np.testing.assert_array_equal(getattr(plan, key), getattr(again, key))
+    n, J = plan.n_requests, plan.capacity
+    assert 0 < n <= J == 256
+    assert (np.diff(plan.submit) >= 0).all() and plan.submit.min() == 0
+    # deadline = submit + class slo, row-aligned; padding is inert
+    slo = np.asarray([c.slo_wait for c in TWO_CLASS])
+    np.testing.assert_array_equal(
+        plan.deadline[:n], plan.submit + slo[plan.class_id[:n]])
+    assert (plan.deadline[n:] == INF_TIME).all()
+    assert (plan.class_id[n:] == -1).all()
+    assert plan.tick_time.shape == (SCALER.max_ticks,)
+    np.testing.assert_array_equal(
+        plan.tick_time,
+        np.arange(1, SCALER.max_ticks + 1) * SCALER.interval)
+
+
+def test_fixed_and_exponential_runtimes():
+    plan = _spec().plan()
+    cid = plan.class_id[:plan.n_requests]
+    assert (plan.runtime[cid == 0] == 30).all()        # fixed class
+    assert len(set(plan.runtime[cid == 1].tolist())) > 1   # exponential
+    assert (plan.estimate >= plan.runtime).all()
+    assert (plan.nodes == np.asarray([1, 4])[cid]).all()
+
+
+def test_disabled_autoscaler_keeps_tick_shape():
+    on = _spec().plan()
+    off = _spec(autoscale=dataclasses.replace(SCALER, enabled=False)).plan()
+    assert on.tick_time.shape == off.tick_time.shape
+    assert (off.tick_time == INF_TIME).all()
+    none = _spec(autoscale=None).plan()
+    assert none.tick_time.shape == (0,)
+
+
+def test_trace_driven_arrivals():
+    spec = _spec(arrivals=((3, 0), (3, 1), (10, 0)), autoscale=None,
+                 classes=TWO_CLASS)
+    plan = spec.plan()
+    assert plan.n_requests == 3
+    np.testing.assert_array_equal(plan.submit, [0, 0, 7])  # shifted to 0
+    np.testing.assert_array_equal(plan.class_id[:3], [0, 1, 0])
+
+
+def test_truncation_is_flagged_and_warned():
+    with pytest.warns(UserWarning, match="max_jobs=8"):
+        plan = ServiceTrace(horizon=2000, rate=0.1, seed=0,
+                            max_jobs=8).plan()
+    assert plan.truncated and plan.n_requests == 8
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="dist"):
+        ServiceClass("x", dist="pareto")
+    with pytest.raises(ValueError, match="down_threshold < up_threshold"):
+        AutoscalePolicy(up_threshold=2, down_threshold=2)
+    with pytest.raises(ValueError, match="deadlock"):
+        ServiceTrace(horizon=100, classes=TWO_CLASS,
+                     autoscale=AutoscalePolicy(up_threshold=5,
+                                               down_threshold=1, min_nodes=2))
+    with pytest.raises(ValueError, match="sorted"):
+        ServiceTrace(horizon=100, arrivals=((5, 0), (3, 0)))
+    with pytest.raises(ValueError, match="horizon"):
+        ServiceTrace(horizon=0)
+    with pytest.raises(TypeError, match="svc ctx"):
+        make_svc_ctx((1, 2, 3))
+
+
+def test_scenario_validation():
+    spec = _spec()
+    with pytest.raises(ValueError, match="max_jobs"):
+        Scenario(trace=spec, total_nodes=16, capacity=512)
+    with pytest.raises(ValueError, match="multicluster"):
+        Scenario(trace=(spec, spec), total_nodes=16,
+                 multicluster=Multicluster(window=50))
+    with pytest.raises(ValueError, match="autoscal"):
+        Scenario(trace=spec, topology=Topology.mesh2d(4, 4),
+                 failures=FailureModel(mtbf=500.0))
+
+
+# ---------------------------------------------------------------------------
+# overflow guards (ServiceTrace + SwfTrace)
+# ---------------------------------------------------------------------------
+
+
+def test_service_trace_clock_overflow_guard():
+    big = int(INF_TIME) // 2 - 1
+    spec = ServiceTrace(
+        horizon=big, arrivals=((0, 0), (big - 1, 0)),
+        classes=(ServiceClass("x", mean_runtime=300_000_000),))
+    with pytest.raises(ValueError, match="int32 clock"):
+        spec.plan()
+
+
+def test_swf_trace_clock_overflow_guard(tmp_path):
+    path = tmp_path / "huge.swf"
+    pad = "-1 " * 9
+    path.write_text(
+        f"1 0 0 100 4 -1 -1 4 120 -1 1 {pad}\n"
+        f"2 {2**30} 0 100 4 -1 -1 4 120 -1 1 {pad}\n")
+    with pytest.raises(ValueError, match="int32 clock"):
+        SwfTrace(str(path)).materialize()
+    # a sane log still loads
+    ok = tmp_path / "ok.swf"
+    ok.write_text(f"1 0 0 100 4 -1 -1 4 120 -1 1 {pad}\n")
+    assert len(SwfTrace(str(ok)).materialize()["submit"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# event-order semantics
+# ---------------------------------------------------------------------------
+
+
+def test_tie_order_completions_then_capacity_then_arrivals():
+    # one timestamp (t=50) carries a completion, a tick, and an arrival:
+    # the tick must read queued demand AFTER the completion but BEFORE the
+    # arrival — demand 0 scales down, so the capacity log reads 1, and the
+    # arriving request still starts on the remaining node at t=50
+    spec = ServiceTrace(
+        horizon=250, arrivals=((0, 0), (50, 0), (180, 0)),
+        classes=(ServiceClass("c", nodes=1, mean_runtime=50, slo_wait=100),),
+        max_jobs=8,
+        autoscale=AutoscalePolicy(up_threshold=5, down_threshold=0,
+                                  min_nodes=1, max_nodes=2, step=1,
+                                  interval=50, max_ticks=4))
+    scn = Scenario(trace=spec, total_nodes=2)
+    res, ref = _assert_bit_exact(scn)
+    out = res.to_np()
+    np.testing.assert_array_equal(out["start"][:3], [0, 50, 180])
+    # demand read before the t=50 arrival -> scale-down happened (2 -> 1);
+    # later ticks hold at min_nodes=1 (each completion already freed its
+    # node before the colliding tick walked)
+    np.testing.assert_array_equal(out["cap_time"], [50, 100, 150, 200])
+    np.testing.assert_array_equal(out["cap_online"], [1, 1, 1, 1])
+    assert bool(out["slo_met"][1])
+
+
+def test_scale_up_reacts_to_queue_pressure():
+    # all nodes drained to min, then a burst: the scaler must climb back
+    # up before the queue clears
+    spec = ServiceTrace(
+        horizon=1200, rate=0.12, seed=3, max_jobs=256, classes=ONE_CLASS,
+        autoscale=AutoscalePolicy(up_threshold=3, down_threshold=0,
+                                  min_nodes=1, max_nodes=8, step=2,
+                                  interval=25, max_ticks=64))
+    scn = Scenario(trace=spec, total_nodes=8)
+    res, _ = _assert_bit_exact(scn)
+    cap = res.to_np()["cap_online"]
+    assert cap.min() >= 1 and cap.max() <= 8
+    assert (np.diff(cap) > 0).any() and (np.diff(cap) < 0).any()
+
+
+def test_service_none_is_statically_elided():
+    # the SimResult of a service-free run carries no svc subtree at all
+    # (the byte-identical-HLO guarantee is pinned by test_engine_fastpath's
+    # committed fingerprints; this is the cheap pytree-level check)
+    scn = Scenario(trace={"submit": [0, 1], "runtime": [5, 5],
+                          "nodes": [1, 1]}, total_nodes=2)
+    res = run(scn)
+    assert res.raw.svc is None
+    assert "slo_met" not in res.to_np()
+
+
+# ---------------------------------------------------------------------------
+# differential grid
+# ---------------------------------------------------------------------------
+
+AUTOSCALES = (SCALER, dataclasses.replace(SCALER, enabled=False))
+
+
+@pytest.mark.parametrize("mode,policy", [
+    ("scalar", "fcfs"), ("scalar", "sjf"),
+    ("mesh2d", "fcfs"), ("mesh2d", "sjf"),
+])
+def test_differential_corner_fast(mode, policy):
+    _assert_bit_exact(_scenario(mode, 0.06, TWO_CLASS, SCALER, policy))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("rate", RATES)
+@pytest.mark.parametrize("classes", (ONE_CLASS, TWO_CLASS),
+                         ids=("one_class", "two_class"))
+@pytest.mark.parametrize("autoscale", AUTOSCALES, ids=("on", "off"))
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("mode", ("scalar", "mesh2d"))
+def test_differential_grid(rate, classes, autoscale, policy, mode):
+    _assert_bit_exact(_scenario(mode, rate, classes, autoscale, policy))
+
+
+def test_scalar_failures_compose_with_service():
+    from repro.api import FailureModel
+    scn = Scenario(
+        trace=_spec(autoscale=AutoscalePolicy(
+            up_threshold=5, down_threshold=1, min_nodes=4, step=1,
+            interval=40, max_ticks=64)),
+        total_nodes=16, policy="fcfs",
+        failures=FailureModel(mtbf=900.0, seed=2, mean_repair=60,
+                              horizon=1500, max_failures=16))
+    _assert_bit_exact(scn)
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), rate=st.floats(0.01, 0.15),
+       up=st.integers(2, 10), down=st.integers(0, 1),
+       interval=st.integers(10, 80), policy=st.sampled_from(POLICIES),
+       mode=st.sampled_from(("scalar", "mesh2d")))
+def test_random_serving_engines_bit_exact(seed, rate, up, down, interval,
+                                          policy, mode):
+    # drain semantics are asserted inside the refsim oracle (scale-down
+    # candidates are free nodes only; placements never land on a drained
+    # node), so engine==refsim here transfers the property to the engine
+    auto = AutoscalePolicy(up_threshold=up, down_threshold=down,
+                           min_nodes=4, max_nodes=16, step=2,
+                           interval=interval, max_ticks=64)
+    kw = dict(policy=policy)
+    if mode == "mesh2d":
+        kw.update(topology=Topology.mesh2d(4, 4), alloc="simple")
+    else:
+        kw.update(total_nodes=16)
+    scn = Scenario(trace=_spec(rate=rate, seed=seed, autoscale=auto), **kw)
+    res, _ = _assert_bit_exact(scn)
+    cap = res.to_np()["cap_online"]
+    if len(cap):
+        assert cap.min() >= auto.min_nodes and cap.max() <= auto.max_nodes
+
+
+# ---------------------------------------------------------------------------
+# sweeps compile once
+# ---------------------------------------------------------------------------
+
+
+def test_rate_autoscale_sweep_single_executable():
+    scn = Scenario(trace=_spec(), total_nodes=16, policy="fcfs")
+    grid = sweep(scn, axes={
+        "trace.rate": (0.03, 0.07, 0.11),
+        "trace.autoscale": AUTOSCALES,
+        "trace.seed": (0, 1),
+    })
+    assert grid.n_compiles == 1
+    assert len(grid) == 12
+    # rate points are distinct traffic (the job-table cache keys the full
+    # spec, not just its static shape)
+    reqs = {p["trace.rate"]: s["n_requests"]
+            for p, s in zip(grid.points, grid.summaries())
+            if p["trace.seed"] == 0 and p["trace.autoscale"] is AUTOSCALES[0]}
+    assert len(set(reqs.values())) > 1
+    for point, res in grid:
+        ref = run_ref(res.scenario)
+        assert res.matches(ref), point
+        np.testing.assert_array_equal(
+            res["cap_online"], ref["cap_online"], err_msg=str(point))
+
+
+def test_max_ticks_is_a_static_axis():
+    scn = Scenario(trace=_spec(), total_nodes=16, policy="fcfs")
+    grid = sweep(scn, axes={"trace.autoscale": (
+        SCALER, dataclasses.replace(SCALER, max_ticks=32))})
+    assert grid.n_compiles == 2   # padded tick capacity recompiles
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_percentiles_match_numpy():
+    rng = np.random.default_rng(0)
+    for size in (1, 2, 7, 100, 1001):
+        x = rng.normal(size=size) * 100
+        qs = (0.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0)
+        np.testing.assert_allclose(
+            metrics.percentiles(x, qs), np.percentile(x, qs),
+            rtol=0, atol=1e-9)
+        # scalar q returns a bare float
+        p50 = metrics.percentiles(x, 50)
+        assert isinstance(p50, float) and p50 == np.percentile(x, 50)
+    # masked selection == pre-masked numpy
+    x = rng.integers(0, 1000, 200).astype(float)
+    m = rng.random(200) < 0.5
+    np.testing.assert_allclose(metrics.percentiles(x, 99, mask=m),
+                               np.percentile(x[m], 99))
+    assert np.isnan(metrics.percentiles(x, 50, mask=np.zeros(200, bool)))
+    with pytest.raises(ValueError):
+        metrics.percentiles(x, 101)
+
+
+def test_summary_wait_stats_ride_percentiles():
+    scn = _scenario("scalar", 0.06, TWO_CLASS, SCALER, "fcfs")
+    out = run(scn).to_np()
+    s = run(scn).summary()
+    v = out["valid"] & out["done"]
+    wait = out["wait"][v].astype(float)
+    assert s["p50_wait"] == np.percentile(wait, 50)
+    assert s["p95_wait"] == np.percentile(wait, 95)
+
+
+def test_slo_summary_scalars():
+    scn = _scenario("scalar", 0.06, TWO_CLASS, SCALER, "fcfs")
+    s = run(scn).summary()
+    assert 0.0 <= s["slo_attainment"] <= 1.0
+    assert s["deadline_miss_rate"] == pytest.approx(1 - s["slo_attainment"])
+    assert s["p99_wait"] >= s["p50_wait"] >= 0.0
+    for name in ("small", "big"):
+        assert f"{name}_p99_wait" in s and f"{name}_miss_rate" in s
+    assert 0.0 < s["slo_goodput"] <= 1.0
+    # per-class miss rates aggregate to the global rate
+    out = run(scn).to_np()
+    done = out["valid"] & out["done"]
+    n_small = int((done & (out["class_id"] == 0)).sum())
+    n_big = int((done & (out["class_id"] == 1)).sum())
+    agg = (s["small_miss_rate"] * n_small + s["big_miss_rate"] * n_big) \
+        / max(n_small + n_big, 1)
+    assert agg == pytest.approx(s["deadline_miss_rate"])
