@@ -34,7 +34,7 @@ BENCH_JSON = "BENCH_engine.json"
 
 
 def _measure(jobs, policy: str, total_nodes: int, iters: int = 3,
-             service=None) -> dict:
+             service=None, malleable=None) -> dict:
     """events/s for one compiled engine call, with the compile/run split.
 
     The first call pays trace+compile; steady-state is the median of at
@@ -45,13 +45,15 @@ def _measure(jobs, policy: str, total_nodes: int, iters: int = 3,
     """
     pol = POLICY_IDS[policy]
     t0 = time.perf_counter()
-    res = simulate(jobs, pol, total_nodes, service=service)
+    res = simulate(jobs, pol, total_nodes, service=service,
+                   malleable=malleable)
     res.n_events.block_until_ready()
     first = time.perf_counter() - t0
     times = []
     while len(times) < iters or (sum(times) < 0.6 and len(times) < 15):
         t0 = time.perf_counter()
-        res = simulate(jobs, pol, total_nodes, service=service)
+        res = simulate(jobs, pol, total_nodes, service=service,
+                       malleable=malleable)
         res.n_events.block_until_ready()
         times.append(time.perf_counter() - t0)
     run_s = float(np.median(times))
@@ -147,6 +149,22 @@ def run_bench(outdir: str = "results", *, smoke: bool = False) -> dict:
     emit("des_throughput_serving_open_fcfs", m["run_s"],
          f"jax_events_per_s={m['events_per_s']:.0f};"
          f"n_requests={svc_spec.plan().n_requests}")
+
+    # ---- moldable width choice on the no-deps trace (DESIGN.md §17) --------
+    from repro.malleable import MalleableModel, make_mal_ctx, materialize_plan
+
+    mal_model = MalleableModel(curve="amdahl", param=0.1, min_width=1,
+                               max_width=16, mode="moldable")
+    mal_plan = materialize_plan(mal_model, trace, total_nodes=total_nodes)
+    m = _measure(jobs, "backfill", total_nodes,
+                 malleable=make_mal_ctx(mal_plan))
+    report["cases"]["moldable_backfill"] = {
+        **m, "trace": "sdsc_sp2_like", "n_jobs": J,
+        "total_nodes": total_nodes, "n_widths": mal_plan.n_widths,
+    }
+    emit("des_throughput_moldable_backfill", m["run_s"],
+         f"jax_events_per_s={m['events_per_s']:.0f};"
+         f"n_widths={mal_plan.n_widths}")
 
     # ---- scheduler hot-spot kernel at production queue sizes ---------------
     rng = np.random.default_rng(0)

@@ -21,16 +21,16 @@ import importlib
 
 _SUBMODULES = frozenset({
     "alloc", "api", "ckpt", "configs", "core", "data", "kernels", "launch",
-    "models", "optim", "refsim", "reliability", "runtime", "serving",
-    "sharding", "traces",
+    "malleable", "models", "optim", "refsim", "reliability", "runtime",
+    "serving", "sharding", "traces",
 })
 
 # names re-exported from repro.api on first access
 _API_NAMES = frozenset({
-    "ArrayTrace", "AutoscalePolicy", "FailureModel", "Multicluster",
-    "Result", "Scenario", "ServiceClass", "ServiceTrace", "SweepResult",
-    "SwfTrace", "SyntheticTrace", "Topology", "WorkflowTrace",
-    "run", "run_ref", "sweep",
+    "ArrayTrace", "AutoscalePolicy", "FailureModel", "MalleableModel",
+    "Multicluster", "Result", "Scenario", "ServiceClass", "ServiceTrace",
+    "SweepResult", "SwfTrace", "SyntheticTrace", "Topology",
+    "WorkflowTrace", "run", "run_ref", "sweep",
 })
 
 __all__ = sorted(_SUBMODULES | _API_NAMES)

@@ -28,13 +28,14 @@ from repro.api.scenario import (
     TRACED_AXES, WorkflowTrace, as_trace_spec,
 )
 from repro.api.sweep import SweepResult, sweep
+from repro.malleable import MalleableModel
 from repro.reliability import FailureModel
 from repro.serving import AutoscalePolicy, ServiceClass, ServiceTrace
 
 __all__ = [
-    "ArrayTrace", "AutoscalePolicy", "FailureModel", "Multicluster",
-    "Result", "Scenario", "ServiceClass", "ServiceTrace", "SweepResult",
-    "SwfTrace", "SyntheticTrace", "Topology", "TRACED_AXES",
+    "ArrayTrace", "AutoscalePolicy", "FailureModel", "MalleableModel",
+    "Multicluster", "Result", "Scenario", "ServiceClass", "ServiceTrace",
+    "SweepResult", "SwfTrace", "SyntheticTrace", "Topology", "TRACED_AXES",
     "WorkflowTrace", "as_trace_spec", "build_jobset", "run", "run_ref",
     "simresult_to_np", "sweep",
 ]

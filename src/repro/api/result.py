@@ -89,6 +89,8 @@ class Result:
             names = plan.class_names if plan is not None else None
             s.update(metrics.slo_summary(out, class_names=names,
                                          total_nodes=total))
+        if "mal_width" in out:
+            s.update(metrics.malleable_summary(out))
         return s
 
     @property
@@ -136,6 +138,15 @@ def simresult_to_np(res: SimResult, jobs: JobSet, *, with_alloc: bool,
         out["n_restarts"] = np.asarray(res.rel.n_restarts)
         out["lost_work"] = np.asarray(res.rel.lost_work)
         out["aborted"] = np.asarray(res.rel.aborted)
+    if res.mal is not None:
+        # chosen/final width, reference width, resize count, node-second
+        # ledger and dispatch-time dilated duration (DESIGN.md §17); rows
+        # align with the job table like every other column
+        out["mal_width"] = np.asarray(res.mal.width, dtype=np.int64)
+        out["mal_nref"] = np.asarray(res.mal.nref, dtype=np.int64)
+        out["mal_nresize"] = np.asarray(res.mal.n_resizes, dtype=np.int64)
+        out["mal_node_s"] = np.asarray(res.mal.node_s, dtype=np.int64)
+        out["mal_dur"] = np.asarray(res.mal.disp_dur, dtype=np.int64)
     if res.svc is not None:
         out["slo_met"] = np.asarray(res.svc.slo_met)
         out["deadline"] = np.asarray(res.svc.deadline)

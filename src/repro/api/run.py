@@ -71,6 +71,26 @@ def _service_plan(scenario: Scenario):
     return spec.plan() if hasattr(spec, "plan") else None
 
 
+def _mal_plan(scenario: Scenario):
+    """The ONE materialized malleable plan both engines consume.
+
+    ``materialize_plan`` normalizes and (submit, id)-sorts the trace with
+    the same rules as ``make_jobset``, so the plan's dur/nref rows align
+    with the job table rows in BOTH engines; the model-level lru keeps
+    ``run`` and ``run_ref`` on identical arrays."""
+    if scenario.malleable is None:
+        return None
+    from repro.malleable import materialize_plan
+
+    spec = scenario.trace_specs()[0]
+    capacity = scenario.capacity
+    if capacity is None:
+        capacity = getattr(spec, "pad_capacity", None)
+    return materialize_plan(scenario.malleable, spec.materialize(),
+                            total_nodes=int(scenario.total_nodes),
+                            capacity=capacity)
+
+
 def run(scenario: Scenario) -> Result:
     """Run one scenario on the JAX engine and return a unified ``Result``."""
     if scenario.multicluster is not None:
@@ -85,6 +105,7 @@ def run(scenario: Scenario) -> Result:
         contention=scenario.contention,
         failures=_failure_trace(scenario),
         service=_service_plan(scenario),
+        malleable=_mal_plan(scenario),
         max_events=scenario.max_events,
     )
     return Result(scenario=scenario, backend="jax", raw=res, jobs=jobs)
@@ -111,6 +132,7 @@ def run_ref(scenario: Scenario) -> Result:
         contention=scenario.contention,
         failures=_failure_trace(scenario),
         service=_service_plan(scenario),
+        malleable=_mal_plan(scenario),
     )
     return Result(scenario=scenario, backend="ref", raw=out)
 

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro import alloc as _alloc
 from repro.core.jobs import INF_TIME
+from repro.malleable import MalleableModel
 from repro.reliability import FailureModel
 from repro.serving import ServiceTrace
 from repro.traces import das2_like, load_swf, sdsc_sp2_like, synthetic_trace
@@ -342,7 +343,14 @@ TRACED_AXES = ("policy", "alloc", "contention", "total_nodes", "trace.seed",
                # horizon / class-mix / autoscale-threshold sweeps compile
                # once per static bucket
                "trace.rate", "trace.horizon", "trace.classes",
-               "trace.autoscale")
+               "trace.autoscale",
+               # MalleableModel (DESIGN.md §17): the width range and mode
+               # fix the dur-table / tick-stream shapes; the curve family
+               # and its parameters, the resize cadence and the thresholds
+               # are all plan data, so speedup-curve grids compile once
+               "malleable.curve", "malleable.param", "malleable.table",
+               "malleable.interval", "malleable.step",
+               "malleable.shrink_threshold", "malleable.grow_threshold")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -358,6 +366,12 @@ class Scenario:
     reliability-aware simulation (DESIGN.md §15); both engines consume the
     one materialized trace, and ``failures=None`` statically elides the
     whole subsystem.
+
+    ``malleable`` (a frozen ``repro.malleable.MalleableModel``) switches on
+    two-level resource management (DESIGN.md §17): moldable width choice at
+    dispatch, optionally elastic grow/shrink at capacity ticks, and
+    shrink-instead-of-requeue under node failures.  ``malleable=None``
+    statically elides the whole subsystem.
     """
 
     trace: Union[TraceSpec, Dict[str, Any], str, Tuple[TraceSpec, ...]]
@@ -370,8 +384,32 @@ class Scenario:
     capacity: Optional[int] = None
     max_events: Optional[int] = None
     failures: Optional[FailureModel] = None
+    malleable: Optional[MalleableModel] = None
 
     def __post_init__(self):
+        if self.malleable is not None:
+            if not isinstance(self.malleable, MalleableModel):
+                raise TypeError(
+                    "Scenario.malleable must be a repro.malleable."
+                    f"MalleableModel, got {type(self.malleable).__name__} "
+                    "(specs stay frozen/hashable; materialized "
+                    "MalleablePlans belong to the engine call, not the "
+                    "scenario)")
+            if self.multicluster is not None:
+                raise ValueError(
+                    "malleable jobs are not supported in multicluster "
+                    "scenarios yet; simulate the clusters individually")
+            if self.contention is not None:
+                raise ValueError(
+                    "malleable jobs cannot be combined with contention "
+                    "dilation: the speedup curve already rescales runtime "
+                    "per width, and composing the two dilations is "
+                    "undefined (DESIGN.md §17)")
+            if self.policy == "preempt":
+                raise ValueError(
+                    "malleable jobs cannot be combined with the preempt "
+                    "policy (width-aware preemption is an open item, "
+                    "DESIGN.md §17)")
         if self.failures is not None:
             if not isinstance(self.failures, FailureModel):
                 raise TypeError(

@@ -70,6 +70,11 @@ def _static_key(scenario: Scenario) -> tuple:
         scenario.capacity,
         scenario.max_events,
         None if scenario.failures is None else scenario.failures.static_key(),
+        # the width-range / mode / tick-capacity shapes; curve kind and
+        # parameters are plan data (vmap leaves), so a speedup-curve grid
+        # stays in one bucket (DESIGN.md §17)
+        None if scenario.malleable is None
+        else scenario.malleable.static_key(),
     )
 
 
@@ -170,11 +175,11 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence[Any]], *,
 
 @functools.lru_cache(maxsize=None)
 def _bucket_fn(with_alloc: bool, with_fail: bool, with_svc: bool,
-               max_events: Optional[int],
+               with_mal: bool, max_events: Optional[int],
                mesh: Optional[Mesh], axis: Optional[str]):
     # one generic batched runner: the optional subsystem args ride behind
     # (jobs, policy, total_nodes) in a fixed order — alloc pair, fail ctx,
-    # svc ctx — and the machine (a non-batched pytree) comes last
+    # svc ctx, mal ctx — and the machine (a non-batched pytree) comes last
     def fn(*args):
         if with_alloc:
             *batched, machine = args
@@ -192,6 +197,8 @@ def _bucket_fn(with_alloc: bool, with_fail: bool, with_svc: bool,
                 kw["failures"] = next(it)
             if with_svc:
                 kw["service"] = next(it)
+            if with_mal:
+                kw["malleable"] = next(it)
             return engine.simulate(j, p, t, machine=machine,
                                    max_events=max_events, **kw)
 
@@ -272,9 +279,22 @@ def _run_bucket(bucket: List[Scenario], mesh: Optional[Mesh]) -> List[Result]:
         sctxs += [sctxs[-1]] * pad
         args = args + (jax.tree.map(lambda *xs: jnp.stack(xs), *sctxs),)
 
+    with_mal = base.malleable is not None
+    if with_mal:
+        # materialized width/dilation tables stack into ordinary vmap
+        # leaves (uniform shapes: the width range and tick capacity key
+        # the static bucket), so a speedup-curve / threshold grid is ONE
+        # executable (DESIGN.md §17)
+        from repro.api.run import _mal_plan
+        from repro.malleable import make_mal_ctx
+
+        mctxs = [make_mal_ctx(_mal_plan(s)) for s in bucket]
+        mctxs += [mctxs[-1]] * pad
+        args = args + (jax.tree.map(lambda *xs: jnp.stack(xs), *mctxs),)
+
     axis = mesh.axis_names[0] if mesh is not None else None
-    fn = _bucket_fn(machine is not None, with_fail, with_svc, max_events,
-                    mesh, axis)
+    fn = _bucket_fn(machine is not None, with_fail, with_svc, with_mal,
+                    max_events, mesh, axis)
     if mesh is not None:
         shard = NamedSharding(mesh, P(axis))
         args = tuple(jax.device_put(a, shard) for a in args)

@@ -38,6 +38,20 @@ selector dispatched statically where known); the choice is made at trace
 time (a traced policy — e.g. a ``vmap``-ped sweep axis — always takes the
 seed loop), so no path pays for another's.
 
+Malleable jobs (DESIGN.md §17): with a ``malleable`` plan the engine gains
+moldable width choice at dispatch — among placement-feasible widths the
+scheduler picks the one with the minimum dilated runtime (ties to the
+narrowest), the job's node footprint becomes its *current width*, and every
+fit check / completion / demand reduction reads the width through an
+effective-jobs view — plus, in elastic mode, a fourth event source: a
+deterministic resize-tick stream under which queue pressure shrinks the
+widest running job (freeing nodes for the queue) and idle capacity grows
+the narrowest one, and a §15 node failure shrinks its victim by one node
+instead of requeueing it while the victim still has width to give.
+``malleable=None`` statically elides all of it: ``SimState.mal`` is
+``None`` and the rigid executable is HLO-identical to the pre-malleable
+engine (fingerprint-tested).
+
 Node allocation (DESIGN.md §11): with a ``Machine`` the engine additionally
 maintains the per-node occupancy map.  Completions free the completing
 jobs' nodes, starts place concrete nodes via the chosen strategy, and the
@@ -75,6 +89,7 @@ from repro.core.jobs import (
     DONE, FCFS, INF_TIME, LJF, PENDING, PREEMPT, RUNNING, SJF, WAITING,
     JobSet, SimResult, SimState, result_from_state,
 )
+from repro.malleable.model import make_mal_ctx
 from repro.reliability.model import FAIL, REQUEUE, make_fail_ctx
 from repro.serving.model import make_svc_ctx
 
@@ -152,8 +167,35 @@ def _owner_eff(jobs: JobSet, state: SimState) -> jax.Array:
     return own
 
 
+def _jobs_eff(jobs: JobSet, state: SimState) -> JobSet:
+    """The job table as fit checks and node accounting should see it.
+
+    With malleability active, each job's node footprint is its *current
+    width* (``min_width`` while waiting — the width a dispatch is
+    guaranteed to be able to choose — and the running width thereafter),
+    not its rigid request.  The same ``jobs`` object comes back when
+    ``state.mal`` is ``None``, so the rigid paths trace unchanged
+    (DESIGN.md §17).
+    """
+    if state.mal is None:
+        return jobs
+    return dataclasses.replace(jobs, nodes=state.mal.width)
+
+
+def _ratio_ceil(r: jax.Array, dur_new: jax.Array,
+                dur_old: jax.Array) -> jax.Array:
+    """``max(1, ceil(r * dur_new / dur_old))`` — the width re-dilation of a
+    remaining wall time, in float32 with a pinned operation order
+    ``(r * dur_new) / dur_old`` mirrored bit-exactly (np.float32 scalar
+    ops, same order) in ``repro.refsim`` (DESIGN.md §17)."""
+    v = (r.astype(jnp.float32) * dur_new.astype(jnp.float32)) \
+        / dur_old.astype(jnp.float32)
+    return jnp.maximum(jnp.ceil(v).astype(jnp.int32), 1)
+
+
 def _start_job(jobs: JobSet, state: SimState, idx: jax.Array,
-               ctx: Optional[AllocCtx]) -> SimState:
+               ctx: Optional[AllocCtx],
+               mctx: Optional[tuple] = None) -> SimState:
     """Allocate nodes to job ``idx`` and schedule its completion event.
 
     Uses ``state.remaining`` (== runtime unless previously preempted) and
@@ -168,6 +210,62 @@ def _start_job(jobs: JobSet, state: SimState, idx: jax.Array,
             state, rel=dataclasses.replace(
                 state.rel,
                 last_start=state.rel.last_start.at[idx].set(start)))
+    if mctx is not None:
+        # moldable width choice (DESIGN.md §17): among placement-feasible
+        # widths pick the minimum dilated duration, ties to the narrowest
+        # (argmin returns the first minimum).  The policy admitted this job
+        # at its effective (minimum) width, so at least one width fits.
+        dur_t, _, _, wlo = mctx[0], mctx[1], mctx[2], mctx[3]
+        W = dur_t.shape[1]
+        dur_row = dur_t[idx]
+        widths = wlo + jnp.arange(W, dtype=jnp.int32)
+        if ctx is None:
+            cap = state.free
+        else:
+            cap = _alloc.placeable_cap(ctx[1], _owner_eff(jobs, state))
+        k = jnp.argmin(jnp.where(widths <= cap, dur_row,
+                                 jnp.int32(INF_TIME))).astype(jnp.int32)
+        w = wlo + k
+        # fresh dispatch (prev_w == 0 sentinel) reads the dur table exactly;
+        # a redispatch after a requeue converts the re-charged remaining
+        # (wall units at the pre-kill width) to the new width
+        prev = state.mal.prev_w[idx]
+        prev_k = jnp.clip(prev - wlo, 0, W - 1)
+        dil_rem = jnp.where(
+            prev == 0, dur_row[k],
+            _ratio_ceil(state.remaining[idx], dur_row[k], dur_row[prev_k]))
+        if ctx is not None:
+            machine, strategy, _ = ctx
+            mask = _alloc.place(strategy, machine, _owner_eff(jobs, state),
+                                w)
+            span = _alloc.group_span(machine, mask)
+            first, asum = _alloc.alloc_fingerprint(mask)
+            state = dataclasses.replace(
+                state,
+                node_owner=jnp.where(mask, idx, state.node_owner),
+                alloc_first=state.alloc_first.at[idx].set(first),
+                alloc_span=state.alloc_span.at[idx].set(span),
+                alloc_sum=state.alloc_sum.at[idx].set(asum),
+            )
+        m = state.mal
+        state = dataclasses.replace(state, mal=dataclasses.replace(
+            m,
+            width=m.width.at[idx].set(w),
+            prev_w=m.prev_w.at[idx].set(w),
+            seg_start=m.seg_start.at[idx].set(start),
+            disp_dur=m.disp_dur.at[idx].set(dur_row[k]),
+        ))
+        fin = start + dil_rem
+        rsv = start + jobs.estimate[idx]
+        first_start = jnp.minimum(state.start[idx], start)
+        return dataclasses.replace(
+            state,
+            jstate=state.jstate.at[idx].set(RUNNING),
+            start=state.start.at[idx].set(first_start),
+            finish=state.finish.at[idx].set(fin),
+            rsv_finish=state.rsv_finish.at[idx].set(rsv),
+            free=state.free - w,
+        )
     if ctx is None:
         dil_rem = state.remaining[idx]
     else:
@@ -247,10 +345,15 @@ def _preempt_for(jobs: JobSet, state: SimState, idx: jax.Array,
 def _select(policy: jax.Array, jobs: JobSet, state: SimState,
             ctx: Optional[AllocCtx],
             static_policy: Optional[int] = None) -> jax.Array:
-    """Policy selection under the active allocation feasibility cap."""
+    """Policy selection under the active allocation feasibility cap.
+
+    Policies read node requests through the effective-jobs view: with
+    malleability active a waiting job asks for its *minimum* width (any
+    admitted job is guaranteed a feasible dispatch width) and a running
+    job occupies its current width (backfill's shadow math)."""
     cap = (state.free if ctx is None
            else _alloc.placeable_cap(ctx[1], _owner_eff(jobs, state)))
-    return policies.select(policy, jobs, state, cap,
+    return policies.select(policy, _jobs_eff(jobs, state), state, cap,
                            static_policy=static_policy)
 
 
@@ -363,7 +466,8 @@ def _batched_pass(jobs: JobSet, state: SimState, ctx: Optional[AllocCtx],
 def _schedule_pass(policy: jax.Array, jobs: JobSet, state: SimState,
                    ctx: Optional[AllocCtx],
                    static_policy: Optional[int] = None,
-                   fast_order: Optional[jax.Array] = None) -> SimState:
+                   fast_order: Optional[jax.Array] = None,
+                   mctx: Optional[tuple] = None) -> SimState:
     """Start jobs until the policy blocks (Algorithm 1 lines 16-21).
 
     Dispatches *at trace time* between the batched prefix pass (when the
@@ -381,13 +485,19 @@ def _schedule_pass(policy: jax.Array, jobs: JobSet, state: SimState,
     def body(carry):
         st, idx = carry
         if static_policy is None or static_policy == PREEMPT:
+            # the preempt guard reads the effective node request — with
+            # malleability a selected job always fits at its minimum width,
+            # so the preempt branch never fires (and the preempt policy
+            # itself is rejected with malleable= at the API layer)
+            need = (jobs.nodes[idx] if mctx is None
+                    else st.mal.width[idx])
             st = jax.lax.cond(
-                jobs.nodes[idx] <= st.free,
+                need <= st.free,
                 lambda s: s,
                 lambda s: _preempt_for(jobs, s, idx, ctx),  # preempt only
                 st,
             )
-        st = _start_job(jobs, st, idx, ctx)
+        st = _start_job(jobs, st, idx, ctx, mctx)
         return st, _select(policy, jobs, st, ctx, static_policy)
 
     state, _ = jax.lax.while_loop(
@@ -418,7 +528,8 @@ def dep_csr(jobs: JobSet) -> Optional[tuple]:
 
 
 def _process_rel_events(jobs: JobSet, state: SimState,
-                        ctx: Optional[AllocCtx], rel: tuple) -> SimState:
+                        ctx: Optional[AllocCtx], rel: tuple,
+                        mctx: Optional[tuple] = None) -> SimState:
     """Consume every failure/repair stream entry with time <= clock.
 
     Entries are processed one at a time in stream order (an inner
@@ -442,10 +553,22 @@ def _process_rel_events(jobs: JobSet, state: SimState,
     The per-node renewal construction guarantees a node never fails while
     down; the machine-mode guards (``down[node]``) only make the
     semantics total under hand-built streams.
+
+    With an *elastic* malleable plan (DESIGN.md §17), a failure whose
+    victim still has width to give (``width > min_width``) sheds exactly
+    the failed node instead of dying: the job keeps its other nodes and
+    its elapsed work, its remaining wall time re-dilates to the narrower
+    width, and ``n_resizes`` ticks up.  At ``width == min_width`` the
+    normal requeue/abort semantics apply (a requeue resets the width to
+    ``min_width`` but remembers the pre-kill width, the basis of the
+    redispatch re-dilation).
     """
     ev_time, ev_node, ev_kind, requeue, ckpt, overhead = rel
     K = ev_time.shape[0]
     J = jobs.capacity
+    # static: elastic malleability (tick stream present) enables the
+    # shrink-instead-of-requeue path; moldable plans keep rigid kills
+    mal_shrink = mctx is not None and mctx[2].shape[0] > 0
     # A finished simulation never needs its remaining stream entries — and
     # under vmap this guard is load-bearing: a batched while_loop keeps
     # executing (and discarding) finished members' bodies, and without it a
@@ -464,10 +587,11 @@ def _process_rel_events(jobs: JobSet, state: SimState,
         e = jnp.minimum(r.ptr, K - 1)
         node = ev_node[e]
         is_fail = ev_kind[e] == FAIL
+        eff_nodes = jobs.nodes if mctx is None else st.mal.width
 
         if ctx is None:
             runn = st.jstate == RUNNING
-            rn = jnp.where(runn, jobs.nodes, 0)
+            rn = jnp.where(runn, eff_nodes, 0)
             busy = jnp.sum(rn)
             n_up = st.free + busy
             slot = node % jnp.maximum(n_up, 1)
@@ -486,6 +610,17 @@ def _process_rel_events(jobs: JobSet, state: SimState,
             comes_up = ~is_fail & was_down
             new_down = r.down.at[node].set(is_fail)
 
+        # failure-shrink (elastic malleability only): a victim with width
+        # to give sheds the failed node instead of dying
+        w_v = eff_nodes[victim]
+        if mal_shrink:
+            wlo = mctx[3]
+            shrink = has_victim & (w_v > wlo)
+            kill = has_victim & ~shrink
+        else:
+            shrink = jnp.asarray(False)
+            kill = has_victim
+
         # checkpoint rework: work since the last checkpoint (the whole run
         # when ckpt == 0) is lost and re-charged on requeue; remaining is
         # in the same post-dilation units preemption pins (DESIGN.md §11)
@@ -493,20 +628,20 @@ def _process_rel_events(jobs: JobSet, state: SimState,
         saved = jnp.where(ckpt > 0, (el // jnp.maximum(ckpt, 1)) * ckpt, 0)
         lost = el - saved
         req = requeue == REQUEUE
-        kill_req = has_victim & req
-        kill_abort = has_victim & ~req
+        kill_req = kill & req
+        kill_abort = kill & ~req
         new_rem = jnp.maximum(st.finish[victim] - st.clock + lost + overhead,
                               1)
 
         jstate = st.jstate.at[victim].set(jnp.where(
-            has_victim,
+            kill,
             jnp.where(req, jnp.int32(WAITING), jnp.int32(DONE)),
             st.jstate[victim]))
         finish = st.finish.at[victim].set(jnp.where(
-            has_victim, jnp.where(req, jnp.int32(INF_TIME), st.clock),
+            kill, jnp.where(req, jnp.int32(INF_TIME), st.clock),
             st.finish[victim]))
         rsv = st.rsv_finish.at[victim].set(jnp.where(
-            has_victim, jnp.int32(INF_TIME), st.rsv_finish[victim]))
+            kill, jnp.int32(INF_TIME), st.rsv_finish[victim]))
         remaining = st.remaining.at[victim].set(jnp.where(
             kill_req, new_rem, st.remaining[victim]))
         n_restarts = r.n_restarts.at[victim].add(kill_req.astype(jnp.int32))
@@ -519,14 +654,65 @@ def _process_rel_events(jobs: JobSet, state: SimState,
             dec = ((jobs.dep_src == victim) & kill_abort).astype(jnp.int32)
             n_unmet = n_unmet.at[jobs.dep_dst].add(-dec, mode="drop")
 
-        freed = jnp.where(has_victim, jobs.nodes[victim], 0)
+        # a kill frees the victim's whole (effective) footprint; a shrink
+        # frees exactly the failed node — which then immediately goes down,
+        # so the free counter nets zero on a shrink
+        freed = jnp.where(kill, w_v, jnp.where(shrink, 1, 0))
         free = (st.free + freed - goes_down.astype(jnp.int32)
                 + comes_up.astype(jnp.int32))
 
         node_owner = st.node_owner
         if ctx is not None:
-            vmask = jnp.zeros((J,), bool).at[victim].set(has_victim)
+            vmask = jnp.zeros((J,), bool).at[victim].set(kill)
             node_owner = _release_nodes(st.node_owner, vmask, J)
+            if mal_shrink:
+                # the shrink releases the failed node specifically
+                node_owner = node_owner.at[node].set(jnp.where(
+                    shrink, jnp.int32(-1), node_owner[node]))
+
+        if mal_shrink:
+            W = mctx[0].shape[1]
+            k_old = jnp.clip(w_v - wlo, 0, W - 1)
+            k_new = jnp.clip(w_v - 1 - wlo, 0, W - 1)
+            sh_rem = _ratio_ceil(st.finish[victim] - st.clock,
+                                 mctx[0][victim, k_new],
+                                 mctx[0][victim, k_old])
+            finish = finish.at[victim].set(jnp.where(
+                shrink, st.clock + sh_rem, finish[victim]))
+            if ctx is not None:
+                own_mask = node_owner == victim
+                s_first, s_asum = _alloc.alloc_fingerprint(own_mask)
+                s_span = _alloc.group_span(ctx[0], own_mask)
+                st = dataclasses.replace(
+                    st,
+                    alloc_first=st.alloc_first.at[victim].set(jnp.where(
+                        shrink, s_first, st.alloc_first[victim])),
+                    alloc_span=st.alloc_span.at[victim].set(jnp.where(
+                        shrink, s_span, st.alloc_span[victim])),
+                    alloc_sum=st.alloc_sum.at[victim].set(jnp.where(
+                        shrink, s_asum, st.alloc_sum[victim])),
+                )
+
+        mal = st.mal
+        if mctx is not None:
+            m = st.mal
+            touched = kill | shrink
+            closed = jnp.where(touched,
+                               w_v * (st.clock - m.seg_start[victim]), 0)
+            new_w = jnp.where(shrink, w_v - 1,
+                              jnp.where(kill_req, mctx[3], w_v))
+            mal = dataclasses.replace(
+                m,
+                width=m.width.at[victim].set(jnp.where(
+                    touched, new_w, m.width[victim])),
+                prev_w=m.prev_w.at[victim].set(jnp.where(
+                    shrink, new_w, m.prev_w[victim])),
+                seg_start=m.seg_start.at[victim].set(jnp.where(
+                    shrink, st.clock, m.seg_start[victim])),
+                node_s=m.node_s.at[victim].add(closed),
+                n_resizes=m.n_resizes.at[victim].add(
+                    shrink.astype(jnp.int32)),
+            )
 
         new_rel = dataclasses.replace(
             r, ptr=r.ptr + 1,
@@ -535,7 +721,7 @@ def _process_rel_events(jobs: JobSet, state: SimState,
         return dataclasses.replace(
             st, jstate=jstate, finish=finish, rsv_finish=rsv,
             remaining=remaining, n_unmet=n_unmet, free=free,
-            node_owner=node_owner, rel=new_rel)
+            node_owner=node_owner, rel=new_rel, mal=mal)
 
     return jax.lax.while_loop(cond, body, state)
 
@@ -576,7 +762,8 @@ def _process_capacity_ticks(jobs: JobSet, state: SimState,
 
     def body(st: SimState) -> SimState:
         s = st.svc
-        demand = jnp.sum(jnp.where(st.jstate == WAITING, jobs.nodes, 0))
+        demand = jnp.sum(jnp.where(st.jstate == WAITING,
+                                   _jobs_eff(jobs, st).nodes, 0))
         up = demand >= up_t
         down = ~up & (demand <= down_t)
         k_up = jnp.where(up, jnp.clip(max_n - s.n_online, 0, step), 0)
@@ -607,16 +794,138 @@ def _process_capacity_ticks(jobs: JobSet, state: SimState,
     return jax.lax.while_loop(cond, body, state)
 
 
+def _process_mal_ticks(jobs: JobSet, state: SimState,
+                       ctx: Optional[AllocCtx], mctx: tuple) -> SimState:
+    """Consume every elastic resize tick with time <= clock (DESIGN.md §17).
+
+    Ticks are processed one at a time in stream order (an inner
+    ``while_loop`` over the pointer) because each resize changes the
+    widths the next tick's demand and candidate rules read.  Semantics,
+    pinned identically in ``repro.refsim`` — at most ONE resize action per
+    tick:
+
+    - queued demand is the effective-width sum over WAITING jobs (this
+      event's arrivals have NOT happened yet — resize ticks run after
+      completions, reliability entries and capacity ticks, before
+      arrivals);
+    - demand >= shrink_threshold: the *widest* running job above
+      ``min_width`` (ties to the lowest row) sheds
+      ``min(step, width - min_width)`` nodes, freeing room for the queue.
+      In machine mode its *highest-index* owned nodes release;
+    - else if demand <= grow_threshold: the *narrowest* running job below
+      ``max_width`` (ties to the lowest row) grows by ``min(step,
+      max_width - width, cap)`` where ``cap`` is the placement-feasibility
+      cap (the free counter, or the strategy's placeable cap in machine
+      mode; no action when the cap is 0).  In machine mode the new nodes
+      place via the active strategy over ``owner_eff``;
+    - either action closes the job's node-second segment, re-dilates its
+      remaining wall time to the new width (``_ratio_ceil``), restamps its
+      finish event, and recomputes its allocation fingerprints.
+    """
+    dur_t, _, tick_time, wlo, whi, step = mctx[0], mctx[1], mctx[2], \
+        mctx[3], mctx[4], mctx[5]
+    shrink_t, grow_t = mctx[6], mctx[7]
+    T = tick_time.shape[0]
+    W = dur_t.shape[1]
+    # same vmap liveness guard as the reliability/capacity streams
+    live = jnp.any(state.jstate != DONE)
+
+    def cond(st: SimState):
+        p = st.mal.ptr
+        return (p < T) & (tick_time[jnp.minimum(p, T - 1)] <= st.clock) & live
+
+    def body(st: SimState) -> SimState:
+        m = st.mal
+        running = st.jstate == RUNNING
+        demand = jnp.sum(jnp.where(st.jstate == WAITING, m.width, 0))
+        shrink_tick = demand >= shrink_t
+        grow_tick = ~shrink_tick & (demand <= grow_t)
+        # shrink: widest running above min_width; grow: narrowest running
+        # below max_width — both tie to the lowest row (first argext)
+        s_cand = running & (m.width > wlo)
+        g_cand = running & (m.width < whi)
+        s_vic = jnp.argmax(jnp.where(s_cand, m.width, -1)).astype(jnp.int32)
+        g_vic = jnp.argmin(jnp.where(g_cand, m.width,
+                                     jnp.int32(INF_TIME))).astype(jnp.int32)
+        do_shrink = shrink_tick & jnp.any(s_cand)
+        vic = jnp.where(do_shrink, s_vic, g_vic)
+        w_v = m.width[vic]
+        if ctx is None:
+            gcap = jnp.maximum(st.free, 0)
+        else:
+            gcap = _alloc.placeable_cap(ctx[1], _owner_eff(jobs, st))
+        d_grow = jnp.minimum(jnp.minimum(step, whi - w_v), gcap)
+        do_grow = grow_tick & jnp.any(g_cand) & (d_grow > 0)
+        resize = do_shrink | do_grow
+        d = jnp.where(do_shrink, jnp.minimum(step, w_v - wlo),
+                      jnp.where(do_grow, d_grow, 0))
+        new_w = jnp.where(do_shrink, w_v - d, w_v + d)
+
+        # remaining wall time re-dilates to the new width
+        k_old = jnp.clip(w_v - wlo, 0, W - 1)
+        k_new = jnp.clip(new_w - wlo, 0, W - 1)
+        new_r = _ratio_ceil(st.finish[vic] - st.clock,
+                            dur_t[vic, k_new], dur_t[vic, k_old])
+        finish = st.finish.at[vic].set(jnp.where(
+            resize, st.clock + new_r, st.finish[vic]))
+        free = st.free + jnp.where(do_shrink, d,
+                                   jnp.where(do_grow, -d, 0))
+
+        node_owner = st.node_owner
+        alloc_first, alloc_span, alloc_sum = (
+            st.alloc_first, st.alloc_span, st.alloc_sum)
+        if ctx is not None:
+            machine, strategy, _ = ctx
+            own_mask = st.node_owner == vic
+            # shrink releases the d highest-index owned nodes
+            shed_rank = jnp.cumsum(
+                own_mask[::-1].astype(jnp.int32))[::-1]
+            shed = own_mask & (shed_rank <= jnp.where(do_shrink, d, 0))
+            # grow places d new nodes via the strategy over owner_eff
+            add = _alloc.place(strategy, machine, _owner_eff(jobs, st),
+                               jnp.where(do_grow, d, 0))
+            node_owner = jnp.where(shed, jnp.int32(-1), st.node_owner)
+            node_owner = jnp.where(add, vic, node_owner)
+            mask_new = node_owner == vic
+            n_first, n_asum = _alloc.alloc_fingerprint(mask_new)
+            n_span = _alloc.group_span(machine, mask_new)
+            alloc_first = st.alloc_first.at[vic].set(jnp.where(
+                resize, n_first, st.alloc_first[vic]))
+            alloc_span = st.alloc_span.at[vic].set(jnp.where(
+                resize, n_span, st.alloc_span[vic]))
+            alloc_sum = st.alloc_sum.at[vic].set(jnp.where(
+                resize, n_asum, st.alloc_sum[vic]))
+
+        closed = jnp.where(resize, w_v * (st.clock - m.seg_start[vic]), 0)
+        new_mal = dataclasses.replace(
+            m, ptr=m.ptr + 1,
+            width=m.width.at[vic].set(jnp.where(resize, new_w, w_v)),
+            prev_w=m.prev_w.at[vic].set(jnp.where(
+                resize, new_w, m.prev_w[vic])),
+            seg_start=m.seg_start.at[vic].set(jnp.where(
+                resize, st.clock, m.seg_start[vic])),
+            node_s=m.node_s.at[vic].add(closed),
+            n_resizes=m.n_resizes.at[vic].add(resize.astype(jnp.int32)))
+        return dataclasses.replace(
+            st, finish=finish, free=free, node_owner=node_owner,
+            alloc_first=alloc_first, alloc_span=alloc_span,
+            alloc_sum=alloc_sum, mal=new_mal)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
 def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
                 ctx: Optional[AllocCtx] = None,
                 static_policy: Optional[int] = None,
                 fast_order: Optional[jax.Array] = None,
                 csr: Optional[tuple] = None,
                 rel: Optional[tuple] = None,
-                svc: Optional[tuple] = None) -> SimState:
+                svc: Optional[tuple] = None,
+                mctx: Optional[tuple] = None) -> SimState:
     pending = state.jstate == PENDING
     running = state.jstate == RUNNING
     has_deps = jobs.dep_dst is not None
+    mal_ticks = mctx is not None and mctx[2].shape[0] > 0
 
     # A PENDING job generates an arrival event only once its dependencies
     # are DONE; unreleased dependents are invisible to the clock (and to
@@ -639,13 +948,29 @@ def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
         t_svc = jnp.where(p < T, svc[1][jnp.minimum(p, T - 1)],
                           jnp.int32(INF_TIME))
         clock = jnp.minimum(clock, t_svc)
+    if mal_ticks:
+        # T == 0 (moldable mode) statically elides the resize clock source
+        Tm = mctx[2].shape[0]
+        p = state.mal.ptr
+        t_mal = jnp.where(p < Tm, mctx[2][jnp.minimum(p, Tm - 1)],
+                          jnp.int32(INF_TIME))
+        clock = jnp.minimum(clock, t_mal)
 
-    # completions first (frees nodes for arrivals at the same timestamp)
+    # completions first (frees nodes for arrivals at the same timestamp);
+    # with malleability a completing job frees its current width and closes
+    # its node-second segment
     completed = running & (state.finish <= clock)
-    freed = jnp.sum(jnp.where(completed, jobs.nodes, 0)).astype(jnp.int32)
+    eff_nodes = jobs.nodes if mctx is None else state.mal.width
+    freed = jnp.sum(jnp.where(completed, eff_nodes, 0)).astype(jnp.int32)
     jstate = jnp.where(completed, DONE, state.jstate)
     node_owner = (state.node_owner if ctx is None
                   else _release_nodes(state.node_owner, completed, jobs.capacity))
+    mal_after = state.mal
+    if mctx is not None:
+        closed = jnp.where(completed,
+                           state.mal.width * (clock - state.mal.seg_start), 0)
+        mal_after = dataclasses.replace(
+            state.mal, node_s=state.mal.node_s + closed)
 
     # arrivals — dependents of this event's completions release *now*
     # (paper §3 release rule): each RUNNING->DONE transition happens exactly
@@ -664,20 +989,22 @@ def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
             n_unmet = n_unmet - (c[row_end] - c[row_start])
         else:
             n_unmet = n_unmet.at[jobs.dep_dst].add(-dec, mode="drop")
-    if rel is not None or svc is not None:
+    if rel is not None or svc is not None or mal_ticks:
         # stream events run after completions (a job finishing at the
         # failure/tick instant has completed) and before arrivals (a job
         # whose last dependency aborts still releases within this same
-        # event; autoscale ticks read queued demand *before* this event's
-        # arrivals join the queue) — order: completions, reliability,
-        # capacity ticks, arrivals
+        # event; autoscale and resize ticks read queued demand *before*
+        # this event's arrivals join the queue) — order: completions,
+        # reliability, capacity ticks, resize ticks, arrivals
         state = dataclasses.replace(
             state, clock=clock, jstate=jstate, n_unmet=n_unmet,
-            free=state.free + freed, node_owner=node_owner)
+            free=state.free + freed, node_owner=node_owner, mal=mal_after)
         if rel is not None:
-            state = _process_rel_events(jobs, state, ctx, rel)
+            state = _process_rel_events(jobs, state, ctx, rel, mctx)
         if svc is not None and svc[1].shape[0] > 0:
             state = _process_capacity_ticks(jobs, state, ctx, svc)
+        if mal_ticks:
+            state = _process_mal_ticks(jobs, state, ctx, mctx)
         jstate, n_unmet = state.jstate, state.n_unmet
         arrived = (jstate == PENDING) & (jobs.submit <= clock)
         if has_deps:
@@ -699,9 +1026,10 @@ def _event_step(policy: jax.Array, jobs: JobSet, state: SimState,
             free=state.free + freed,
             n_events=state.n_events + 1,
             node_owner=node_owner,
+            mal=mal_after,
         )
     state = _schedule_pass(policy, jobs, state, ctx, static_policy,
-                           fast_order)
+                           fast_order, mctx)
     if ctx is None:
         return state
     # fragmentation log: one (clock, free, largest-free-block) row per event
@@ -756,6 +1084,7 @@ def simulate(
     contention=None,
     failures=None,
     service=None,
+    malleable=None,
     max_events: Optional[int] = None,
 ) -> SimResult:
     """Run the full job-scheduling simulation for one cluster.
@@ -795,10 +1124,17 @@ def simulate(
     (DESIGN.md §16): per-job SLO deadlines in the result and a hysteresis
     autoscaler consuming a deterministic capacity-tick stream.  ``None``
     statically elides it to the pre-serving event graph.
+
+    ``malleable`` (None, a ``repro.malleable.MalleablePlan``, or a prebuilt
+    mal-ctx tuple) switches on the malleability subsystem (DESIGN.md §17):
+    moldable width choice at dispatch, and — in elastic mode — grow/shrink
+    resize ticks plus shrink-instead-of-requeue on node failures.
+    ``None`` statically elides it to the rigid event graph.
     """
     ctx = make_alloc_ctx(machine, alloc, contention, total_nodes)
     fctx = make_fail_ctx(failures, n_nodes=_concrete_int(total_nodes))
     sctx = make_svc_ctx(service, n_nodes=_concrete_int(total_nodes))
+    mctx = make_mal_ctx(malleable)
     if (ctx is not None and fctx is not None and sctx is not None
             and sctx[1].shape[-1] > 0):
         # the autoscaler's offline mask and the reliability down mask would
@@ -808,11 +1144,27 @@ def simulate(
             "machine-mode failures cannot be combined with an active "
             "autoscaler; drop machine=, failures=, or autoscale")
     static_policy = _static_policy_hint(policy)
+    if mctx is not None:
+        if contention is not None:
+            # the speedup curve already maps width to runtime; span-based
+            # contention would dilate the dilated value a second time
+            raise ValueError(
+                "malleable jobs cannot be combined with contention "
+                "dilation; the speedup curve owns the width->runtime map")
+        if static_policy == PREEMPT:
+            raise ValueError(
+                "malleable jobs cannot be combined with the preempt "
+                "policy; a suspended job's width bookkeeping is undefined")
+        if mctx[0].ndim == 2 and mctx[0].shape[0] != jobs.capacity:
+            raise ValueError(
+                f"malleable plan rows ({mctx[0].shape[0]}) do not match "
+                f"the job-table capacity ({jobs.capacity}); materialize "
+                "the plan with capacity == the padded job capacity")
     static_strategy = _concrete_int(ctx[1]) if ctx is not None else None
     return _simulate_jit(
         jobs, jnp.asarray(policy, dtype=jnp.int32),
         jnp.asarray(total_nodes, dtype=jnp.int32), ctx, fctx=fctx,
-        sctx=sctx, max_events=max_events,
+        sctx=sctx, mctx=mctx, max_events=max_events,
         static_policy=static_policy, static_strategy=static_strategy,
     )
 
@@ -827,6 +1179,7 @@ def _simulate_jit(
     ctx: Optional[AllocCtx],
     fctx: Optional[tuple] = None,
     sctx: Optional[tuple] = None,
+    mctx: Optional[tuple] = None,
     *,
     max_events: Optional[int] = None,
     static_policy: Optional[int] = None,
@@ -861,11 +1214,20 @@ def _simulate_jit(
         # be traced, so the spec layer cannot always do it)
         svc = sctx[:6] + (
             jnp.minimum(sctx[6], jnp.asarray(total_nodes, jnp.int32)),)
+    if mctx is not None:
+        # each elastic resize tick consumes exactly one event; the tick
+        # capacity is a static shape (0 in moldable mode)
+        base_cap = base_cap + mctx[2].shape[-1]
     cap = max_events if max_events is not None else base_cap
     machine = ctx[0] if ctx is not None else None
     state = SimState.init(jobs, total_nodes, machine=machine, event_log=cap,
-                          failures=fctx is not None, service=svc_T)
-    fast_order = _fast_order(jobs, ctx, static_policy, static_strategy)
+                          failures=fctx is not None, service=svc_T,
+                          malleable=None if mctx is None
+                          else (mctx[3], mctx[2].shape[-1]))
+    # the batched prefix pass assumes rigid node requests; malleable runs
+    # keep the per-start selector loop (widths change under its feet)
+    fast_order = (None if mctx is not None
+                  else _fast_order(jobs, ctx, static_policy, static_strategy))
     csr = dep_csr(jobs)   # jobs are immutable here, dst order guaranteed
 
     def cond(st: SimState):
@@ -875,11 +1237,12 @@ def _simulate_jit(
     state = jax.lax.while_loop(
         cond,
         lambda st: _event_step(policy, jobs, st, ctx, static_policy,
-                               fast_order, csr, rel, svc),
+                               fast_order, csr, rel, svc, mctx),
         state,
     )
     return result_from_state(
-        jobs, state, deadline=None if sctx is None else sctx[0])
+        jobs, state, deadline=None if sctx is None else sctx[0],
+        nref=None if mctx is None else mctx[1])
 
 
 def _fast_order(jobs: JobSet, ctx: Optional[AllocCtx],

@@ -350,6 +350,44 @@ class SvcInfo:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class MalState:
+    """Malleability bookkeeping (DESIGN.md §17), present only when the
+    simulation carries a malleable plan.
+
+    Like ``SimState.rel``/``SimState.svc``, the whole subtree is ``None``
+    for rigid runs — not zero-size placeholders — so the rigid engine
+    lowers to the *exact* pre-malleable HLO module (fingerprint-tested).
+    ``width`` is each job's *current* effective width (``min_width``
+    until first dispatch); ``prev_w`` the width at the latest dispatch
+    (0 = never dispatched, the fresh-job sentinel of the re-dilation
+    math); ``seg_start``/``node_s`` the open node-second segment and the
+    accumulated node-second integral (``width * wall-time``, closed at
+    every resize/kill/completion); ``disp_dur`` the dilated duration
+    chosen at the latest dispatch (-1 = never)."""
+
+    ptr: jax.Array        # i32 scalar: next unconsumed elastic tick
+    width: jax.Array      # i32[J] current effective width
+    prev_w: jax.Array     # i32[J] width at latest dispatch (0 = never)
+    seg_start: jax.Array  # i32[J] clock opening the current node_s segment
+    node_s: jax.Array     # i32[J] accumulated node-seconds
+    n_resizes: jax.Array  # i32[J] grow/shrink actions applied so far
+    disp_dur: jax.Array   # i32[J] dilated duration at latest dispatch (-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MalInfo:
+    """Per-job malleability outcome columns (``SimResult.mal``)."""
+
+    width: jax.Array      # i32[J] final width
+    nref: jax.Array       # i32[J] reference (requested) width
+    n_resizes: jax.Array  # i32[J] grow/shrink actions applied
+    node_s: jax.Array     # i32[J] node-seconds actually consumed
+    disp_dur: jax.Array   # i32[J] dilated duration at latest dispatch
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class SimState:
     """Mutable (functionally) simulation state for one cluster.
 
@@ -389,11 +427,13 @@ class SimState:
     ev_lfb: jax.Array       # i32[L] largest free contiguous block after each event
     rel: RelState | None = None  # reliability state; None = statically elided
     svc: SvcState | None = None  # serving state; None = statically elided
+    mal: MalState | None = None  # malleability state; None = statically elided
 
     @classmethod
     def init(cls, jobs: JobSet, total_nodes: int, machine=None,
              event_log: int = 0, failures: bool = False,
-             service: int | None = None) -> "SimState":
+             service: int | None = None,
+             malleable: tuple | None = None) -> "SimState":
         J = jobs.capacity
         N = machine.n_nodes if machine is not None else 0
         L = int(event_log) if machine is not None else 0
@@ -437,6 +477,18 @@ class SimState:
                 offline=jnp.zeros((N,), dtype=bool),
                 cap_online=jnp.full((int(service),), -1, dtype=jnp.int32),
             ),
+            # ``malleable`` is ``(min_width, tick_capacity)``; min_width may
+            # be a tracer (vmap data), the tick capacity is static
+            mal=None if malleable is None else MalState(
+                ptr=jnp.int32(0),
+                width=jnp.full((J,), 1, dtype=jnp.int32)
+                * jnp.asarray(malleable[0], dtype=jnp.int32),
+                prev_w=jnp.zeros((J,), dtype=jnp.int32),
+                seg_start=jnp.zeros((J,), dtype=jnp.int32),
+                node_s=jnp.zeros((J,), dtype=jnp.int32),
+                n_resizes=jnp.zeros((J,), dtype=jnp.int32),
+                disp_dur=jnp.full((J,), -1, dtype=jnp.int32),
+            ),
         )
 
 
@@ -464,10 +516,12 @@ class SimResult:
     ev_lfb: jax.Array       # i32[L] per-event largest free contiguous block
     rel: FailureInfo | None = None  # reliability columns; None w/o failures
     svc: SvcInfo | None = None      # serving columns; None w/o service
+    mal: MalInfo | None = None      # malleability columns; None w/o malleable
 
 
 def result_from_state(jobs: JobSet, state: SimState,
-                      deadline: jax.Array | None = None) -> SimResult:
+                      deadline: jax.Array | None = None,
+                      nref: jax.Array | None = None) -> SimResult:
     if jobs.dep_dst is None:
         ready = jobs.submit
     else:
@@ -502,7 +556,7 @@ def result_from_state(jobs: JobSet, state: SimState,
             ev_free=state.ev_free,
             ev_lfb=state.ev_lfb,
         )
-        return _with_svc(res, state, deadline)
+        return _with_mal(_with_svc(res, state, deadline), state, nref)
     # an aborted job reached DONE only to terminate the event loop; it is
     # not a completion — excluded from `done` and the makespan
     done = jobs.valid & (state.jstate == DONE) & ~state.rel.aborted
@@ -525,7 +579,7 @@ def result_from_state(jobs: JobSet, state: SimState,
                         lost_work=state.rel.lost_work,
                         aborted=state.rel.aborted),
     )
-    return _with_svc(res, state, deadline)
+    return _with_mal(_with_svc(res, state, deadline), state, nref)
 
 
 def _with_svc(res: SimResult, state: SimState,
@@ -545,5 +599,25 @@ def _with_svc(res: SimResult, state: SimState,
             slo_met=res.done & (state.start <= deadline),
             deadline=deadline,
             cap_online=state.svc.cap_online,
+        ),
+    )
+
+
+def _with_mal(res: SimResult, state: SimState,
+              nref: jax.Array | None) -> SimResult:
+    """Append malleability outcome columns when the run carried a plan.
+
+    A no-op (the same ``res`` object) when ``state.mal`` is ``None``, so
+    the pinned rigid expression order is untouched."""
+    if state.mal is None:
+        return res
+    return dataclasses.replace(
+        res,
+        mal=MalInfo(
+            width=state.mal.width,
+            nref=nref,
+            n_resizes=state.mal.n_resizes,
+            node_s=state.mal.node_s,
+            disp_dur=state.mal.disp_dur,
         ),
     )

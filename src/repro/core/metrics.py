@@ -251,6 +251,46 @@ def slo_summary(res, class_names=None, total_nodes=None) -> Dict[str, float]:
     return out
 
 
+def malleable_summary(res) -> Dict[str, float]:
+    """Scalar malleability metrics (results carrying ``mal_*`` columns,
+    DESIGN.md §17).
+
+    - ``mean_width`` / ``max_width``: the chosen (final) widths of
+      completed jobs;
+    - ``total_resizes``: elastic grow/shrink actions plus failure-shrinks
+      across all jobs (0 for moldable runs without failures);
+    - ``mean_dilation``: mean of the dispatch-time dilated duration over
+      the nominal runtime for completed jobs — 1.0 means every job ran at
+      its reference width;
+    - ``parallel_efficiency``: the rigid baseline's node-seconds over the
+      consumed node-seconds, ``sum(runtime * nref) / sum(node_s)`` across
+      completed jobs.  The ledger closes a segment at every width change,
+      so this is exact under grow/shrink.  Values above 1.0 mean the
+      malleable run consumed FEWER node-seconds than running every job at
+      its requested width — sublinear speedup curves make narrow widths
+      cheaper in node-seconds, so moldable packing routinely beats 1.0.
+    """
+    valid = np.asarray(res["valid"], dtype=bool)
+    done = valid & np.asarray(res["done"], dtype=bool)
+    width = np.asarray(res["mal_width"], dtype=np.float64)
+    nref = np.asarray(res["mal_nref"], dtype=np.float64)
+    runtime = np.asarray(res["runtime"], dtype=np.float64)
+    dil = np.asarray(res["mal_dur"], dtype=np.float64)
+    node_s = np.asarray(res["mal_node_s"], dtype=np.float64)
+    n_done = int(done.sum())
+    ideal = float((runtime * nref)[done].sum())
+    consumed = float(node_s[done].sum())
+    return {
+        "mean_width": float(width[done].mean()) if n_done else 0.0,
+        "max_width": float(width[done].max()) if n_done else 0.0,
+        "total_resizes": float(
+            np.asarray(res["mal_nresize"])[valid].sum()),
+        "mean_dilation": (float((dil / runtime)[done].mean())
+                          if n_done else 1.0),
+        "parallel_efficiency": ideal / consumed if consumed > 0 else 1.0,
+    }
+
+
 def summary(res, total_nodes: int) -> Dict[str, float]:
     """Scalar metrics used by the five-policy comparison (paper Fig. 4b).
 
@@ -276,6 +316,14 @@ def summary(res, total_nodes: int) -> Dict[str, float]:
     bsld = np.maximum((wait + run) / np.maximum(run, 10.0), 1.0)
     makespan = float(finish.max() - submit.min())
     node_seconds = float((nodes.astype(np.float64) * run).sum())
+    if "mal_node_s" in res:
+        # malleable runs occupy width * wall-seconds per segment (the
+        # engine's ledger), not the requested rigid footprint — the rigid
+        # formula can report > 1.0 when moldable packing beats it
+        mask = (np.asarray(res["valid"], dtype=bool)
+                & np.asarray(res["done"], dtype=bool))
+        node_seconds = float(
+            np.asarray(res["mal_node_s"], np.float64)[mask].sum())
     util = node_seconds / (total_nodes * makespan) if makespan > 0 else 0.0
     return {
         "n_jobs": float(len(submit)),

@@ -1,0 +1,16 @@
+"""Malleable jobs: moldable width selection + elastic grow/shrink
+(DESIGN.md §17)."""
+
+from repro.malleable.model import (
+    MalleableModel,
+    MalleablePlan,
+    make_mal_ctx,
+    materialize_plan,
+)
+
+__all__ = [
+    "MalleableModel",
+    "MalleablePlan",
+    "make_mal_ctx",
+    "materialize_plan",
+]

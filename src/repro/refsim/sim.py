@@ -37,6 +37,17 @@ reliability stream and before arrivals, with scale-down bounded by the
 free count (drain semantics: a running job is never stranded) and
 machine-mode deactivation taking the highest-index free nodes /
 reactivation the lowest-index offline ones.
+
+Malleable jobs (DESIGN.md §17): given a ``repro.malleable.MalleablePlan``
+this simulator mirrors the two-level width decisions bit-exactly — the
+moldable width choice at dispatch (min dilated duration among widths that
+fit, narrowest on ties), the elastic one-resize-per-tick rule at the
+plan's capacity ticks (shed from the widest running job under queue
+pressure, grow the narrowest when the queue drains), the same pinned
+float32 remaining-work rescale on every resize, and shrink-instead-of-kill
+when a node failure hits a job running above its minimum width.  The
+node-second ledger closes a segment at every width change exactly like
+the engine's ``MalState`` accounting.
 """
 
 from __future__ import annotations
@@ -50,12 +61,20 @@ import numpy as np
 from repro.alloc import contention as _con
 from repro.alloc import host as _host
 from repro.core.jobs import (
-    BACKFILL, BESTFIT, FCFS, LJF, PREEMPT, SJF, dep_edge_arrays,
+    BACKFILL, BESTFIT, FCFS, INF_TIME, LJF, PREEMPT, SJF, dep_edge_arrays,
 )
 from repro.reliability.model import FAIL, REQUEUE, merge_stream
 
 _POL = {"fcfs": FCFS, "sjf": SJF, "ljf": LJF, "bestfit": BESTFIT,
         "backfill": BACKFILL, "preempt": PREEMPT}
+
+
+def _ratio_ceil_host(r: int, dur_new: int, dur_old: int) -> int:
+    """Remaining-work rescale on a width change — the engine's pinned
+    float32 operation order ``ceil((f32(r) * f32(new)) / f32(old))``,
+    floored at one tick (host mirror of ``engine._ratio_ceil``)."""
+    v = (np.float32(r) * np.float32(dur_new)) / np.float32(dur_old)
+    return max(int(np.ceil(v)), 1)
 
 
 @dataclass
@@ -76,6 +95,13 @@ class _Job:
     n_restarts: int = 0
     lost_work: int = 0
     aborted: bool = False
+    # malleable state (``nodes`` holds the CURRENT effective width; the
+    # original request is preserved separately for the output columns)
+    prev_w: int = 0        # width backing ``remaining`` (0 = fresh job)
+    n_resizes: int = 0
+    node_s: int = 0        # closed node-second segments
+    seg_start: int = 0     # open segment start (valid while RUNNING)
+    disp_dur: int = -1     # dur-table entry at the latest dispatch
 
 
 @dataclass
@@ -87,6 +113,7 @@ class ReferenceSimulator:
     contention: object = None       # repro.alloc.Contention, (num, den), or None
     failures: object = None         # repro.reliability.FailureTrace or None
     service: object = None          # repro.serving.ServicePlan or None
+    malleable: object = None        # repro.malleable.MalleablePlan or None
     jobs: List[_Job] = field(default_factory=list)
     dep_pairs: List[tuple] = field(default_factory=list)  # sorted-row indices
     _order: np.ndarray = None       # input-row -> sorted-row permutation
@@ -235,7 +262,6 @@ class ReferenceSimulator:
         # sort with the engine), outage bookkeeping, and the kill log
         fail = self.failures
         if fail is not None:
-            from repro.core.jobs import INF_TIME
             st_time, st_node, st_kind = merge_stream(fail)
             n_stream = int((st_time < int(INF_TIME)).sum())
             requeue = int(fail.requeue) == REQUEUE
@@ -272,6 +298,90 @@ class ReferenceSimulator:
                        if (svc is not None and owner is not None) else None)
         cap_log: List[tuple] = []  # (tick time, online count after rule)
 
+        # malleable: the plan's per-job width/duration table (rows are the
+        # same (submit, id)-sorted order as self.jobs), the resize tick
+        # stream, and the elastic thresholds.  While a plan is active
+        # ``j.nodes`` holds the job's CURRENT effective width — min_width
+        # while waiting, the chosen/resized width while running — so the
+        # selectors, the free counter, the failure slot rule and the
+        # autoscaler demand all read widths with no further changes.
+        mal = self.malleable
+        ptr_m = 0
+        req_nodes: List[int] = []
+        if mal is not None:
+            if alpha_num != 0:
+                raise ValueError(
+                    "malleable jobs cannot be combined with contention "
+                    "dilation (engine parity)")
+            if self.policy == "preempt":
+                raise ValueError(
+                    "malleable jobs cannot be combined with the preempt "
+                    "policy (engine parity)")
+            m_dur = np.asarray(mal.dur, dtype=np.int64)
+            m_tick = np.asarray(mal.tick_time, dtype=np.int64)
+            m_T = len(m_tick)          # 0 = moldable (no resize ticks)
+            m_wlo, m_whi = int(mal.min_width), int(mal.max_width)
+            m_W = m_whi - m_wlo + 1
+            m_step = int(mal.step)
+            m_shrT = int(mal.shrink_threshold)
+            m_groT = int(mal.grow_threshold)
+            req_nodes = [j.nodes for j in jobs]
+            for j in jobs:
+                j.nodes = m_wlo        # effective width while waiting
+        else:
+            m_T = 0
+
+        def resize(j: _Job, new_w: int) -> None:
+            """Apply a width change to a RUNNING job: close the node-second
+            segment, rescale the remaining work (pinned float32 rule),
+            move the node map, and refresh the allocation fingerprints."""
+            nonlocal free
+            w = j.nodes
+            d = new_w - w
+            k_old, k_new = w - m_wlo, new_w - m_wlo
+            j.node_s += w * (clock - j.seg_start)
+            j.seg_start = clock
+            j.finish = clock + _ratio_ceil_host(
+                j.finish - clock, int(m_dur[j.idx][k_new]),
+                int(m_dur[j.idx][k_old]))
+            heapq.heappush(heap, (j.finish, j.idx))
+            if owner is not None:
+                if d < 0:
+                    owned = np.nonzero(owner == j.idx)[0]
+                    owner[owned[len(owned) + d:]] = -1  # shed highest-index
+                else:
+                    ids = _host.place_host(self.alloc, mach, owner_view(), d)
+                    owner[ids] = j.idx
+                owned = np.nonzero(owner == j.idx)[0]
+                j.alloc_span = _host.group_span_host(mach, owned)
+                j.alloc_first, j.alloc_sum = _host.fingerprint_host(owned)
+            j.nodes = new_w
+            j.prev_w = new_w
+            j.n_resizes += 1
+            free -= d
+
+        def shrink_one(j: _Job, node: int) -> None:
+            """Failure hit on a job above min width (elastic only): shed
+            exactly the failed node instead of killing the job.  The freed
+            slot nets to zero against the node going down."""
+            nonlocal free
+            w = j.nodes
+            j.node_s += w * (clock - j.seg_start)
+            j.seg_start = clock
+            j.finish = clock + _ratio_ceil_host(
+                j.finish - clock, int(m_dur[j.idx][w - 1 - m_wlo]),
+                int(m_dur[j.idx][w - m_wlo]))
+            heapq.heappush(heap, (j.finish, j.idx))
+            j.nodes = w - 1
+            j.prev_w = w - 1
+            j.n_resizes += 1
+            free += 1
+            if owner is not None:
+                owner[node] = -1
+                owned = np.nonzero(owner == j.idx)[0]
+                j.alloc_span = _host.group_span_host(mach, owned)
+                j.alloc_first, j.alloc_sum = _host.fingerprint_host(owned)
+
         def owner_view() -> np.ndarray:
             """Occupancy map as the placement strategies see it: down and
             drained nodes painted with the out-of-range owner id ``n``
@@ -296,6 +406,8 @@ class ReferenceSimulator:
             lost = el - saved
             del running[j.idx]
             free += j.nodes
+            if mal is not None:
+                j.node_s += j.nodes * (clock - j.seg_start)
             if owner is not None:
                 owner[owner == j.idx] = -1
             if requeue:
@@ -303,6 +415,9 @@ class ReferenceSimulator:
                 j.finish = -1
                 j.n_restarts += 1
                 j.lost_work += lost + overhead
+                if mal is not None:
+                    j.nodes = m_wlo   # back to min width; prev_w keeps the
+                                      # pre-kill width backing ``remaining``
                 waiting.append(j)
             else:
                 j.aborted = True
@@ -318,7 +433,11 @@ class ReferenceSimulator:
                              "requeued": requeue, "lost": lost})
 
         def more_events() -> bool:
-            if fail is None:
+            # a resize can leave a job's old (later) heap entry stale after
+            # the rescheduled finish pops, so with malleable jobs a
+            # non-empty heap no longer implies pending work — count live
+            # jobs instead (same rule the failure path already needs)
+            if fail is None and mal is None:
                 return bool(n_unarrived or heap)
             return live > 0
 
@@ -335,10 +454,14 @@ class ReferenceSimulator:
             t_svc = None
             if ptr_s < svc_T and int(tick[ptr_s]) < int(_SVC_INF):
                 t_svc = int(tick[ptr_s])   # INF padding is never a source
+            t_mal = None
+            if ptr_m < m_T and int(m_tick[ptr_m]) < int(INF_TIME):
+                t_mal = int(m_tick[ptr_m])  # INF clamp is never a source
             assert (t_arr is not None or t_fin is not None
-                    or t_rel is not None or t_svc is not None), \
+                    or t_rel is not None or t_svc is not None
+                    or t_mal is not None), \
                 "deadlock: blocked jobs with no running dependency"
-            clock = min(x for x in (t_arr, t_fin, t_rel, t_svc)
+            clock = min(x for x in (t_arr, t_fin, t_rel, t_svc, t_mal)
                         if x is not None)
             n_events += 1
             # completions first (skip heap entries stale after preemption);
@@ -352,6 +475,8 @@ class ReferenceSimulator:
                 del running[idx]
                 free += j.nodes
                 live -= 1
+                if mal is not None:   # close the final node-second segment
+                    j.node_s += j.nodes * (fin - j.seg_start)
                 for t in dependents[idx]:
                     unmet[t] -= 1
                     last_dep_fin[t] = max(last_dep_fin[t], fin)
@@ -367,6 +492,13 @@ class ReferenceSimulator:
                 node, kind = int(st_node[ptr]), int(st_kind[ptr])
                 ptr += 1
                 if kind == FAIL:
+                    # elastic malleable jobs above min width shed the failed
+                    # node instead of dying (DESIGN.md §17)
+                    def hit(j: _Job, node: int) -> None:
+                        if mal is not None and m_T > 0 and j.nodes > m_wlo:
+                            shrink_one(j, node)
+                        else:
+                            kill(j, node)
                     if owner is not None:
                         if down[node]:
                             continue  # total-semantics guard (never renewal)
@@ -374,7 +506,7 @@ class ReferenceSimulator:
                         down[node] = True
                         free -= 1
                         if victim >= 0:
-                            kill(running[victim], node)
+                            hit(running[victim], node)
                     else:
                         # anonymous nodes: slot rule over the row-order
                         # running cumsum (engine mirror, DESIGN.md §15)
@@ -388,7 +520,7 @@ class ReferenceSimulator:
                                             key=lambda v: v.idx):
                                 cum += j.nodes
                                 if cum > slot:
-                                    kill(j, node)
+                                    hit(j, node)
                                     break
                 else:  # REPAIR
                     if owner is not None:
@@ -422,6 +554,32 @@ class ReferenceSimulator:
                 free += k_up - k_down
                 cap_log.append((int(tick[ptr_s]), n_online))
                 ptr_s += 1
+            # malleable resize ticks: after the autoscaler (resize reacts to
+            # this instant's capacity), before arrivals (queue pressure is
+            # read BEFORE this event's arrivals join — engine mirror).  At
+            # most ONE job resizes per tick: under pressure the widest
+            # running job above min width sheds up to ``step`` nodes (tie →
+            # lowest row); when the queue drains the narrowest below max
+            # width grows, bounded by step, headroom and placeable capacity.
+            while ptr_m < m_T and int(m_tick[ptr_m]) <= clock and live > 0:
+                demand = sum(j.nodes for j in waiting)
+                if demand >= m_shrT:
+                    cands = [j for j in running.values() if j.nodes > m_wlo]
+                    if cands:
+                        vic = min(cands, key=lambda j: (-j.nodes, j.idx))
+                        d = min(m_step, vic.nodes - m_wlo)
+                        resize(vic, vic.nodes - d)
+                elif demand <= m_groT:
+                    cands = [j for j in running.values() if j.nodes < m_whi]
+                    if cands:
+                        vic = min(cands, key=lambda j: (j.nodes, j.idx))
+                        gcap = (max(free, 0) if owner is None else
+                                _host.placeable_cap_host(self.alloc,
+                                                         owner_view()))
+                        d = min(m_step, m_whi - vic.nodes, gcap)
+                        if d > 0:
+                            resize(vic, vic.nodes + d)
+                ptr_m += 1
             # arrivals: submit reached AND all dependencies DONE
             while rel_heap and jobs[rel_heap[0]].submit <= clock:
                 i = heapq.heappop(rel_heap)
@@ -455,7 +613,29 @@ class ReferenceSimulator:
                 if j.start < 0:
                     j.start = clock   # first dispatch only
                 j.last_start = clock  # checkpoint base / rsv shadow key
-                dilated = j.remaining
+                if mal is not None:
+                    # moldable width choice: among widths that fit the
+                    # current capacity, minimize the dilated duration;
+                    # first-minimum tie-break → the narrowest such width
+                    cap = cap_now()
+                    row = m_dur[j.idx]
+                    best_k, best_d = 0, None
+                    for k in range(m_W):
+                        if m_wlo + k <= cap and (best_d is None
+                                                 or int(row[k]) < best_d):
+                            best_k, best_d = k, int(row[k])
+                    if j.prev_w == 0:      # fresh: dur table is exact
+                        dilated = int(row[best_k])
+                    else:                  # requeued: rescale remaining work
+                        dilated = _ratio_ceil_host(
+                            j.remaining, int(row[best_k]),
+                            int(row[j.prev_w - m_wlo]))
+                    j.nodes = m_wlo + best_k
+                    j.prev_w = j.nodes
+                    j.seg_start = clock
+                    j.disp_dur = int(row[best_k])
+                else:
+                    dilated = j.remaining
                 if owner is not None:
                     ids = _host.place_host(self.alloc, mach, owner_view(),
                                            j.nodes)
@@ -466,8 +646,9 @@ class ReferenceSimulator:
                     owner[ids] = j.idx
                     j.alloc_span = _host.group_span_host(mach, ids)
                     j.alloc_first, j.alloc_sum = _host.fingerprint_host(ids)
-                    dilated = _con.dilate_host(alpha_num, alpha_den,
-                                               j.remaining, j.alloc_span)
+                    if mal is None:
+                        dilated = _con.dilate_host(alpha_num, alpha_den,
+                                                   j.remaining, j.alloc_span)
                 j.finish = clock + dilated
                 free -= j.nodes
                 running[j.idx] = j
@@ -514,6 +695,20 @@ class ReferenceSimulator:
                                        dtype=np.int64)
             out["cap_online"] = np.array([v for _, v in cap_log],
                                          dtype=np.int64)
+        if mal is not None:
+            # "nodes" reports the ORIGINAL request (engine parity: the
+            # engine emits jobs.nodes untouched); the chosen/final width
+            # lives in the mal_* columns
+            out["nodes"] = np.array(req_nodes, dtype=np.int64)
+            out["mal_width"] = np.array([j.nodes for j in jobs],
+                                        dtype=np.int64)
+            out["mal_nref"] = np.asarray(mal.nref, dtype=np.int64)[:n]
+            out["mal_nresize"] = np.array([j.n_resizes for j in jobs],
+                                          dtype=np.int64)
+            out["mal_node_s"] = np.array([j.node_s for j in jobs],
+                                         dtype=np.int64)
+            out["mal_dur"] = np.array([j.disp_dur for j in jobs],
+                                      dtype=np.int64)
         if mach is not None:
             out["alloc_first"] = np.array(
                 [j.alloc_first for j in jobs], dtype=np.int64)
@@ -529,15 +724,16 @@ class ReferenceSimulator:
 
 def simulate_reference(trace, policy: str, *, total_nodes: int, machine=None,
                        alloc: str = "simple", contention=None, failures=None,
-                       service=None):
+                       service=None, malleable=None):
     """One-call host oracle.  ``failures`` is a materialized
-    ``repro.reliability.FailureTrace`` (NOT a ``FailureModel``) and
-    ``service`` a materialized ``repro.serving.ServicePlan`` — both
+    ``repro.reliability.FailureTrace`` (NOT a ``FailureModel``),
+    ``service`` a materialized ``repro.serving.ServicePlan`` and
+    ``malleable`` a materialized ``repro.malleable.MalleablePlan`` — both
     engines must consume the identical arrays, so materialize once."""
     sim = ReferenceSimulator(total_nodes=total_nodes, policy=policy,
                              machine=machine, alloc=alloc,
                              contention=contention, failures=failures,
-                             service=service)
+                             service=service, malleable=malleable)
     sim.load(trace["submit"], trace["runtime"], trace["nodes"],
              trace.get("estimate"), trace.get("priority"),
              deps=trace.get("deps"))

@@ -55,10 +55,13 @@ def test_checked_in_artifact_parses():
     validate_bench_report(report)
     # the perf trajectory needs the headline cases to exist under stable
     # names; renaming them silently orphans every historical comparison
-    full_run_cases = {"nodeps_fcfs", "nodeps_backfill"}
-    smoke_cases = {"nodeps_fcfs", "galactic_smoke_fcfs"}
+    full_run_cases = {"nodeps_fcfs", "nodeps_backfill", "moldable_backfill"}
+    smoke_cases = {"nodeps_fcfs", "galactic_smoke_fcfs", "moldable_backfill"}
     have = set(report["cases"])
     assert (full_run_cases <= have) or (smoke_cases <= have), sorted(have)
+    # the malleable width-choice case (DESIGN.md §17) carries its static
+    # dur-table width so trajectory tooling can match like against like
+    assert report["cases"]["moldable_backfill"].get("n_widths", 0) >= 2
 
 
 @pytest.mark.slow

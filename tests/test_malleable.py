@@ -1,0 +1,375 @@
+"""Malleable jobs (ISSUE 7, DESIGN.md §17): moldable width selection and
+elastic grow/shrink under queue pressure.
+
+- model: closed-form speedup curves (Amdahl / power-law / tabulated
+  efficiency), deterministic materialization into a padded per-job
+  width/dilation table row-aligned with the sorted job table, int32
+  clock- and node-second-overflow guards at the saturation boundary,
+  validation of every curve/mode/threshold constraint;
+- elision: ``malleable=None`` carries no ``mal`` subtree at all (the
+  byte-identical-HLO guarantee is pinned by ``test_engine_fastpath``'s
+  committed fingerprints);
+- differential: engine vs refsim bit-exact (starts, finishes, chosen
+  widths, dilated durations, resize counts, node-second ledgers, event
+  counts, every summary scalar) over {amdahl-moldable, power-elastic} x
+  {fcfs, sjf, backfill} x {scalar, mesh2d+contiguous} — the full grid
+  rides the ``slow`` lane, a 4-config corner stays in the fast lane —
+  plus an elastic + node-failure composition (shrink-instead-of-requeue);
+- properties (hypothesis): random curves/width ranges/thresholds keep the
+  engines bit-identical and chosen widths inside ``[min_width,
+  max_width]``;
+- sweeps: a curve-family x param x threshold grid compiles to ONE
+  executable; width range and mode are static (recompile) axes;
+- metrics: the ``mal_*`` summary scalars match their closed forms.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.api import (
+    FailureModel, MalleableModel, Multicluster, Scenario, SyntheticTrace,
+    Topology, run, run_ref, sweep,
+)
+from repro.core.jobs import INF_TIME
+from repro.malleable import MalleablePlan, make_mal_ctx, materialize_plan
+
+POLICIES = ("fcfs", "sjf", "backfill")
+
+AMDAHL_MOLD = MalleableModel(curve="amdahl", param=0.2, min_width=1,
+                             max_width=8, mode="moldable")
+POWER_ELAST = MalleableModel(curve="power", param=0.7, min_width=1,
+                             max_width=8, mode="elastic", interval=30,
+                             max_ticks=64, shrink_threshold=8,
+                             grow_threshold=2, step=2)
+CURVES = (AMDAHL_MOLD, POWER_ELAST)
+
+
+def _scenario(mode, policy, mal, n_jobs=100, seed=0, **kw):
+    base = dict(trace=SyntheticTrace(n_jobs=n_jobs, seed=seed, congest=4),
+                policy=policy, malleable=mal)
+    if mode == "mesh2d":
+        base.update(topology=Topology.mesh2d(4, 8), alloc="contiguous")
+    else:
+        base.update(total_nodes=32)
+    base.update(kw)
+    return Scenario(**base)
+
+
+MAL_COLS = ("mal_width", "mal_nref", "mal_nresize", "mal_node_s", "mal_dur")
+
+
+def _assert_bit_exact(scn):
+    res, ref = run(scn), run_ref(scn)
+    assert res.matches(ref)
+    a, b = res.to_np(), ref.to_np()
+    n = int(b["valid"].sum())
+    for key in MAL_COLS:
+        np.testing.assert_array_equal(a[key][:n], b[key], err_msg=key)
+    assert a["n_events"] == b["n_events"]
+    sa, sb = res.summary(), ref.summary()
+    assert set(sa) == set(sb)
+    for key in sa:
+        np.testing.assert_allclose(sa[key], sb[key], rtol=0, atol=0,
+                                   err_msg=key)
+    return res, ref
+
+
+# ---------------------------------------------------------------------------
+# model / materialization
+# ---------------------------------------------------------------------------
+
+
+def test_speedup_curves_closed_form():
+    w = np.arange(1, 9, dtype=np.float64)
+    amdahl = MalleableModel(curve="amdahl", param=0.25, max_width=8)
+    np.testing.assert_allclose(amdahl.speedup(w), 1.0 / (0.25 + 0.75 / w))
+    power = MalleableModel(curve="power", param=0.5, max_width=8)
+    np.testing.assert_allclose(power.speedup(w), np.sqrt(w))
+    eff = tuple(1.0 / (1 + 0.05 * k) for k in range(8))
+    table = MalleableModel(curve="table", table=eff, max_width=8)
+    np.testing.assert_allclose(table.speedup(w), w * np.asarray(eff))
+
+
+def test_materialize_rows_align_with_jobset():
+    # a messy trace: unsorted submits with an offset, degenerate runtimes,
+    # node requests above the machine — materialize_plan must replicate
+    # make_jobset's normalization so rows line up with the padded job table
+    trace = {"submit": np.array([107, 103, 103, 120]),
+             "runtime": np.array([50, 0, 9, 31]),
+             "nodes": np.array([4, 99, 2, 1]),
+             "estimate": np.array([60, 1, 9, 40])}
+    mal = dataclasses.replace(POWER_ELAST, min_width=1, max_width=6)
+    plan = materialize_plan(mal, trace, total_nodes=6, capacity=8)
+    assert isinstance(plan, MalleablePlan)
+    assert plan.capacity == 8 and plan.n_jobs == 4 and plan.n_widths == 6
+    # sorted order: (103, job1), (103, job2), (107, job0), (120, job3);
+    # nref = clip(min(nodes, machine), 1, 6); runtime clamped >= 1
+    np.testing.assert_array_equal(plan.nref[:4], [6, 2, 4, 1])
+    runtimes = [1, 9, 50, 31]
+    for j, (r, nref) in enumerate(zip(runtimes, plan.nref[:4])):
+        # exact at the reference width (float64 ratio is exactly 1.0)
+        assert plan.dur[j, nref - 1] == r
+        # dilation is monotone: wider never slower, narrower never faster
+        assert (np.diff(plan.dur[j]) <= 0).all()
+    # padding rows are inert
+    assert (plan.dur[4:] == 1).all() and (plan.nref[4:] == 1).all()
+    np.testing.assert_array_equal(
+        plan.tick_time, np.arange(1, mal.max_ticks + 1) * mal.interval)
+    # moldable mode has no tick stream at all
+    plan2 = materialize_plan(AMDAHL_MOLD, trace, total_nodes=6)
+    assert plan2.tick_time.shape == (0,) and plan2.capacity == 4
+
+    again = materialize_plan(mal, trace, total_nodes=6, capacity=8)
+    for key in ("dur", "nref", "tick_time"):
+        np.testing.assert_array_equal(getattr(plan, key), getattr(again, key))
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="unknown curve"):
+        MalleableModel(curve="gustafson")
+    with pytest.raises(ValueError, match="serial fraction"):
+        MalleableModel(curve="amdahl", param=1.5)
+    with pytest.raises(ValueError, match="alpha"):
+        MalleableModel(curve="power", param=0.0)
+    with pytest.raises(ValueError, match="one efficiency per width"):
+        MalleableModel(curve="table", table=(1.0, 0.9), max_width=8)
+    with pytest.raises(ValueError, match="efficiencies"):
+        MalleableModel(curve="table", table=(1.0, 1.2), min_width=1,
+                       max_width=2)
+    with pytest.raises(ValueError, match="only meaningful"):
+        MalleableModel(curve="amdahl", table=(1.0,))
+    with pytest.raises(ValueError, match="min_width <= max_width"):
+        MalleableModel(min_width=8, max_width=4)
+    with pytest.raises(ValueError, match="unknown mode"):
+        MalleableModel(mode="evolving")
+    with pytest.raises(ValueError, match="hysteresis"):
+        MalleableModel(mode="elastic", shrink_threshold=2, grow_threshold=2)
+    with pytest.raises(ValueError, match="max_ticks"):
+        MalleableModel(mode="elastic", max_ticks=0)
+    with pytest.raises(TypeError, match="mal ctx"):
+        make_mal_ctx((1, 2, 3))
+    with pytest.raises(ValueError, match="exceeds the machine"):
+        materialize_plan(
+            MalleableModel(min_width=4, max_width=8),
+            {"submit": [0], "runtime": [10], "nodes": [4]}, total_nodes=2)
+
+
+def test_scenario_validation():
+    t = SyntheticTrace(n_jobs=8, seed=0)
+    with pytest.raises(TypeError, match="MalleableModel"):
+        Scenario(trace=t, total_nodes=8, malleable="amdahl")
+    with pytest.raises(ValueError, match="multicluster"):
+        Scenario(trace=(t, t), total_nodes=(8, 8),
+                 multicluster=Multicluster(window=50), malleable=AMDAHL_MOLD)
+    with pytest.raises(ValueError, match="contention"):
+        Scenario(trace=t, topology=Topology.mesh2d(2, 4), alloc="contiguous",
+                 contention=(1, 5), malleable=AMDAHL_MOLD)
+    with pytest.raises(ValueError, match="preempt"):
+        Scenario(trace=t, total_nodes=8, policy="preempt",
+                 malleable=AMDAHL_MOLD)
+
+
+# ---------------------------------------------------------------------------
+# overflow guards at the saturation boundary (ISSUE 7 satellite)
+# ---------------------------------------------------------------------------
+
+# amdahl param=1.0 is a flat curve (S(w) == 1): dur == runtime at every
+# width, so the guarded horizon is exactly submit + 2 * runtime and the
+# boundaries below are closed-form.
+_FLAT = MalleableModel(curve="amdahl", param=1.0, min_width=1, max_width=1)
+
+
+def test_clock_overflow_guard_saturation_boundary():
+    limit = int(INF_TIME)            # top = 2 * runtime >= INF_TIME raises
+    ok = {"submit": [0], "runtime": [(limit - 1) // 2], "nodes": [1]}
+    plan = materialize_plan(_FLAT, ok, total_nodes=1)
+    assert plan.dur[0, 0] == (limit - 1) // 2
+    bad = {"submit": [0], "runtime": [(limit + 1) // 2], "nodes": [1]}
+    with pytest.raises(ValueError, match="int32 clock"):
+        materialize_plan(_FLAT, bad, total_nodes=1)
+
+
+def test_node_second_overflow_guard_saturation_boundary():
+    wide = dataclasses.replace(_FLAT, max_width=8)
+    # top = 2 * runtime; 8 * top >= 2**31 exactly at runtime = 2**27
+    ok = {"submit": [0], "runtime": [2**27 - 1], "nodes": [8]}
+    assert materialize_plan(wide, ok, total_nodes=8).dur[0, 7] == 2**27 - 1
+    bad = {"submit": [0], "runtime": [2**27], "nodes": [8]}
+    with pytest.raises(ValueError, match="node-second"):
+        materialize_plan(wide, bad, total_nodes=8)
+
+
+def test_run_just_below_saturation_is_exact():
+    # a near-horizon-limit job survives both engines without wrapping
+    scn = Scenario(trace={"submit": [0, 0], "runtime": [2**27 - 5, 100],
+                          "nodes": [8, 8]},
+                   total_nodes=8, malleable=dataclasses.replace(
+                       _FLAT, max_width=8))
+    res, _ = _assert_bit_exact(scn)
+    out = res.to_np()
+    assert int(out["finish"][:2].max()) >= 2**27 - 5
+    assert (out["finish"][:2] < int(INF_TIME)).all()
+
+
+# ---------------------------------------------------------------------------
+# static elision
+# ---------------------------------------------------------------------------
+
+
+def test_malleable_none_is_statically_elided():
+    # the SimResult of a rigid run carries no mal subtree at all (the
+    # byte-identical-HLO guarantee is pinned by test_engine_fastpath's
+    # committed fingerprints; this is the cheap pytree-level check)
+    scn = Scenario(trace={"submit": [0, 1], "runtime": [5, 5],
+                          "nodes": [1, 1]}, total_nodes=2)
+    res = run(scn)
+    assert res.raw.mal is None
+    out = res.to_np()
+    assert not any(k.startswith("mal_") for k in out)
+    assert "total_resizes" not in res.summary()
+
+
+# ---------------------------------------------------------------------------
+# differential grid
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,policy,mal", [
+    ("scalar", "fcfs", AMDAHL_MOLD),
+    ("scalar", "backfill", POWER_ELAST),
+    ("mesh2d", "backfill", AMDAHL_MOLD),
+    ("mesh2d", "sjf", POWER_ELAST),
+], ids=("scalar_fcfs_mold", "scalar_backfill_elastic",
+        "mesh_backfill_mold", "mesh_sjf_elastic"))
+def test_differential_corner_fast(mode, policy, mal):
+    _assert_bit_exact(_scenario(mode, policy, mal))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mal", CURVES, ids=("amdahl_mold", "power_elastic"))
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("mode", ("scalar", "mesh2d"))
+def test_differential_grid(mal, policy, mode):
+    _assert_bit_exact(_scenario(mode, policy, mal))
+
+
+def test_elastic_resizes_actually_fire():
+    res, _ = _assert_bit_exact(_scenario("scalar", "backfill", POWER_ELAST))
+    s = res.summary()
+    assert s["total_resizes"] > 0
+    w = res.to_np()["mal_width"]
+    assert w.min() >= 1 and w.max() <= 8
+
+
+def test_failure_shrink_composes_with_elastic():
+    # elastic + node failures: a hit on a job with width to give sheds just
+    # the failed node instead of requeueing — both engines must agree on
+    # every width, ledger and restart column
+    scn = _scenario(
+        "scalar", "backfill", POWER_ELAST,
+        failures=FailureModel(mtbf=400.0, seed=3, mean_repair=50,
+                              horizon=4000, max_failures=16))
+    res, ref = _assert_bit_exact(scn)
+    a, b = res.to_np(), ref.to_np()
+    n = int(b["valid"].sum())
+    np.testing.assert_array_equal(a["n_restarts"][:n], b["n_restarts"])
+    assert res.summary()["total_resizes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       curve=st.sampled_from(("amdahl", "power")),
+       param=st.floats(0.05, 0.95),
+       whi=st.integers(2, 8),
+       grow=st.integers(0, 2), shrink_delta=st.integers(1, 8),
+       step=st.integers(1, 3),
+       mal_mode=st.sampled_from(("moldable", "elastic")),
+       policy=st.sampled_from(POLICIES),
+       mode=st.sampled_from(("scalar", "mesh2d")))
+def test_random_curves_engines_bit_exact(seed, curve, param, whi, grow,
+                                         shrink_delta, step, mal_mode,
+                                         policy, mode):
+    mal = MalleableModel(curve=curve, param=param, min_width=1,
+                         max_width=whi, mode=mal_mode, interval=25,
+                         max_ticks=64, shrink_threshold=grow + shrink_delta,
+                         grow_threshold=grow, step=step)
+    res, _ = _assert_bit_exact(
+        _scenario(mode, policy, mal, n_jobs=60, seed=seed))
+    out = res.to_np()
+    done = out["valid"] & out["done"]
+    w = out["mal_width"][done]
+    if len(w):
+        assert w.min() >= 1 and w.max() <= whi
+
+
+# ---------------------------------------------------------------------------
+# sweeps compile once
+# ---------------------------------------------------------------------------
+
+
+def test_curve_sweep_single_executable():
+    scn = _scenario("scalar", "backfill", POWER_ELAST, n_jobs=60)
+    grid = sweep(scn, axes={
+        "malleable.curve": ("amdahl", "power"),
+        "malleable.param": (0.2, 0.5),
+        "malleable.shrink_threshold": (6, 10),
+    })
+    assert grid.n_compiles == 1
+    assert len(grid) == 8
+    widths = set()
+    for point, res in grid:
+        ref = run_ref(res.scenario)
+        assert res.matches(ref), point
+        np.testing.assert_array_equal(
+            res["mal_width"][:len(ref["mal_width"])], ref["mal_width"],
+            err_msg=str(point))
+        widths.add(tuple(res["mal_width"].tolist()))
+    # distinct curves really steer distinct width choices
+    assert len(widths) > 1
+
+
+def test_width_range_and_mode_are_static_axes():
+    scn = _scenario("scalar", "backfill", AMDAHL_MOLD, n_jobs=40)
+    grid = sweep(scn, axes={"malleable": (
+        AMDAHL_MOLD,
+        dataclasses.replace(AMDAHL_MOLD, max_width=16),   # new dur-table W
+        POWER_ELAST,                                      # new tick stream
+    )})
+    assert grid.n_compiles == 3
+    for point, res in grid:
+        assert res.matches(run_ref(res.scenario)), point
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_malleable_summary_closed_forms():
+    res, _ = _assert_bit_exact(_scenario("scalar", "sjf", AMDAHL_MOLD))
+    out, s = res.to_np(), res.summary()
+    done = out["valid"] & out["done"]
+    assert done.any()
+    # moldable + no failures: nobody ever resizes, and the node-second
+    # ledger is exactly width * dilated duration
+    assert s["total_resizes"] == 0.0
+    np.testing.assert_array_equal(
+        out["mal_node_s"][done],
+        (out["mal_width"] * out["mal_dur"])[done])
+    assert s["mean_width"] == pytest.approx(out["mal_width"][done].mean())
+    assert s["max_width"] == out["mal_width"][done].max()
+    dil = out["mal_dur"][done] / out["runtime"][done]
+    assert s["mean_dilation"] == pytest.approx(dil.mean())
+    ideal = float((out["runtime"] * out["mal_nref"])[done].sum())
+    assert s["parallel_efficiency"] == pytest.approx(
+        ideal / out["mal_node_s"][done].sum())
+    assert s["parallel_efficiency"] > 0.0
