@@ -16,9 +16,13 @@ compiled executables as possible:
    ragged edge counts to one shape), scalar knobs become i32[B] arrays,
    contention pytrees are leaf-stacked, and ONE ``vmap``-ped executable
    runs the whole bucket — optionally sharded over a 1-D device mesh.
-   Note the batched runner traces ``policy`` as data, so in-bucket points
-   run the engine's fully-dynamic path (DESIGN.md §14's static fast pass
-   applies to single ``run``/``simulate`` calls);
+   When every point in a bucket shares one ``policy`` (and, with a
+   machine, one ``alloc``) the shared value is passed *statically* so the
+   batched executable gets the engine's trace-time specialization —
+   including the §14/§18 batched scheduling passes; a mixed policy axis
+   keeps the fully-dynamic path, whose backfill cost under vmap is pinned
+   by the lazy full-sort guard in ``policies.backfill_shadow``
+   (DESIGN.md §18);
 4. the batched outputs are re-sliced into per-point :class:`Result`\\ s in
    grid order.
 
@@ -176,10 +180,16 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence[Any]], *,
 @functools.lru_cache(maxsize=None)
 def _bucket_fn(with_alloc: bool, with_fail: bool, with_svc: bool,
                with_mal: bool, max_events: Optional[int],
-               mesh: Optional[Mesh], axis: Optional[str]):
+               mesh: Optional[Mesh], axis: Optional[str],
+               static_policy: Optional[int] = None,
+               static_alloc: Optional[int] = None):
     # one generic batched runner: the optional subsystem args ride behind
     # (jobs, policy, total_nodes) in a fixed order — alloc pair, fail ctx,
-    # svc ctx, mal ctx — and the machine (a non-batched pytree) comes last
+    # svc ctx, mal ctx — and the machine (a non-batched pytree) comes last.
+    # A bucket whose points all share one policy (or alloc) passes it here
+    # as a Python int instead of a batched leaf: the engine then resolves
+    # its static hints at trace time and the whole bucket runs the
+    # specialized executable, batched scheduling passes included.
     def fn(*args):
         if with_alloc:
             *batched, machine = args
@@ -188,10 +198,13 @@ def _bucket_fn(with_alloc: bool, with_fail: bool, with_svc: bool,
 
         def one(*leaves):
             it = iter(leaves)
-            j, p, t = next(it), next(it), next(it)
+            j = next(it)
+            p = static_policy if static_policy is not None else next(it)
+            t = next(it)
             kw = {}
             if with_alloc:
-                kw["alloc"] = next(it)
+                kw["alloc"] = (static_alloc if static_alloc is not None
+                               else next(it))
                 kw["contention"] = next(it)
             if with_fail:
                 kw["failures"] = next(it)
@@ -231,8 +244,12 @@ def _run_bucket(bucket: List[Scenario], mesh: Optional[Mesh]) -> List[Result]:
         jobsets.append(jobs_cache[key])
 
     B = len(bucket)
-    pol_b = jnp.asarray([engine.policies_id(s.policy) for s in bucket],
-                        dtype=jnp.int32)
+    # a policy (or alloc) uniform across the bucket is hoisted out of the
+    # batched leaves and baked into the executable as a static hint — this
+    # is what routes a backfill sweep axis onto the §18 batched pass
+    pol_ids = [engine.policies_id(s.policy) for s in bucket]
+    static_pol: Optional[int] = pol_ids[0] if len(set(pol_ids)) == 1 else None
+    pol_b = jnp.asarray(pol_ids, dtype=jnp.int32)
     tn_b = jnp.asarray([int(s.total_nodes) for s in bucket], dtype=jnp.int32)
 
     pad = 0
@@ -244,17 +261,23 @@ def _run_bucket(bucket: List[Scenario], mesh: Optional[Mesh]) -> List[Result]:
         tn_b = jnp.concatenate([tn_b, jnp.repeat(tn_b[-1:], pad)])
     jobs_b = stack_jobsets(jobsets)
 
+    pol_args = () if static_pol is not None else (pol_b,)
+    static_alloc: Optional[int] = None
     if machine is None:
-        args = (jobs_b, pol_b, tn_b)
+        args = (jobs_b, *pol_args, tn_b)
     else:
-        alloc_b = jnp.asarray(
-            [_alloc.canonical_id(s.alloc if s.alloc is not None else "simple")
-             for s in bucket] + [0] * pad, dtype=jnp.int32)
+        alloc_ids = [
+            _alloc.canonical_id(s.alloc if s.alloc is not None else "simple")
+            for s in bucket]
+        if len(set(alloc_ids)) == 1:
+            static_alloc = alloc_ids[0]
+        alloc_b = jnp.asarray(alloc_ids + [0] * pad, dtype=jnp.int32)
+        alloc_args = () if static_alloc is not None else (alloc_b,)
         con_b = jax.tree.map(
             lambda *xs: jnp.stack(xs),
             *([_alloc.Contention.canonical(s.contention) for s in bucket]
               + [_alloc.Contention.off()] * pad))
-        args = (jobs_b, pol_b, tn_b, alloc_b, con_b)
+        args = (jobs_b, *pol_args, tn_b, *alloc_args, con_b)
 
     with_fail = base.failures is not None
     if with_fail:
@@ -294,7 +317,7 @@ def _run_bucket(bucket: List[Scenario], mesh: Optional[Mesh]) -> List[Result]:
 
     axis = mesh.axis_names[0] if mesh is not None else None
     fn = _bucket_fn(machine is not None, with_fail, with_svc, with_mal,
-                    max_events, mesh, axis)
+                    max_events, mesh, axis, static_pol, static_alloc)
     if mesh is not None:
         shard = NamedSharding(mesh, P(axis))
         args = tuple(jax.device_put(a, shard) for a in args)

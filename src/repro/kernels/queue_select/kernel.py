@@ -47,6 +47,36 @@ def _select_kernel(score_ref, mask_ref, out_ref, best_s, best_i, *, tile: int,
         out_ref[0, 1] = best_s[0, 0]
 
 
+def queue_select_blocked(scores: jax.Array, feasible: jax.Array, *,
+                         tile: int = 1024) -> jax.Array:
+    """Compiled lowering for backends without the Pallas TPU path.
+
+    Same two-stage blocked reduction the kernel performs — per-tile
+    (min, first-index) then a cross-tile min — expressed as reshaped
+    ``jnp`` reductions so XLA:CPU/GPU emit vectorized loops over
+    contiguous ``tile``-wide rows.  Bit-identical to
+    ``queue_select_reference`` for every input, including the corner
+    where a *feasible* entry carries score ``BIG`` (the reference
+    returns its index; scores are pinned < ``BIG`` by the callers).
+    """
+    N = scores.shape[0]
+    feas = feasible.astype(bool)
+    s = jnp.where(feas, scores, BIG)
+    pad = (-N) % tile
+    if pad:
+        s = jnp.pad(s, (0, pad), constant_values=BIG)
+        feas = jnp.pad(feas, (0, pad))
+    nt = s.shape[0] // tile
+    st = s.reshape(nt, tile)
+    best = jnp.min(jnp.min(st, axis=1))
+    idx = jnp.arange(s.shape[0], dtype=jnp.int32).reshape(nt, tile)
+    cand = jnp.where(feas.reshape(nt, tile) & (st == best), idx, BIG)
+    bi = jnp.min(jnp.min(cand, axis=1))
+    found = bi < BIG
+    return jnp.stack([jnp.where(found, bi, -1).astype(jnp.int32),
+                      jnp.where(found, best, BIG).astype(jnp.int32)])
+
+
 def queue_select_tiled(scores: jax.Array, feasible: jax.Array, *,
                        tile: int = 1024, interpret: bool = False) -> jax.Array:
     """scores i32[N], feasible i32[N] -> i32[2] = (argmin index or -1, min)."""

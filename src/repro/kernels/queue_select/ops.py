@@ -6,10 +6,26 @@ import functools
 
 import jax
 
-from repro.kernels.queue_select.kernel import queue_select_tiled
+from repro.kernels.queue_select.kernel import (
+    queue_select_blocked, queue_select_tiled,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def queue_select(scores, feasible, *, tile: int = 1024, interpret: bool = True):
-    """Masked lex-argmin: returns i32[2] (index or -1, best score)."""
+def queue_select(scores, feasible, *, tile: int = 1024,
+                 interpret: bool | None = None):
+    """Masked lex-argmin: returns i32[2] (index or -1, best score).
+
+    ``interpret=None`` (the default) selects a *compiled* lowering for the
+    active backend: the Pallas kernel on TPU, the blocked ``jnp`` reduction
+    everywhere else (the kernel's SMEM scratch has no CPU/GPU lowering).
+    Pass ``interpret=True`` to force the Pallas interpreter (debugging
+    escape hatch — orders of magnitude slower) or ``interpret=False`` to
+    force the compiled Pallas kernel regardless of backend.
+    """
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return queue_select_tiled(scores, feasible, tile=tile,
+                                      interpret=False)
+        return queue_select_blocked(scores, feasible, tile=tile)
     return queue_select_tiled(scores, feasible, tile=tile, interpret=interpret)

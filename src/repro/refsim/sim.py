@@ -169,7 +169,8 @@ class ReferenceSimulator:
     # ---- policy selectors (mirror repro.core.policies) ---------------------
 
     def _select(self, waiting: List[_Job], running: List[_Job], free: int,
-                cap: int, clock: int) -> Optional[_Job]:
+                cap: int, clock: int,
+                bf: Optional[dict] = None) -> Optional[_Job]:
         if not waiting:
             return None
         pol = self.policy
@@ -189,6 +190,8 @@ class ReferenceSimulator:
         if pol == "backfill":
             head = min(waiting, key=lambda j: j.idx)
             if head.nodes <= cap:
+                if bf is not None:
+                    bf.clear()  # a starting head invalidates any window
                 return head
             # shadow via estimates of running jobs (free-count based, pinned;
             # keyed on the LATEST dispatch — the engine's rsv_finish — which
@@ -197,14 +200,41 @@ class ReferenceSimulator:
                 (max(j.last_start + j.estimate, clock + 1), j.idx, j.nodes)
                 for j in running
             )
-            cum, shadow, extra = free, None, free
+            cum, shadow, extra, k_idx = free, None, free, -1
             for t, _idx, n in rel:
                 cum += n
                 if cum >= head.nodes:
-                    shadow, extra = t, cum - head.nodes
+                    shadow, extra, k_idx = t, cum - head.nodes, _idx
                     break
             if shadow is None:
                 shadow, extra = None, free  # unreachable if nodes<=total
+            if bf is not None and shadow is not None:
+                # Decision-for-decision mirror of the engine's batched
+                # backfill pass (DESIGN.md §18): within one scheduling pass
+                # the pass carries (shadow, extra) as loop-invariant
+                # structure, updating only the budget on each admission.
+                # The oracle keeps recomputing from scratch and ASSERTS the
+                # carried values match — the shadow-invariance theorem,
+                # checked on every admission of every backfill run.  The
+                # caller enables the carry only under a count-based cap:
+                # the theorem's premise is free < head_need when the head
+                # blocks, and the contiguous cap can geometry-block a
+                # count-feasible head (an admission's own release may then
+                # cover the head, legitimately moving the shadow earlier).
+                # The pass loop clears the carry on a budget overdraw (a
+                # release tie at the shadow can move the reach entry
+                # within its tie group), so a present carry must match.
+                if bf.get("head") == head.idx:
+                    assert (bf["shadow"], bf["extra"], bf["k_idx"]) \
+                        == (shadow, extra, k_idx), (
+                        "backfill shadow invariance violated: carried "
+                        f"(shadow={bf['shadow']}, extra={bf['extra']}, "
+                        f"k_idx={bf['k_idx']}) != recomputed "
+                        f"({shadow}, {extra}, {k_idx}) at clock {clock}")
+                else:
+                    bf["head"] = head.idx
+                    bf["shadow"], bf["extra"] = shadow, extra
+                    bf["k_idx"] = k_idx
             cands = [
                 j for j in waiting
                 if j is not head and j.nodes <= cap
@@ -586,10 +616,22 @@ class ReferenceSimulator:
                 ready[i] = max(jobs[i].submit, last_dep_fin[i])
                 waiting.append(jobs[i])
                 n_unarrived -= 1
-            # scheduling pass
+            # scheduling pass — ``bf`` carries the backfill window's
+            # (shadow, extra) across this pass's starts, engine-style;
+            # ``_select`` asserts it against a fresh recompute (§18).
+            # Enabled exactly where the engine batches: count-capped caps
+            # (the invariance premise fails under the contiguous cap — see
+            # the note in ``_select``) and rigid widths (a moldable
+            # dispatch may start wider than the admitted minimum width,
+            # overdrawing the carried ``extra`` budget).
+            bf = ({} if (mal is None
+                         and (self.machine is None
+                              or _host.alloc_id(self.alloc)
+                              != _host.CONTIGUOUS))
+                  else None)
             while True:
                 j = self._select(waiting, list(running.values()), free,
-                                 cap_now(), clock)
+                                 cap_now(), clock, bf)
                 if j is None:
                     break
                 if j.nodes > free:  # preempt policy: suspend victims
@@ -653,6 +695,18 @@ class ReferenceSimulator:
                 free -= j.nodes
                 running[j.idx] = j
                 heapq.heappush(heap, (j.finish, j.idx))
+                if bf is not None and bf.get("head") is not None:
+                    # §18 budget carry: the admission consumed reserve
+                    # nodes iff its release entry (clamped time, row)
+                    # sorts after the reach entry — a release tie at the
+                    # shadow breaks by row, exactly like the rel sort.  An
+                    # overdraw (tie corner) moves the reach entry within
+                    # its tie group: drop the carry and re-derive.
+                    t_c = max(clock + j.estimate, clock + 1)
+                    if (t_c, j.idx) > (bf["shadow"], bf["k_idx"]):
+                        bf["extra"] -= j.nodes
+                        if bf["extra"] < 0:
+                            bf.clear()
             if owner is not None:
                 ev_time.append(clock)
                 ev_free.append(free)

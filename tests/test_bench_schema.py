@@ -1,4 +1,4 @@
-"""Schema regression tests for the engine perf artifact (ISSUE 5).
+"""Schema regression tests for the engine perf artifact (ISSUE 5, ISSUE 8).
 
 ``benchmarks/des_throughput.py`` emits ``results/BENCH_engine.json`` — the
 machine-readable perf trajectory future PRs regress against.  A benchmark
@@ -8,7 +8,12 @@ without failing anything; these tests pin the schema:
 - every case carries a positive ``run_s``; engine cases carry ``n_events``
   / ``events_per_s`` / ``compile_s`` that are mutually consistent;
 - wall-clock stamps are present and monotonic (schema >= 2);
-- the checked-in artifact (if present) parses under the same validator;
+- kernel cases are timed *compiled* and carry bytes/tile so GB/s figures
+  are comparable across cases (schema >= 3 — ISSUE 8: the old artifact
+  timed the Pallas interpreter and hardcoded the element size);
+- the checked-in artifact (if present) parses under the same validator and
+  holds the ISSUE-8 throughput floors: backfill within 3x of FCFS on the
+  2k no-deps case, no >10x GB/s cliff between queue_select sizes;
 - the smoke variant produces the identical shape (slow lane: it runs the
   real benchmark at tiny sizes).
 """
@@ -40,28 +45,80 @@ def validate_bench_report(report: dict) -> None:
                 f"{name}: events_per_s inconsistent with n_events/run_s"
         if "GBps" in case:      # kernel bandwidth case
             assert case["GBps"] > 0, name
+            if report["schema"] >= 3:
+                # compiled timing with auditable units: GB/s must derive
+                # from the actual argument bytes, not a hardcoded width
+                assert case.get("mode") == "compiled", \
+                    f"{name}: kernel case must be timed compiled"
+                assert case.get("tile", 0) > 0, name
+                assert case.get("bytes", 0) > 0, name
+                want = (case["bytes"] / case["run_s"]) / 1e9
+                assert abs(case["GBps"] - want) <= 1e-6 * max(want, 1e-9), \
+                    f"{name}: GBps inconsistent with bytes/run_s"
     if report["schema"] >= 2:
         t0, t1 = report["generated_unix"], report["finished_unix"]
         assert t0 > 1e9, "generated_unix is not an epoch timestamp"
         assert t1 >= t0, "timestamps must be monotonic"
 
 
-def test_checked_in_artifact_parses():
-    """The committed perf artifact stays machine-readable."""
+def _load_artifact() -> dict:
     if not os.path.exists(RESULTS_JSON):
         pytest.skip("no committed BENCH_engine.json")
     with open(RESULTS_JSON) as f:
-        report = json.load(f)
+        return json.load(f)
+
+
+def test_checked_in_artifact_parses():
+    """The committed perf artifact stays machine-readable."""
+    report = _load_artifact()
     validate_bench_report(report)
     # the perf trajectory needs the headline cases to exist under stable
     # names; renaming them silently orphans every historical comparison
-    full_run_cases = {"nodeps_fcfs", "nodeps_backfill", "moldable_backfill"}
-    smoke_cases = {"nodeps_fcfs", "galactic_smoke_fcfs", "moldable_backfill"}
+    full_run_cases = {"nodeps_fcfs", "nodeps_backfill", "moldable_backfill",
+                      "galactic8k_backfill", "queue_select_N65536",
+                      "queue_select_N1048576"}
+    smoke_cases = {"nodeps_fcfs", "nodeps_backfill", "galactic_smoke_fcfs",
+                   "moldable_backfill", "queue_select_N65536"}
     have = set(report["cases"])
     assert (full_run_cases <= have) or (smoke_cases <= have), sorted(have)
     # the malleable width-choice case (DESIGN.md §17) carries its static
     # dur-table width so trajectory tooling can match like against like
     assert report["cases"]["moldable_backfill"].get("n_widths", 0) >= 2
+
+
+def test_checked_in_artifact_is_schema3_compiled():
+    """ISSUE 8 regression gate: the committed artifact must be schema >= 3,
+    i.e. queue_select timed on the compiled lowering with auditable units —
+    an ``interpret_mode`` artifact can never be checked in again."""
+    report = _load_artifact()
+    assert report["schema"] >= 3
+    ks = [c for n, c in report["cases"].items() if n.startswith("queue_select")]
+    assert ks, "artifact lost its queue_select cases"
+    for case in ks:
+        assert case.get("mode") == "compiled"
+
+
+@pytest.mark.slow
+def test_checked_in_artifact_throughput_floors():
+    """ISSUE 8 acceptance floors on the committed full-run artifact:
+
+    - batched backfill (DESIGN.md §18) holds >= 1/3 of FCFS events/s on
+      the 2k no-deps case;
+    - compiled queue_select has no >10x GB/s cliff going 64k -> 1M.
+    """
+    report = _load_artifact()
+    if report.get("smoke"):
+        pytest.skip("floors are pinned on the full-run artifact")
+    cases = report["cases"]
+    bf = cases["nodeps_backfill"]["events_per_s"]
+    fcfs = cases["nodeps_fcfs"]["events_per_s"]
+    assert bf >= fcfs / 3, (
+        f"backfill {bf:.0f} ev/s fell below 1/3 of FCFS {fcfs:.0f} ev/s — "
+        "the batched backfill pass regressed")
+    small = cases["queue_select_N65536"]["GBps"]
+    big = cases["queue_select_N1048576"]["GBps"]
+    assert big >= small / 10, (
+        f"queue_select GB/s cliff: {small:.2f} at 64k vs {big:.2f} at 1M")
 
 
 @pytest.mark.slow
@@ -75,7 +132,7 @@ def test_smoke_run_emits_valid_schema(tmp_path):
     report = run_bench(str(tmp_path), smoke=True)
     validate_bench_report(report)
     assert report["smoke"] is True
-    assert report["schema"] >= 2
+    assert report["schema"] >= 3
     with open(tmp_path / "BENCH_engine.json") as f:
         on_disk = json.load(f)
     validate_bench_report(on_disk)

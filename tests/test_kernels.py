@@ -108,3 +108,32 @@ def test_queue_select_ties_pick_lowest_index(rng):
     out = np.asarray(queue_select(jnp.asarray(scores), jnp.asarray(feas),
                                   tile=64, interpret=True))
     assert out[0] == 7
+
+
+@pytest.mark.parametrize("N,tile", [(7, 8), (100, 32), (1024, 256),
+                                    (5000, 1024), (65536, 2048)])
+@pytest.mark.parametrize("feas_rate", [0.0, 0.05, 0.5, 1.0])
+def test_queue_select_compiled_default_sweep(N, tile, feas_rate, rng):
+    """The default (interpret unset) must be a compiled lowering on every
+    backend and bit-identical to the oracle — this is the path the
+    benchmarks time (ISSUE 8: the old default silently ran the Pallas
+    interpreter)."""
+    scores = rng.integers(0, 10_000, N).astype(np.int32)
+    feas = (rng.random(N) < feas_rate).astype(np.int32)
+    out = np.asarray(queue_select(jnp.asarray(scores), jnp.asarray(feas),
+                                  tile=tile))
+    ref = np.asarray(queue_select_reference(jnp.asarray(scores),
+                                            jnp.asarray(feas)))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_queue_select_compiled_default_ties_and_empty():
+    scores = np.zeros(256, np.int32)
+    feas = np.zeros(256, np.int32)
+    feas[[40, 7, 200]] = 1
+    out = np.asarray(queue_select(jnp.asarray(scores), jnp.asarray(feas),
+                                  tile=64))
+    assert out[0] == 7
+    none = np.asarray(queue_select(jnp.asarray(scores),
+                                   jnp.zeros(256, np.int32), tile=64))
+    assert none[0] == -1
