@@ -21,8 +21,8 @@ import importlib
 
 _SUBMODULES = frozenset({
     "alloc", "api", "ckpt", "configs", "core", "data", "kernels", "launch",
-    "malleable", "models", "optim", "refsim", "reliability", "runtime",
-    "serving", "sharding", "traces",
+    "malleable", "models", "optim", "refsim", "reliability", "replay",
+    "runtime", "serving", "sharding", "traces",
 })
 
 # names re-exported from repro.api on first access

@@ -90,13 +90,23 @@ class SyntheticTrace:
 
 @dataclasses.dataclass(frozen=True)
 class SwfTrace:
-    """A Standard Workload Format log on disk (optionally gzipped)."""
+    """A Standard Workload Format log on disk (optionally gzipped).
+
+    ``strict=True`` makes ingestion raise on the first malformed line
+    instead of quarantining it (the lenient default counts bad lines in
+    the loader report and keeps going — see ``repro.traces.SwfReport``).
+    This spec feeds the one-shot engine, so it keeps the int32 horizon
+    guard; full-archive logs that overflow it go through ``repro.replay``
+    instead (int64 host clocks, windowed rounds).
+    """
 
     path: str
     max_jobs: Optional[int] = None
+    strict: bool = False
 
     def materialize(self) -> Dict[str, np.ndarray]:
-        trace = load_swf(self.path, max_jobs=self.max_jobs)
+        trace, _report = load_swf(self.path, max_jobs=self.max_jobs,
+                                  strict=self.strict)
         # int32 clock-overflow guard (mirrors ServiceTrace.materialize):
         # the engine runs the clock in int32, so the span of the log plus
         # the largest completion must stay below INF_TIME — a silent

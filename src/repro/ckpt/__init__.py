@@ -1,3 +1,4 @@
 from repro.ckpt.store import (  # noqa: F401
-    CheckpointManager, load_checkpoint, save_checkpoint,
+    CheckpointManager, latest_step, load_checkpoint, load_checkpoint_raw,
+    save_checkpoint,
 )

@@ -117,6 +117,31 @@ def load_checkpoint(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
     return tree, manifest["step"], manifest.get("extra", {})
 
 
+def load_checkpoint_raw(ckpt_dir: str, *, step: Optional[int] = None,
+                        verify: bool = True):
+    """Template-free restore: returns ``(leaves, step, extra)`` where
+    ``leaves`` maps each flattened key to its host numpy array.
+
+    For consumers whose array shapes are themselves checkpoint state — the
+    streaming replay runner's window can double mid-run, so ``resume()``
+    cannot build a shape-matching template before reading the manifest.
+    crc32 verification is identical to :func:`load_checkpoint`.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = {}
+    for rec in manifest["leaves"]:
+        arr = np.load(os.path.join(path, rec["file"]))
+        if verify and zlib.crc32(arr.tobytes()) != rec["crc32"]:
+            raise IOError(f"crc mismatch for leaf {rec['key']!r} in {path}")
+        leaves[rec["key"]] = arr
+    return leaves, manifest["step"], manifest.get("extra", {})
+
+
 class CheckpointManager:
     """keep-last-k manager with optional async writes."""
 

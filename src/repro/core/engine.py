@@ -1401,28 +1401,69 @@ def simulate_window(
     t_hi: jax.Array,
     max_events: jax.Array | int,
     ctx: Optional[AllocCtx] = None,
-) -> SimState:
+    rel: Optional[tuple] = None,
+) -> tuple[SimState, jax.Array]:
     """Process every event with timestamp <= ``t_hi`` (conservative window).
 
     The multi-cluster engine (``repro.core.parallel``) calls this once per
     synchronization round — the JAX analogue of SST's conservative
-    per-lookahead-window execution (DESIGN.md §2).  ``policy`` is usually a
-    closed-over concrete array here, so the fast-path specialization
-    resolves at trace time exactly as in ``simulate``.
+    per-lookahead-window execution (DESIGN.md §2) — and the streaming
+    trace-replay runner (``repro.replay``) once per refill round.
+    ``policy`` is usually a closed-over concrete array here, so the
+    fast-path specialization resolves at trace time exactly as in
+    ``simulate``.
+
+    Returns ``(state, saturated)``.  ``saturated`` is a bool scalar set
+    when the loop stopped at ``max_events`` with events still due at or
+    below ``t_hi`` — the window's answer is then a *truncated prefix* of
+    the round, which used to be silent.  Callers must either re-enter with
+    a higher cap (the state is a valid prefix; replay doubles the cap and
+    continues) or surface the flag (``MulticlusterResult.saturated``).
+
+    ``rel`` is the merged failure/repair stream 6-tuple of ``simulate``'s
+    reliability path (``state.rel`` must then be initialized); ``None``
+    statically elides it, keeping the existing callers' lowering
+    byte-identical.
     """
     static_policy = _static_policy_hint(policy)
     static_strategy = _concrete_int(ctx[1]) if ctx is not None else None
     fast_order = _fast_order(jobs, ctx, static_policy, static_strategy)
 
-    def cond(st: SimState):
-        return (next_event_time(jobs, st) <= t_hi) & (st.n_events < max_events)
+    def next_due(st: SimState):
+        # the failure/repair stream is a clock source in _event_step, so it
+        # must also be one here: a round whose only upcoming event is a
+        # repair (jobs queued behind down nodes) would otherwise never fire.
+        # Gated on the same any-job-unfinished guard as simulate's cond —
+        # a finished table never needs its remaining stream entries.
+        nxt = next_event_time(jobs, st)
+        if rel is not None:
+            K = rel[0].shape[0]
+            p = st.rel.ptr
+            t_rel = jnp.where(p < K, rel[0][jnp.minimum(p, K - 1)],
+                              jnp.int32(INF_TIME))
+            live = jnp.any(st.jstate != DONE)
+            nxt = jnp.minimum(nxt, jnp.where(live, t_rel,
+                                             jnp.int32(INF_TIME)))
+        return nxt
 
-    return jax.lax.while_loop(
+    def cond(st: SimState):
+        # INF_TIME is the nothing-is-due sentinel (padding rows, drained
+        # streams), never a real instant: without the strict bound a drain
+        # round at t_hi = INF_TIME would spin no-op events into the cap —
+        # and then read as saturated
+        due = next_due(st)
+        return (due <= t_hi) & (due < INF_TIME) & (st.n_events < max_events)
+
+    state = jax.lax.while_loop(
         cond,
         lambda st: _event_step(policy, jobs, st, ctx, static_policy,
-                               fast_order),
+                               fast_order, None, rel),
         state,
     )
+    due = next_due(state)
+    saturated = (due <= t_hi) & (due < INF_TIME) \
+        & (state.n_events >= max_events)
+    return state, saturated
 
 
 def simulate_np(trace, policy, *, total_nodes: int, capacity: int | None = None,

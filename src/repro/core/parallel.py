@@ -198,6 +198,7 @@ class MulticlusterResult:
     state: SimState
     migrated: jax.Array   # i32[C] jobs exported by each cluster
     dropped: jax.Array    # i32[C] imports dropped for lack of free rows (should be 0)
+    saturated: jax.Array  # bool[C] any round hit the event cap with events still due
 
 
 def _queue_load(jobs: JobSet, state: SimState) -> jax.Array:
@@ -342,13 +343,14 @@ def simulate_multicluster(
         state = jax.vmap(SimState.init, in_axes=(0, 0))(jobs, nodes)
 
         def round_body(r, carry):
-            jobs, state, mig, drop = carry
+            jobs, state, mig, drop, sat = carry
             t_hi = (r + 1) * jnp.int32(window)
-            state = jax.vmap(
+            state, sat_r = jax.vmap(
                 lambda j, s: simulate_window(policy, j, s, t_hi, ev_cap)
             )(jobs, state)
+            sat = sat | sat_r
             if not migrate:
-                return jobs, state, mig, drop
+                return jobs, state, mig, drop, sat
 
             load_l = jax.vmap(_queue_load)(jobs, state)          # [Cl]
             if axis_name is not None:
@@ -385,19 +387,21 @@ def simulate_multicluster(
                 return j, s, d
 
             jobs, state, d = jax.vmap(imp)(jobs, state, gids)
-            return jobs, state, mig, drop + d
+            return jobs, state, mig, drop + d, sat
 
         mig0 = jnp.zeros((jobs.submit.shape[0],), jnp.int32)
-        carry = (jobs, state, mig0, jnp.zeros_like(mig0))
-        jobs, state, mig, drop = jax.lax.fori_loop(0, n_rounds, round_body, carry)
+        sat0 = jnp.zeros((jobs.submit.shape[0],), bool)
+        carry = (jobs, state, mig0, jnp.zeros_like(mig0), sat0)
+        jobs, state, mig, drop, sat = jax.lax.fori_loop(
+            0, n_rounds, round_body, carry)
         # drain any events beyond the horizon (no migration afterwards)
-        state = jax.vmap(
+        state, sat_d = jax.vmap(
             lambda j, s: simulate_window(policy, j, s, jnp.int32(INF_TIME), ev_cap)
         )(jobs, state)
-        return jobs, state, mig, drop
+        return jobs, state, mig, drop, sat | sat_d
 
     if mesh is None:
-        jobs, state, mig, drop = jax.jit(
+        jobs, state, mig, drop, sat = jax.jit(
             lambda j, n: local_sim(j, n, None)
         )(jobs_c, nodes_c)
     else:
@@ -410,9 +414,10 @@ def simulate_multicluster(
             out_specs=P(axis),
             check_rep=False,
         )
-        jobs, state, mig, drop = jax.jit(fn)(jobs_c, nodes_c)
+        jobs, state, mig, drop, sat = jax.jit(fn)(jobs_c, nodes_c)
 
-    return MulticlusterResult(jobs=jobs, state=state, migrated=mig, dropped=drop)
+    return MulticlusterResult(jobs=jobs, state=state, migrated=mig,
+                              dropped=drop, saturated=sat)
 
 
 def multicluster_result_np(res: MulticlusterResult) -> dict:
@@ -431,6 +436,7 @@ def multicluster_result_np(res: MulticlusterResult) -> dict:
         "done": done & valid,
         "migrated": int(np.asarray(res.migrated).sum()),
         "dropped": int(np.asarray(res.dropped).sum()),
+        "saturated": bool(np.asarray(res.saturated).any()),
     }
     if jobs.dep_dst is not None:
         dst = np.asarray(jobs.dep_dst)                     # [C, E]

@@ -6,5 +6,7 @@ event-driven simulator with identical pinned semantics (DESIGN.md §8).
 It is also the asymptotically-efficient CPU path for million-job traces.
 """
 
-from repro.refsim.sim import ReferenceSimulator, simulate_reference  # noqa: F401
+from repro.refsim.sim import (  # noqa: F401
+    ReferenceSimulator, replay_reference, simulate_reference,
+)
 # workflow reference imported lazily in repro.refsim.workflow

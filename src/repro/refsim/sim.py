@@ -792,3 +792,24 @@ def simulate_reference(trace, policy: str, *, total_nodes: int, machine=None,
              trace.get("estimate"), trace.get("priority"),
              deps=trace.get("deps"))
     return sim.run()
+
+
+def replay_reference(trace, policy: str = "fcfs", *, total_nodes: int,
+                     machine=None, alloc: str = "simple", contention=None,
+                     failures=None):
+    """Host oracle for ``repro.replay``'s windowed streaming runs.
+
+    Windowed replay is decision-for-decision identical to the one-shot
+    schedule (window boundaries never reorder or split an event, DESIGN.md
+    §19), so the reference for a streamed trace is simply the reference
+    schedule of the *whole* trace.  The trace goes through the replay
+    runner's own int64 normalization — identical input columns on both
+    sides — and the int64 host arithmetic here imposes no int32 horizon
+    cap, which makes this the oracle for beyond-int32 archives that
+    one-shot ``simulate`` refuses outright.
+    """
+    from repro.replay.runner import _normalize
+    t = _normalize(dict(trace), total_nodes)
+    return simulate_reference(t, policy, total_nodes=total_nodes,
+                              machine=machine, alloc=alloc,
+                              contention=contention, failures=failures)

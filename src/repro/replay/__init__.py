@@ -1,0 +1,15 @@
+"""Crash-safe streaming replay of full-archive traces (DESIGN.md §19).
+
+``replay_trace`` streams an SWF log (or trace dict) through bounded-size
+windows — the device never holds more than the active window — with
+durable per-round checkpoints; ``resume`` restarts an interrupted run
+bit-exact from the last durable round.  CLI::
+
+    python -m repro.replay TRACE.swf.gz --nodes 512 --policy backfill \\
+        --ckpt-dir /tmp/ckpt [--resume]
+"""
+
+from repro.replay.runner import (  # noqa: F401
+    ReplayError, ReplayFlags, ReplayInterrupted, ReplayResult,
+    StreamingReplay, replay_trace, resume,
+)

@@ -1,0 +1,711 @@
+"""Streaming, crash-safe replay of full-archive traces (DESIGN.md §19).
+
+A full Parallel Workloads Archive log (10^5-10^6 jobs, month-long
+horizons) cannot go through one-shot ``simulate``: padded J-sized device
+state scales with the whole trace and the int32 clock caps the horizon.
+:class:`StreamingReplay` instead drives the trace through bounded-size
+**windows**: the device only ever holds the next W not-yet-finished jobs,
+each round runs ``simulate_window`` up to the next unadmitted arrival,
+finished rows are harvested to int64 host columns, and freed slots are
+refilled from the trace cursor.  Clocks are rebased every round — the
+host tracks absolute int64 time, the device sees window-relative int32
+offsets from the round base ``t0`` — so horizons far beyond int32 never
+overflow.
+
+Windowing is *exact*, not approximate: rows are kept compacted in global
+(submit, id) order, so every relative-order tie-break the engine performs
+(FCFS/SJF selection, backfill's shadow walk, the blocking order, failure
+victim cumsums) matches the one-shot run, and a round never processes an
+event at or past the first unadmitted submit time, so the engine never
+schedules against a partial arrival set.  The composition is therefore
+bit-exact against both one-shot ``simulate`` and the host reference
+simulator (tests/test_replay.py drives the differential grid).
+
+Crash safety (the degradation ladder, loud-then-soft):
+
+- every ``ckpt_every``-th round the carried state — live rows, harvested
+  results, cursor, clocks, flags — lands in ``repro.ckpt.store``
+  (atomic rename + crc32); ``resume()`` restarts from the last durable
+  round and is bit-exact with an uninterrupted run;
+- event-cap **saturation** is detected via ``simulate_window``'s
+  ``saturated`` bit; the truncated round is a valid prefix, so the runner
+  counts the flag, doubles the cap, and continues;
+- **window overflow** (more than W jobs alive at once) is detected as a
+  zero-progress round with no free slot; the window doubles (bounded by
+  ``max_window_doublings``) before the runner aborts;
+- **clock-rebase overflow** (a window-relative time that does not fit
+  int32) is flagged, retried once with a doubled window, then aborts.
+
+All three land as typed counters on ``ReplayResult.flags``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.store import load_checkpoint_raw, save_checkpoint
+from repro.core.engine import make_alloc_ctx, simulate_window
+from repro.core.jobs import (
+    DONE, INF_TIME, PENDING, POLICY_IDS, JobSet, RelState, SimState,
+)
+
+# host-side "infinite"/unset sentinel for absolute int64 times; maps to the
+# engine's int32 INF_TIME at upload and back at download
+INF64 = np.int64(1) << 62
+
+_I32_MIN = -(2 ** 31) + 1
+
+
+class ReplayError(RuntimeError):
+    """The degradation ladder ran out of retries (fail loud)."""
+
+
+class ReplayInterrupted(RuntimeError):
+    """Raised by the crash-injection test hook after a durable round."""
+
+
+@dataclasses.dataclass
+class ReplayFlags:
+    """Typed degraded-condition counters (DESIGN.md §19 ladder)."""
+
+    saturated_rounds: int = 0    # rounds that hit the event cap (cap doubled)
+    cap_doublings: int = 0
+    window_doublings: int = 0    # >W live jobs forced a bigger window
+    rebase_overflows: int = 0    # a window-relative time did not fit int32
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ReplayFlags":
+        return cls(**{f.name: int(d.get(f.name, 0))
+                      for f in dataclasses.fields(cls)})
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    """Per-job outcome columns in global (submit, id) order, absolute int64
+    times on the trace's rebased epoch (min submit == 0).  Mirrors the
+    one-shot ``SimResult``/refsim schema, so the three compare directly."""
+
+    submit: np.ndarray       # i64[N]
+    runtime: np.ndarray      # i64[N]
+    estimate: np.ndarray     # i64[N]
+    nodes: np.ndarray        # i64[N]
+    priority: np.ndarray     # i64[N]
+    start: np.ndarray        # i64[N] (-1 if never started, as in refsim)
+    finish: np.ndarray       # i64[N] (-1 if never finished)
+    wait: np.ndarray         # i64[N] start - submit (traces are dep-free)
+    done: np.ndarray         # bool[N] completed (excludes aborted)
+    alloc_first: np.ndarray  # i64[N] machine mode (-1 otherwise)
+    alloc_span: np.ndarray   # i64[N]
+    alloc_sum: np.ndarray    # i64[N]
+    n_restarts: np.ndarray   # i64[N] failure mode (0 otherwise)
+    lost_work: np.ndarray    # i64[N]
+    aborted: np.ndarray      # bool[N]
+    makespan: int
+    n_events: int
+    n_rounds: int
+    peak_live: int           # peak window occupancy (<= final window)
+    window: int              # final window size after any doublings
+    flags: ReplayFlags
+
+    @property
+    def n_jobs(self) -> int:
+        return int(self.submit.shape[0])
+
+    def summary(self) -> dict:
+        """Wait-time / node-usage summaries (the paper's accuracy metrics)."""
+        w = self.wait[self.done]
+        node_s = (self.nodes * (self.finish - self.start))[self.done]
+        used = int(node_s.sum())
+        return {
+            "n_jobs": self.n_jobs,
+            "n_done": int(self.done.sum()),
+            "n_aborted": int(self.aborted.sum()),
+            "makespan": int(self.makespan),
+            "n_events": int(self.n_events),
+            "n_rounds": int(self.n_rounds),
+            "peak_live": int(self.peak_live),
+            "window": int(self.window),
+            "mean_wait": float(w.mean()) if w.size else 0.0,
+            "p50_wait": float(np.percentile(w, 50)) if w.size else 0.0,
+            "p95_wait": float(np.percentile(w, 95)) if w.size else 0.0,
+            "max_wait": int(w.max()) if w.size else 0,
+            "node_seconds": used,
+            "flags": self.flags.as_dict(),
+        }
+
+
+def _normalize(trace: Dict[str, np.ndarray], total_nodes: int) -> dict:
+    """make_jobset's normalization, kept int64 and unguarded by the int32
+    horizon check (windows own overflow): rebase submit to 0, clamp
+    runtime/estimate/nodes, sort by (submit, original index)."""
+    submit = np.asarray(trace["submit"], dtype=np.int64)
+    n = submit.shape[0]
+    submit = submit - (submit.min() if n else 0)
+    runtime = np.maximum(np.asarray(trace["runtime"], dtype=np.int64), 1)
+    estimate = (np.maximum(np.asarray(trace["estimate"], dtype=np.int64), 1)
+                if trace.get("estimate") is not None else runtime.copy())
+    nodes = np.clip(np.asarray(trace["nodes"], dtype=np.int64), 1, total_nodes)
+    priority = (np.asarray(trace["priority"], dtype=np.int64)
+                if trace.get("priority") is not None
+                else np.zeros(n, dtype=np.int64))
+    if trace.get("deps") is not None:
+        raise ValueError(
+            "streaming replay drives dependency-free archive traces; "
+            "workflow DAGs go through simulate/simulate_window directly")
+    order = np.lexsort((np.arange(n), submit))
+    return {
+        "submit": submit[order], "runtime": runtime[order],
+        "estimate": estimate[order], "nodes": nodes[order],
+        "priority": priority[order],
+    }
+
+
+def _trace_crc(t: dict) -> int:
+    crc = 0
+    for key in ("submit", "runtime", "estimate", "nodes", "priority"):
+        crc = zlib.crc32(np.ascontiguousarray(t[key]).tobytes(), crc)
+    return crc
+
+
+# live-row columns carried between rounds (absolute int64 host values)
+_LIVE_TIME = ("start", "finish", "rsv")            # INF64-sentinel times
+_LIVE_PLAIN = ("g", "submit", "runtime", "estimate", "nodes", "priority",
+               "jstate", "remaining", "alloc_first", "alloc_span",
+               "alloc_sum")
+_LIVE_REL = ("last_start", "n_restarts", "lost_work", "aborted")
+
+
+class StreamingReplay:
+    """Windowed trace replay with durable per-round checkpoints.
+
+    Most callers want :func:`replay_trace` / :func:`resume`; the class is
+    the stateful core those wrap.  ``failures`` must be a *materialized*
+    ``repro.reliability.FailureTrace`` (both engines must consume the
+    identical arrays).  ``machine`` is a ``repro.alloc.Machine``;
+    scalar-counter mode when ``None``.
+    """
+
+    def __init__(self, trace, policy="fcfs", *, total_nodes: int,
+                 window: int = 4096, machine=None, alloc=None,
+                 contention=None, failures=None,
+                 max_events: Optional[int] = None,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 1,
+                 keep: int = 3, max_window_doublings: int = 6,
+                 _crash_after_round: Optional[int] = None):
+        if isinstance(trace, str):
+            from repro.traces.swf import load_swf
+            trace, _ = load_swf(trace)
+        self.total_nodes = int(total_nodes)
+        self.policy_id = (POLICY_IDS[policy] if isinstance(policy, str)
+                          else int(policy))
+        self.machine = machine
+        self.alloc = alloc
+        self.contention = contention
+        if machine is not None and machine.n_nodes != self.total_nodes:
+            raise ValueError(
+                f"machine has {machine.n_nodes} nodes but "
+                f"total_nodes={self.total_nodes}")
+        self.t = _normalize(trace, self.total_nodes)
+        self.n_jobs = int(self.t["submit"].shape[0])
+        self.trace_crc = _trace_crc(self.t)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = max(1, int(ckpt_every))
+        self.keep = int(keep)
+        self.max_window_doublings = int(max_window_doublings)
+        self._crash_after_round = _crash_after_round
+
+        # reliability stream: merged host-side exactly like both engines
+        if failures is not None:
+            from repro.reliability.model import merge_stream
+            tt, nn, kk = merge_stream(failures)
+            self.stream_time = tt.astype(np.int64)
+            self._rel_const = (nn, kk, failures.requeue,
+                               failures.checkpoint_interval,
+                               failures.restart_overhead)
+        else:
+            self.stream_time = None
+            self._rel_const = None
+        self.has_rel = failures is not None
+
+        # clock-rebase safety margin: the farthest any in-window event can
+        # land past the round base is one (possibly contention-dilated)
+        # dispatch plus the restart overhead; admission and t_hi stay below
+        # ``limit`` so every int32 addition in the engine is overflow-free
+        maxdur = int(max(self.t["runtime"].max(initial=1),
+                         self.t["estimate"].max(initial=1)))
+        dil = maxdur
+        if contention is not None:
+            from repro.alloc import Contention
+            con = Contention.canonical(contention)
+            num, den = int(con.alpha_num), int(con.alpha_den)
+            dil = maxdur + maxdur * num * max(self.total_nodes - 1, 1) // den
+        overhead = (int(failures.restart_overhead) if failures is not None
+                    else 0)
+        margin = 2 * (dil + overhead + 1)
+        if margin >= int(INF_TIME) // 2:
+            raise ReplayError(
+                f"job durations too large for int32 windows (margin "
+                f"{margin} >= {int(INF_TIME) // 2}); rescale the trace")
+        self.limit = int(INF_TIME) - margin
+
+        # loop state (overwritten by _restore on resume)
+        self.window = int(window)
+        self.cap = self._default_cap(self.window) if max_events is None \
+            else int(max_events)
+        self._cap_fixed = max_events is not None
+        self.cursor = 0
+        self.clock = 0                      # absolute int64 host clock
+        self.free = self.total_nodes
+        self.rel_ptr = 0
+        self.n_events = 0
+        self.round = 0
+        self.n_rounds = 0
+        self.peak_live = 0
+        self.flags = ReplayFlags()
+        self.live = self._empty_live()
+        N = machine.n_nodes if machine is not None else 0
+        self.owner_g = np.full(N, -1, dtype=np.int64)
+        self.down = np.zeros(N if machine is not None else 0, dtype=bool)
+        self.results = {
+            "start": np.full(self.n_jobs, INF64, dtype=np.int64),
+            "finish": np.full(self.n_jobs, INF64, dtype=np.int64),
+            "done": np.zeros(self.n_jobs, dtype=bool),
+            "alloc_first": np.full(self.n_jobs, -1, dtype=np.int64),
+            "alloc_span": np.zeros(self.n_jobs, dtype=np.int64),
+            "alloc_sum": np.zeros(self.n_jobs, dtype=np.int64),
+            "n_restarts": np.zeros(self.n_jobs, dtype=np.int64),
+            "lost_work": np.zeros(self.n_jobs, dtype=np.int64),
+            "aborted": np.zeros(self.n_jobs, dtype=bool),
+        }
+        self._step = self._build_step()
+
+    # ------------------------------------------------------------------
+    # construction helpers
+    # ------------------------------------------------------------------
+
+    def _default_cap(self, window: int) -> int:
+        K = 0 if self.stream_time is None else int(self.stream_time.shape[0])
+        return 6 * (window + 1) + 2 * K + 16
+
+    def _empty_live(self) -> dict:
+        live = {k: np.zeros(0, dtype=np.int64) for k in _LIVE_PLAIN}
+        live.update({k: np.zeros(0, dtype=np.int64) for k in _LIVE_TIME})
+        if self.has_rel:
+            live.update({k: np.zeros(0, dtype=np.int64) for k in _LIVE_REL})
+            live["aborted"] = np.zeros(0, dtype=bool)
+        return live
+
+    def _build_step(self):
+        pol = jnp.int32(self.policy_id)
+        ctx = (make_alloc_ctx(self.machine, self.alloc, self.contention, None)
+               if self.machine is not None else None)
+        if self.has_rel:
+            nodes_c = jnp.asarray(self._rel_const[0], jnp.int32)
+            kind_c = jnp.asarray(self._rel_const[1], jnp.int32)
+            knobs = tuple(jnp.int32(x) for x in self._rel_const[2:])
+
+            def step(jobs, state, t_hi, cap, times):
+                rel = (times, nodes_c, kind_c) + knobs
+                return simulate_window(pol, jobs, state, t_hi, cap, ctx,
+                                       rel=rel)
+        else:
+            def step(jobs, state, t_hi, cap):
+                return simulate_window(pol, jobs, state, t_hi, cap, ctx)
+        return jax.jit(step)
+
+    # ------------------------------------------------------------------
+    # int64 <-> window-relative int32 rebasing
+    # ------------------------------------------------------------------
+
+    def _rel32(self, abs64: np.ndarray, t0: int) -> np.ndarray:
+        out = abs64 - t0
+        sent = abs64 >= INF64
+        if ((~sent) & ((out <= _I32_MIN) | (out >= int(INF_TIME)))).any():
+            raise _RebaseOverflow()
+        return np.where(sent, np.int64(INF_TIME), out).astype(np.int32)
+
+    @staticmethod
+    def _abs64(rel32: np.ndarray, t0: int) -> np.ndarray:
+        r = rel32.astype(np.int64)
+        return np.where(r >= np.int64(INF_TIME), INF64, r + t0)
+
+    # ------------------------------------------------------------------
+    # the round
+    # ------------------------------------------------------------------
+
+    def _harvest(self):
+        live = self.live
+        done = np.asarray(live["jstate"]) == DONE
+        if done.any():
+            g = live["g"][done]
+            r = self.results
+            r["start"][g] = live["start"][done]
+            r["finish"][g] = live["finish"][done]
+            r["alloc_first"][g] = live["alloc_first"][done]
+            r["alloc_span"][g] = live["alloc_span"][done]
+            r["alloc_sum"][g] = live["alloc_sum"][done]
+            if self.has_rel:
+                r["n_restarts"][g] = live["n_restarts"][done]
+                r["lost_work"][g] = live["lost_work"][done]
+                r["aborted"][g] = live["aborted"][done]
+                r["done"][g] = ~live["aborted"][done].astype(bool)
+            else:
+                r["done"][g] = True
+            self.live = {k: v[~done] for k, v in live.items()}
+
+    def _admit(self, t0: int) -> int:
+        n_live = len(self.live["g"])
+        n_free = self.window - n_live
+        k = min(n_free, self.n_jobs - self.cursor)
+        if k <= 0:
+            return 0
+        # only jobs whose window-relative submit stays under the safety
+        # limit; submits are sorted, so this is a prefix
+        hi = np.searchsorted(
+            self.t["submit"][self.cursor:self.cursor + k],
+            np.int64(t0 + self.limit), side="right")
+        k = int(min(k, hi))
+        if k <= 0:
+            return 0
+        sl = slice(self.cursor, self.cursor + k)
+        add = {
+            "g": np.arange(self.cursor, self.cursor + k, dtype=np.int64),
+            "submit": self.t["submit"][sl].copy(),
+            "runtime": self.t["runtime"][sl].copy(),
+            "estimate": self.t["estimate"][sl].copy(),
+            "nodes": self.t["nodes"][sl].copy(),
+            "priority": self.t["priority"][sl].copy(),
+            "jstate": np.full(k, PENDING, dtype=np.int64),
+            "remaining": self.t["runtime"][sl].copy(),
+            "start": np.full(k, INF64, dtype=np.int64),
+            "finish": np.full(k, INF64, dtype=np.int64),
+            "rsv": np.full(k, INF64, dtype=np.int64),
+            "alloc_first": np.full(k, -1, dtype=np.int64),
+            "alloc_span": np.zeros(k, dtype=np.int64),
+            "alloc_sum": np.zeros(k, dtype=np.int64),
+        }
+        if self.has_rel:
+            add["last_start"] = np.full(k, t0, dtype=np.int64)
+            add["n_restarts"] = np.zeros(k, dtype=np.int64)
+            add["lost_work"] = np.zeros(k, dtype=np.int64)
+            add["aborted"] = np.zeros(k, dtype=bool)
+        self.live = {key: np.concatenate([self.live[key], add[key]])
+                     for key in self.live}
+        self.cursor += k
+        return k
+
+    def _window_args(self, t0: int):
+        """Build the device JobSet/SimState for one round.  Live rows land
+        compacted in rows [0, n) in ascending global order — the invariant
+        every relative-order tie-break in the engine relies on — followed by
+        invalid padding and one PENDING sentinel row (submit = INF) that
+        keeps the engine's "simulation still live" guard exact while the
+        trace has more jobs than the window."""
+        live = self.live
+        n = len(live["g"])
+        W1 = self.window + 1
+        i32 = np.int32
+
+        def pad(a, fill, dtype=i32):
+            out = np.full(W1, fill, dtype=dtype)
+            out[:n] = a
+            return out
+
+        submit = pad(self._rel32(live["submit"], t0), int(INF_TIME))
+        valid = np.zeros(W1, dtype=bool)
+        valid[:n] = True
+        jobs = JobSet(
+            submit=submit,
+            runtime=pad(live["runtime"], 1),
+            estimate=pad(live["estimate"], 1),
+            nodes=pad(live["nodes"], 1),
+            priority=pad(live["priority"], 0),
+            valid=valid,
+        )
+        jstate = pad(live["jstate"], DONE)
+        if self.cursor < self.n_jobs:
+            # the sentinel (never arrives): keeps the engine's
+            # any-job-unfinished guard open while the trace still has
+            # unadmitted jobs; in the drain the window IS the full
+            # remaining table, so the guard must close exactly as in a
+            # one-shot run
+            jstate[W1 - 1] = PENDING
+        N = self.machine.n_nodes if self.machine is not None else 0
+        owner = np.full(N, -1, dtype=i32)
+        if N and (self.owner_g >= 0).any():
+            held = self.owner_g >= 0
+            owner[held] = np.searchsorted(
+                live["g"], self.owner_g[held]).astype(i32)
+        rel = None
+        if self.has_rel:
+            rel = RelState(
+                ptr=jnp.int32(self.rel_ptr),
+                last_start=jnp.asarray(
+                    pad(self._rel32(live["last_start"], t0), 0)),
+                n_restarts=jnp.asarray(pad(live["n_restarts"], 0)),
+                lost_work=jnp.asarray(pad(live["lost_work"], 0)),
+                aborted=jnp.asarray(pad(live["aborted"], False, bool)),
+                down=jnp.asarray(self.down),
+            )
+        state = SimState(
+            clock=jnp.int32(self.clock - t0),
+            jstate=jnp.asarray(jstate),
+            n_unmet=jnp.zeros(0, dtype=jnp.int32),
+            start=jnp.asarray(pad(self._rel32(live["start"], t0), int(INF_TIME))),
+            finish=jnp.asarray(pad(self._rel32(live["finish"], t0), int(INF_TIME))),
+            rsv_finish=jnp.asarray(pad(self._rel32(live["rsv"], t0), int(INF_TIME))),
+            remaining=jnp.asarray(pad(live["remaining"], 1)),
+            free=jnp.int32(self.free),
+            n_events=jnp.int32(0),
+            node_owner=jnp.asarray(owner),
+            alloc_first=jnp.asarray(pad(live["alloc_first"], -1)),
+            alloc_span=jnp.asarray(pad(live["alloc_span"], 0)),
+            alloc_sum=jnp.asarray(pad(live["alloc_sum"], 0)),
+            # machine mode always writes the fragmentation log; one slot
+            # (never downloaded, writes past it drop) keeps the scatter
+            # legal without materializing a per-event log per round
+            ev_time=jnp.zeros(1 if N else 0, dtype=jnp.int32),
+            ev_free=jnp.zeros(1 if N else 0, dtype=jnp.int32),
+            ev_lfb=jnp.zeros(1 if N else 0, dtype=jnp.int32),
+            rel=rel,
+        )
+        return jobs, state
+
+    def _run_round(self, t0: int, t_hi_rel: int) -> tuple[int, bool]:
+        """One simulate_window call; returns (events processed, saturated)."""
+        jobs, state = self._window_args(t0)
+        args = (jobs, state, jnp.int32(t_hi_rel),
+                jnp.int32(min(self.cap, int(INF_TIME))))
+        if self.has_rel:
+            times = np.clip(self.stream_time - t0, np.int64(_I32_MIN),
+                            np.int64(INF_TIME)).astype(np.int32)
+            state, sat = self._step(*args, jnp.asarray(times))
+        else:
+            state, sat = self._step(*args)
+        n = len(self.live["g"])
+        live = self.live
+        live["jstate"] = np.asarray(state.jstate[:n], dtype=np.int64)
+        live["start"] = self._abs64(np.asarray(state.start[:n]), t0)
+        live["finish"] = self._abs64(np.asarray(state.finish[:n]), t0)
+        live["rsv"] = self._abs64(np.asarray(state.rsv_finish[:n]), t0)
+        live["remaining"] = np.asarray(state.remaining[:n], dtype=np.int64)
+        live["alloc_first"] = np.asarray(state.alloc_first[:n], dtype=np.int64)
+        live["alloc_span"] = np.asarray(state.alloc_span[:n], dtype=np.int64)
+        live["alloc_sum"] = np.asarray(state.alloc_sum[:n], dtype=np.int64)
+        if self.has_rel:
+            live["last_start"] = (
+                np.asarray(state.rel.last_start[:n]).astype(np.int64) + t0)
+            live["n_restarts"] = np.asarray(state.rel.n_restarts[:n],
+                                            dtype=np.int64)
+            live["lost_work"] = np.asarray(state.rel.lost_work[:n],
+                                           dtype=np.int64)
+            live["aborted"] = np.asarray(state.rel.aborted[:n])
+            self.rel_ptr = int(state.rel.ptr)
+            self.down = np.asarray(state.rel.down)
+        if self.machine is not None:
+            rows = np.asarray(state.node_owner)
+            self.owner_g = np.full(rows.shape[0], -1, dtype=np.int64)
+            held = rows >= 0
+            if held.any():
+                self.owner_g[held] = live["g"][rows[held]]
+        self.free = int(state.free)
+        self.clock = t0 + int(state.clock)
+        ev = int(state.n_events)
+        self.n_events += ev
+        self.n_rounds += 1
+        return ev, bool(sat)
+
+    # ------------------------------------------------------------------
+    # checkpointing
+    # ------------------------------------------------------------------
+
+    def _config(self) -> dict:
+        return {
+            "policy": self.policy_id,
+            "total_nodes": self.total_nodes,
+            "n_jobs": self.n_jobs,
+            "trace_crc": self.trace_crc,
+            "machine": self.machine is not None,
+            "failures": self.has_rel,
+        }
+
+    def _save(self):
+        tree = {f"live/{k}": v for k, v in self.live.items()}
+        tree.update({f"res/{k}": v for k, v in self.results.items()})
+        tree["owner_g"] = self.owner_g
+        tree["down"] = self.down
+        extra = {
+            "round": self.round, "cursor": self.cursor,
+            "clock": int(self.clock), "free": self.free,
+            "rel_ptr": self.rel_ptr, "n_events": self.n_events,
+            "window": self.window, "cap": self.cap,
+            "n_rounds": self.n_rounds, "peak_live": self.peak_live,
+            "flags": self.flags.as_dict(), "config": self._config(),
+        }
+        save_checkpoint(self.ckpt_dir, self.round, tree, extra=extra,
+                        keep=self.keep)
+
+    def _restore(self):
+        leaves, _step, extra = load_checkpoint_raw(self.ckpt_dir)
+        cfg = extra.get("config", {})
+        if cfg != self._config():
+            raise ReplayError(
+                f"checkpoint in {self.ckpt_dir} was written by a different "
+                f"replay configuration ({cfg} != {self._config()}); refusing "
+                "to resume")
+        self.live = {k[len("live/"):]: v for k, v in leaves.items()
+                     if k.startswith("live/")}
+        self.results = {k[len("res/"):]: v for k, v in leaves.items()
+                        if k.startswith("res/")}
+        self.owner_g = leaves["owner_g"]
+        self.down = leaves["down"]
+        for name in ("round", "cursor", "free", "rel_ptr", "n_events",
+                     "window", "cap", "n_rounds", "peak_live"):
+            setattr(self, name, int(extra[name]))
+        self.clock = int(extra["clock"])
+        self.flags = ReplayFlags.from_dict(extra["flags"])
+
+    # ------------------------------------------------------------------
+    # the loop
+    # ------------------------------------------------------------------
+
+    def run(self, *, resume: bool = False) -> ReplayResult:
+        if resume:
+            self._restore()
+        while True:
+            if self.ckpt_dir is not None and self.round % self.ckpt_every == 0:
+                self._save()
+            if self._crash_after_round is not None \
+                    and self.round >= self._crash_after_round:
+                raise ReplayInterrupted(
+                    f"crash hook fired at round {self.round}")
+            self.round += 1
+            self._harvest()
+            if self.cursor >= self.n_jobs and len(self.live["g"]) == 0:
+                break
+            t0 = int(self.clock)
+            if len(self.live["g"]) == 0 \
+                    and self.t["submit"][self.cursor] - t0 > self.limit:
+                # idle gap wider than the int32 window: nothing is live, so
+                # jump the host clock straight to the next arrival
+                t0 = self.clock = int(self.t["submit"][self.cursor])
+            admitted = self._admit(t0)
+            n_live = len(self.live["g"])
+            self.peak_live = max(self.peak_live, n_live)
+            if self.cursor < self.n_jobs:
+                t_next = int(self.t["submit"][self.cursor]) - t0
+                t_hi = min(t_next - 1, self.limit)
+            else:
+                t_hi = self.limit
+            try:
+                events, sat = self._run_round(t0, t_hi)
+            except _RebaseOverflow:
+                self.flags.rebase_overflows += 1
+                if self.flags.rebase_overflows > 1:
+                    raise ReplayError(
+                        "window-relative time does not fit int32 even after "
+                        "a window doubling; rescale the trace") from None
+                self._double_window()
+                continue
+            if sat:
+                # the truncated round is a valid prefix: count it, raise the
+                # cap, and let the next round continue from the same state
+                self.flags.saturated_rounds += 1
+                if not self._cap_fixed:
+                    self.cap *= 2
+                    self.flags.cap_doublings += 1
+                elif events == 0:
+                    raise ReplayError(
+                        f"event cap {self.cap} saturated with no progress; "
+                        "raise max_events")
+            if events == 0 and admitted == 0 and not sat:
+                if self.cursor < self.n_jobs and n_live >= self.window:
+                    # window overflow: more than W jobs alive at once
+                    self._double_window()
+                elif self.cursor >= self.n_jobs:
+                    # drain round fired nothing: the next would be
+                    # identical (deterministic), so fail loud
+                    raise ReplayError(
+                        f"replay stalled draining {n_live} live jobs at "
+                        f"clock {self.clock} (round {self.round}); no "
+                        "event below the window limit can fire")
+                else:
+                    raise ReplayError(
+                        f"replay stalled at clock {self.clock} (round "
+                        f"{self.round}): no events below the window limit "
+                        "and nothing to admit")
+        return self._result()
+
+    def _double_window(self):
+        if self.flags.window_doublings >= self.max_window_doublings:
+            raise ReplayError(
+                f"active jobs exceed the window even after "
+                f"{self.flags.window_doublings} doublings "
+                f"(window={self.window}); raise window=")
+        self.window *= 2
+        self.flags.window_doublings += 1
+        if not self._cap_fixed:
+            self.cap = max(self.cap, self._default_cap(self.window))
+
+    def _result(self) -> ReplayResult:
+        r = self.results
+        done = r["done"]
+        fin = np.where(done, r["finish"], 0)
+        # never-started/-finished rows take the refsim's int64 sentinel (-1):
+        # INF_TIME is a real instant on a beyond-int32 horizon, so the int32
+        # engine's sentinel cannot double as one here
+        started = r["start"] < INF64
+        start = np.where(started, r["start"], np.int64(-1))
+        finish = np.where(r["finish"] < INF64, r["finish"], np.int64(-1))
+        return ReplayResult(
+            submit=self.t["submit"], runtime=self.t["runtime"],
+            estimate=self.t["estimate"], nodes=self.t["nodes"],
+            priority=self.t["priority"],
+            start=start, finish=finish,
+            wait=np.where(started, start - self.t["submit"], 0),
+            done=done,
+            alloc_first=r["alloc_first"], alloc_span=r["alloc_span"],
+            alloc_sum=r["alloc_sum"],
+            n_restarts=r["n_restarts"], lost_work=r["lost_work"],
+            aborted=r["aborted"],
+            makespan=int(fin.max(initial=0)),
+            n_events=self.n_events, n_rounds=self.n_rounds,
+            peak_live=self.peak_live, window=self.window, flags=self.flags,
+        )
+
+
+class _RebaseOverflow(Exception):
+    pass
+
+
+def replay_trace(trace, policy="fcfs", *, total_nodes: int, **kwargs
+                 ) -> ReplayResult:
+    """One-call streaming replay: ``trace`` is a dict of host arrays or a
+    path to an ``.swf``/``.swf.gz`` log.  See :class:`StreamingReplay` for
+    the windowing/checkpoint knobs."""
+    return StreamingReplay(trace, policy, total_nodes=total_nodes,
+                           **kwargs).run()
+
+
+def resume(ckpt_dir: str, trace, policy="fcfs", *, total_nodes: int,
+           **kwargs) -> ReplayResult:
+    """Restart a replay from its last durable round.
+
+    Call with the *same* trace and configuration as the interrupted run
+    (verified against the checkpoint manifest; a mismatch refuses to
+    resume).  The continuation is bit-exact with an uninterrupted run.
+    """
+    runner = StreamingReplay(trace, policy, total_nodes=total_nodes,
+                             ckpt_dir=ckpt_dir, **{k: v for k, v in
+                                                   kwargs.items()
+                                                   if k != "ckpt_dir"})
+    return runner.run(resume=True)

@@ -1,4 +1,4 @@
-from repro.traces.swf import load_swf  # noqa: F401
+from repro.traces.swf import SwfReport, dump_swf, load_swf  # noqa: F401
 from repro.traces.synthetic import (  # noqa: F401
     das2_like, sdsc_sp2_like, synthetic_trace,
 )

@@ -75,10 +75,10 @@ def test_checked_in_artifact_parses():
     # the perf trajectory needs the headline cases to exist under stable
     # names; renaming them silently orphans every historical comparison
     full_run_cases = {"nodeps_fcfs", "nodeps_backfill", "moldable_backfill",
-                      "galactic8k_backfill", "queue_select_N65536",
-                      "queue_select_N1048576"}
+                      "galactic8k_backfill", "trace_replay",
+                      "queue_select_N65536", "queue_select_N1048576"}
     smoke_cases = {"nodeps_fcfs", "nodeps_backfill", "galactic_smoke_fcfs",
-                   "moldable_backfill", "queue_select_N65536"}
+                   "moldable_backfill", "trace_replay", "queue_select_N65536"}
     have = set(report["cases"])
     assert (full_run_cases <= have) or (smoke_cases <= have), sorted(have)
     # the malleable width-choice case (DESIGN.md §17) carries its static
@@ -100,11 +100,13 @@ def test_checked_in_artifact_is_schema3_compiled():
 
 @pytest.mark.slow
 def test_checked_in_artifact_throughput_floors():
-    """ISSUE 8 acceptance floors on the committed full-run artifact:
+    """ISSUE 8/9 acceptance floors on the committed full-run artifact:
 
     - batched backfill (DESIGN.md §18) holds >= 1/3 of FCFS events/s on
       the 2k no-deps case;
-    - compiled queue_select has no >10x GB/s cliff going 64k -> 1M.
+    - compiled queue_select has no >10x GB/s cliff going 64k -> 1M;
+    - streaming replay sustains >= 1000 jobs/s on a >= 200k-job archive
+      with bounded window occupancy.
     """
     report = _load_artifact()
     if report.get("smoke"):
@@ -119,6 +121,17 @@ def test_checked_in_artifact_throughput_floors():
     big = cases["queue_select_N1048576"]["GBps"]
     assert big >= small / 10, (
         f"queue_select GB/s cliff: {small:.2f} at 64k vs {big:.2f} at 1M")
+    # ISSUE 9 floors: the streaming replay runner (DESIGN.md §19) holds
+    # archive scale — >= 200k jobs at >= 1000 jobs/s with the active window
+    # bounded by the configured W (no silent whole-trace materialization)
+    tr = cases["trace_replay"]
+    assert tr["n_jobs"] >= 200_000, tr["n_jobs"]
+    assert tr["jobs_per_s"] >= 1000, (
+        f"trace_replay fell to {tr['jobs_per_s']:.0f} jobs/s — the windowed "
+        "runner regressed")
+    assert tr["peak_live"] <= tr["window"], (
+        f"peak_live {tr['peak_live']} exceeds window {tr['window']} — replay "
+        "memory is no longer bounded")
 
 
 @pytest.mark.slow

@@ -37,6 +37,7 @@ _CHILD = textwrap.dedent("""
         assert np.array_equal(np.asarray(x), np.asarray(y)), "sharded != vmapped"
     out = multicluster_result_np(a)
     assert out["dropped"] == 0 and out["done"].sum() == C * J
+    assert not out["saturated"]
     print("SHARDED_OK migrated=", out["migrated"])
 """)
 

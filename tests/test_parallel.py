@@ -38,6 +38,7 @@ def test_multicluster_no_migration_equals_independent():
     mc = simulate_multicluster(
         jc, POLICY_IDS["backfill"], [128] * 4, window=4000, horizon=horizon,
         migrate=False)
+    assert not np.asarray(mc.saturated).any(), "window rounds hit the event cap"
     for s, js in enumerate(jsets):
         ind = simulate(js, POLICY_IDS["backfill"], 128)
         np.testing.assert_array_equal(
@@ -66,6 +67,7 @@ def test_multicluster_migration_conserves_jobs():
         migrate=True, max_export=4)
     out = multicluster_result_np(mc)
     assert out["dropped"] == 0
+    assert not out["saturated"], "a window round silently hit the event cap"
     assert out["valid"].sum() == 4 * 150, "jobs conserved across migration"
     assert out["done"].sum() == 4 * 150, "every job completes"
     # conservative latency: a migrated job never starts before its re-arrival

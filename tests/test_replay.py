@@ -1,0 +1,324 @@
+"""Streaming trace replay (DESIGN.md §19): windowed chunking is bit-exact
+against one-shot ``simulate`` and the host refsim, checkpoints make a
+killed run resume to a byte-identical result, and the degradation ladder
+(event-cap saturation, window overflow, clock-rebase overflow) fails
+loud-then-soft with typed flags.
+
+- fast lane: chunked == one-shot corners (tiny windows force the doubling
+  ladder), saturation/overflow flags, kill+resume identity, config-mismatch
+  refusal, a beyond-int32-horizon archive vs the int64 refsim oracle;
+- slow lane: the full differential grid {fcfs, sjf, backfill, preempt} x
+  {scalar, mesh2d+contiguous} x {failures on/off} vs BOTH oracles, plus
+  hypothesis properties on a ~2k-job trace with random window sizes and a
+  kill-at-random-round resume test.
+"""
+
+import dataclasses
+import functools
+import tempfile
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.api import FailureModel, Topology
+from repro.core.engine import simulate
+from repro.core.jobs import POLICY_IDS, make_jobset
+from repro.refsim import replay_reference
+from repro.replay import (
+    ReplayError, ReplayInterrupted, StreamingReplay, replay_trace, resume,
+)
+from repro.traces import das2_like
+
+TOTAL = 32
+
+
+def _trace(n=300, seed=2):
+    t = dict(das2_like(n, seed=seed))
+    t["priority"] = np.random.default_rng(seed).integers(0, 4, n)
+    return t
+
+
+def _mesh():
+    return Topology.mesh2d(4, 8).build()
+
+
+def _failures():
+    return FailureModel(mtbf=30_000.0, mean_repair=2_000, horizon=1 << 19,
+                        seed=7, max_failures=64, checkpoint_interval=500,
+                        restart_overhead=20).materialize(TOTAL)
+
+
+def _oneshot(trace, policy, machine=None, alloc=None, failures=None):
+    js = make_jobset(trace["submit"], trace["runtime"], trace["nodes"],
+                     trace["estimate"], priority=trace.get("priority"),
+                     total_nodes=TOTAL)
+    return simulate(js, POLICY_IDS[policy], TOTAL, machine=machine,
+                    alloc=alloc, failures=failures)
+
+
+def _assert_vs_oneshot(res, one, *, machine=False, failures=False):
+    np.testing.assert_array_equal(res.start,
+                                  np.asarray(one.start).astype(np.int64))
+    np.testing.assert_array_equal(res.finish,
+                                  np.asarray(one.finish).astype(np.int64))
+    np.testing.assert_array_equal(res.done, np.asarray(one.done))
+    assert res.n_events == int(np.asarray(one.n_events))
+    if machine:
+        for key in ("alloc_first", "alloc_span", "alloc_sum"):
+            np.testing.assert_array_equal(
+                getattr(res, key),
+                np.asarray(getattr(one, key)).astype(np.int64), err_msg=key)
+    if failures:
+        for key in ("n_restarts", "lost_work"):
+            np.testing.assert_array_equal(
+                getattr(res, key),
+                np.asarray(getattr(one.rel, key)).astype(np.int64),
+                err_msg=key)
+        np.testing.assert_array_equal(res.aborted, np.asarray(one.rel.aborted))
+
+
+def _assert_vs_refsim(res, trace, policy, machine=None, alloc="simple",
+                      failures=None):
+    ref = replay_reference(trace, policy, total_nodes=TOTAL, machine=machine,
+                           alloc=alloc, failures=failures)
+    np.testing.assert_array_equal(res.start, ref["start"])
+    np.testing.assert_array_equal(res.finish[res.done],
+                                  ref["finish"][ref["done"]])
+    np.testing.assert_array_equal(res.wait[res.done],
+                                  ref["wait"][ref["done"]])
+    np.testing.assert_array_equal(res.done, ref["done"])
+    assert res.n_events == int(ref["n_events"])
+    if machine is not None:
+        for key in ("alloc_first", "alloc_span", "alloc_sum"):
+            np.testing.assert_array_equal(getattr(res, key), ref[key],
+                                          err_msg=key)
+    if failures is not None:
+        np.testing.assert_array_equal(res.n_restarts, ref["n_restarts"])
+        np.testing.assert_array_equal(res.lost_work, ref["lost_work"])
+        np.testing.assert_array_equal(res.aborted, ref["aborted"])
+
+
+# ---------------------------------------------------------------------------
+# fast lane: chunking corners + the degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_tiny_window_bitexact_and_bounded():
+    """A window far below the live-job peak forces the doubling ladder and
+    still reproduces the one-shot schedule decision-for-decision; the device
+    table never exceeds the final window (bounded memory)."""
+    t = _trace(200)
+    one = _oneshot(t, "backfill")
+    res = replay_trace(dict(t), "backfill", total_nodes=TOTAL, window=16)
+    _assert_vs_oneshot(res, one)
+    _assert_vs_refsim(res, t, "backfill")
+    assert res.flags.window_doublings >= 1
+    assert res.peak_live <= res.window
+    assert res.n_rounds > 1
+
+
+def test_window_larger_than_trace_single_round():
+    t = _trace(80)
+    one = _oneshot(t, "fcfs")
+    res = replay_trace(dict(t), "fcfs", total_nodes=TOTAL, window=256)
+    _assert_vs_oneshot(res, one)
+    assert res.flags.window_doublings == 0
+
+
+def test_event_cap_saturation_flagged_and_recovered():
+    """A tiny auto-doubling cap saturates, sets the typed flag, doubles, and
+    the truncated-prefix rounds still compose to the exact schedule."""
+    t = _trace(150)
+    one = _oneshot(t, "fcfs")
+    runner = StreamingReplay(dict(t), "fcfs", total_nodes=TOTAL, window=64)
+    runner.cap = 8   # force saturation on the first busy round
+    res = runner.run()
+    _assert_vs_oneshot(res, one)
+    assert res.flags.saturated_rounds >= 1
+    assert res.flags.cap_doublings >= 1
+
+
+def test_fixed_event_cap_saturates_without_doubling():
+    """max_events= pins the cap: saturation is flagged but never doubled,
+    and progress continues one capful of events at a time."""
+    t = _trace(100)
+    one = _oneshot(t, "sjf")
+    res = replay_trace(dict(t), "sjf", total_nodes=TOTAL, window=128,
+                       max_events=16)
+    _assert_vs_oneshot(res, one)
+    assert res.flags.saturated_rounds >= 1
+    assert res.flags.cap_doublings == 0
+
+
+def test_failures_cross_window_rounds():
+    """Failure/repair events deferred across a round boundary fire at the
+    identical clock: kills, restarts, and repairs are bit-exact under
+    aggressive chunking."""
+    t = _trace(150)
+    ft = _failures()
+    one = _oneshot(t, "fcfs", failures=ft)
+    res = replay_trace(dict(t), "fcfs", total_nodes=TOTAL, window=32,
+                       failures=ft)
+    _assert_vs_oneshot(res, one, failures=True)
+    _assert_vs_refsim(res, t, "fcfs", failures=ft)
+    assert int(res.n_restarts.sum()) > 0, "grid corner must exercise kills"
+
+
+def test_kill_then_resume_byte_identical(tmp_path):
+    """Crash after a durable round, resume(): every result column, counter,
+    and flag matches the uninterrupted run."""
+    t = _trace(150)
+    kw = dict(total_nodes=TOTAL, window=48)
+    full = replay_trace(dict(t), "backfill", **kw)
+    ck = str(tmp_path / "ck")
+    with pytest.raises(ReplayInterrupted):
+        StreamingReplay(dict(t), "backfill", ckpt_dir=ck, ckpt_every=1,
+                        _crash_after_round=3, **kw).run()
+    res = resume(ck, dict(t), "backfill", **kw)
+    for f in dataclasses.fields(full):
+        a, b = getattr(full, f.name), getattr(res, f.name)
+        if isinstance(a, np.ndarray):
+            np.testing.assert_array_equal(a, b, err_msg=f.name)
+    assert (full.n_events, full.n_rounds, full.peak_live, full.window) == \
+        (res.n_events, res.n_rounds, res.peak_live, res.window)
+    assert full.flags == res.flags
+
+
+def test_resume_refuses_config_mismatch(tmp_path):
+    t = _trace(100)
+    ck = str(tmp_path / "ck")
+    with pytest.raises(ReplayInterrupted):
+        StreamingReplay(dict(t), "fcfs", total_nodes=TOTAL, window=48,
+                        ckpt_dir=ck, ckpt_every=1, _crash_after_round=2).run()
+    with pytest.raises(ReplayError, match="different replay configuration"):
+        resume(ck, dict(t), "sjf", total_nodes=TOTAL, window=48)
+
+
+def test_beyond_int32_horizon_replays_against_refsim():
+    """A month-scale archive whose absolute horizon overflows int32: the
+    one-shot engine refuses it outright, windowed rebasing replays it, and
+    the int64 refsim agrees column-for-column."""
+    base = _trace(60, seed=4)
+    far = {k: v.copy() for k, v in base.items()}
+    far["submit"] = far["submit"] + (np.int64(3) << 31)
+    t = {k: np.concatenate([base[k], far[k]]) for k in base}
+    with pytest.raises(ValueError, match="overflows int32"):
+        make_jobset(t["submit"], t["runtime"], t["nodes"], t["estimate"],
+                    total_nodes=TOTAL)
+    res = replay_trace(dict(t), "backfill", total_nodes=TOTAL, window=64)
+    _assert_vs_refsim(res, t, "backfill")
+    assert res.makespan > 2 ** 31
+    assert res.done.all()
+    assert res.flags.rebase_overflows == 0
+
+
+def test_deps_rejected():
+    t = _trace(20)
+    t["deps"] = [(1, 0)]
+    with pytest.raises(ValueError, match="dependency-free"):
+        replay_trace(t, "fcfs", total_nodes=TOTAL)
+
+
+def test_summary_shape():
+    t = _trace(80)
+    res = replay_trace(dict(t), "fcfs", total_nodes=TOTAL, window=96)
+    s = res.summary()
+    assert s["n_done"] == 80 and s["n_jobs"] == 80
+    assert s["makespan"] == res.makespan > 0
+    assert s["p95_wait"] >= s["p50_wait"] >= 0
+    assert set(s["flags"]) == {"saturated_rounds", "cap_doublings",
+                               "window_doublings", "rebase_overflows"}
+
+
+# ---------------------------------------------------------------------------
+# slow lane: the differential grid and hypothesis properties
+# ---------------------------------------------------------------------------
+
+GRID_POLICIES = ("fcfs", "sjf", "backfill", "preempt")
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+@pytest.mark.parametrize("failures", (False, True), ids=("nofail", "fail"))
+@pytest.mark.parametrize("mode", ("scalar", "mesh"))
+@pytest.mark.parametrize("policy", GRID_POLICIES)
+def test_differential_grid(policy, mode, failures):
+    """Acceptance grid: chunked replay vs one-shot AND refsim, policies x
+    {scalar, mesh2d+contiguous} x {failures on/off}."""
+    if policy == "preempt" and mode == "mesh":
+        pytest.skip("preemption is scalar-counter mode only")
+    t = _trace(300)
+    machine = _mesh() if mode == "mesh" else None
+    alloc = "contiguous" if mode == "mesh" else None
+    ft = _failures() if failures else None
+    one = _oneshot(t, policy, machine=machine, alloc=alloc, failures=ft)
+    res = replay_trace(dict(t), policy, total_nodes=TOTAL, window=64,
+                       machine=machine, alloc=alloc, failures=ft)
+    _assert_vs_oneshot(res, one, machine=machine is not None,
+                       failures=failures)
+    _assert_vs_refsim(res, t, policy, machine=machine,
+                      alloc=alloc or "simple", failures=ft)
+
+
+_PROP_TRACE = _trace(2000, seed=6)
+
+
+@functools.lru_cache(maxsize=4)
+def _prop_oneshot(policy):
+    return _oneshot(_PROP_TRACE, policy)
+
+
+@functools.lru_cache(maxsize=4)
+def _prop_refsim(policy):
+    return replay_reference(_PROP_TRACE, policy, total_nodes=TOTAL)
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+@given(window=st.integers(8, 160),
+       policy=st.sampled_from(["fcfs", "backfill"]))
+@settings(max_examples=10, deadline=None)
+def test_property_chunked_replay_window_invariant(window, policy):
+    """Hypothesis: for ANY window size (hence any chunk boundaries), replay
+    of a ~2k-job trace is bit-exact vs one-shot simulate and vs refsim."""
+    res = replay_trace(dict(_PROP_TRACE), policy, total_nodes=TOTAL,
+                       window=window)
+    one = _prop_oneshot(policy)
+    np.testing.assert_array_equal(res.start,
+                                  np.asarray(one.start).astype(np.int64))
+    np.testing.assert_array_equal(res.finish,
+                                  np.asarray(one.finish).astype(np.int64))
+    assert res.n_events == int(np.asarray(one.n_events))
+    ref = _prop_refsim(policy)
+    np.testing.assert_array_equal(res.start, ref["start"])
+    assert res.n_events == int(ref["n_events"])
+    assert res.peak_live <= res.window
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+@given(window=st.integers(12, 96), crash_round=st.integers(1, 12))
+@settings(max_examples=10, deadline=None)
+def test_property_kill_at_random_round_resumes_identical(window, crash_round):
+    """Hypothesis: killing the run after ANY durable round and resuming
+    yields the byte-identical result."""
+    t = _trace(250, seed=8)
+    kw = dict(total_nodes=TOTAL, window=window)
+    full = replay_trace(dict(t), "fcfs", **kw)
+    with tempfile.TemporaryDirectory() as ck:
+        try:
+            StreamingReplay(dict(t), "fcfs", ckpt_dir=ck, ckpt_every=1,
+                            _crash_after_round=crash_round, **kw).run()
+            crashed = False   # the run finished before the crash round
+        except ReplayInterrupted:
+            crashed = True
+        if not crashed:
+            return
+        res = resume(ck, dict(t), "fcfs", **kw)
+    for f in dataclasses.fields(full):
+        a, b = getattr(full, f.name), getattr(res, f.name)
+        if isinstance(a, np.ndarray):
+            np.testing.assert_array_equal(a, b, err_msg=f.name)
+    assert full.flags == res.flags
+    assert (full.n_events, full.n_rounds) == (res.n_events, res.n_rounds)

@@ -126,8 +126,9 @@ def test_swf_parser(tmp_path):
     """)
     p = tmp_path / "log.swf"
     p.write_text(swf)
-    tr = load_swf(str(p))
+    tr, rep = load_swf(str(p))
     assert len(tr["submit"]) == 2  # zero-runtime row dropped
+    assert rep.n_jobs == 2 and rep.n_skipped == 1
     np.testing.assert_array_equal(tr["nodes"], [16, 8])
     np.testing.assert_array_equal(tr["estimate"], [300, 100])
 

@@ -1,38 +1,59 @@
-"""SWF loader end-to-end: parsing/filtering/fallbacks on the checked-in
-fixture, then dtype flow through ``run(Scenario(trace=SwfTrace(...)))``
-including the int64 -> int32 downcast in ``make_jobset``."""
+"""SWF loader end-to-end: hardened parsing (quarantine/skip/cancel taxonomy,
+strict mode, int32-downcast warning) on the checked-in fixture, then dtype
+flow through ``run(Scenario(trace=SwfTrace(...)))`` including the
+int64 -> int32 downcast in ``make_jobset``."""
 
 import os
+import tempfile
 
 import numpy as np
 import pytest
 
 from repro import api
 from repro.api import Scenario, SwfTrace, run, run_ref
-from repro.traces import load_swf
+from repro.traces import dump_swf, load_swf
 
 FIXTURE = os.path.join(os.path.dirname(__file__), "data", "tiny.swf")
 
 # fixture rows surviving the loader's filters, keyed by SWF job id:
-# job 3 (runtime 0), 5 (no procs), 12 (negative runtime) are dropped, the
-# trailing short row is skipped, so 13 of 16 data rows load
+# job 3 (runtime 0) and 5 (no procs) are skipped, job 12 (status 5) is
+# cancelled, the trailing short row is quarantined, so 13 of 17 load
 KEPT_JOBS = 13
 
 
-def test_load_swf_filters_and_dtypes():
-    t = load_swf(FIXTURE)
+def test_load_swf_filters_dtypes_and_report():
+    t, rep = load_swf(FIXTURE)
     assert set(t) == {"submit", "runtime", "nodes", "estimate"}
     for key in t:
         assert t[key].dtype == np.int64, key
         assert len(t[key]) == KEPT_JOBS
-    # submit times are raw (unnormalized) seconds from the log
-    assert t["submit"][0] == 1000
-    # cancelled rows (ids 3, 5, 12) are gone: no zero/negative runtimes
+    # ingest taxonomy is fully accounted: every line is loaded, skipped,
+    # cancelled, or quarantined
+    assert rep.n_lines == 17
+    assert rep.n_jobs == KEPT_JOBS
+    assert rep.n_skipped == 2        # runtime 0 / zero procs
+    assert rep.n_cancelled == 1      # SWF status 5
+    assert rep.n_quarantined == 1    # trailing short row
+    assert rep.n_jobs + rep.n_skipped + rep.n_cancelled + rep.n_quarantined \
+        == rep.n_lines
+    assert any("fields" in reason for _, reason in rep.examples)
+    # submit times are rebased to the earliest kept submit (t0 recorded)
+    assert rep.t0 == 1000
+    assert t["submit"][0] == 0
+    assert rep.int32_safe
+    # cancelled / zero-runtime rows are gone: no zero/negative values
     assert (t["runtime"] > 0).all() and (t["nodes"] > 0).all()
+    assert "13 jobs loaded" in rep.summary()
+
+
+def test_load_swf_no_rebase_keeps_raw_submits():
+    t, rep = load_swf(FIXTURE, rebase=False)
+    assert t["submit"][0] == 1000
+    assert rep.t0 == 1000
 
 
 def test_load_swf_field_fallbacks():
-    t = load_swf(FIXTURE)
+    t, _ = load_swf(FIXTURE)
     # job 2: requested procs <= 0 -> allocated procs (field 5) used
     assert t["nodes"][1] == 2
     # job 9: requested procs (4) preferred over allocated (2)
@@ -43,13 +64,59 @@ def test_load_swf_field_fallbacks():
 
 
 def test_load_swf_gz_identical_and_max_jobs():
-    plain = load_swf(FIXTURE)
-    gz = load_swf(FIXTURE + ".gz")
+    plain, _ = load_swf(FIXTURE)
+    gz, _ = load_swf(FIXTURE + ".gz")
     for key in plain:
         np.testing.assert_array_equal(plain[key], gz[key])
-    head = load_swf(FIXTURE, max_jobs=5)
-    assert len(head["submit"]) == 5
+    head, rep = load_swf(FIXTURE, max_jobs=5)
+    assert len(head["submit"]) == 5 and rep.n_jobs == 5
     np.testing.assert_array_equal(head["nodes"], plain["nodes"][:5])
+
+
+def test_load_swf_quarantines_bad_lines_lenient_raises_strict(tmp_path):
+    """Negative submits and non-numeric fields are quarantined (with the
+    offending line number) in lenient mode and raise in strict mode."""
+    p = tmp_path / "bad.swf"
+    p.write_text(
+        "; header\n"
+        "1 -50 0 10 1 -1 -1 1 10 -1 1 -1 -1 -1 -1 -1 -1 -1\n"
+        "2 0 0 10 1 -1 -1 1 10 -1 1 -1 -1 -1 -1 -1 -1 -1\n"
+        "3 5 0 oops 1 -1 -1 1 10 -1 1 -1 -1 -1 -1 -1 -1 -1\n")
+    t, rep = load_swf(str(p))
+    assert rep.n_jobs == 1 and rep.n_quarantined == 2
+    assert len(t["submit"]) == 1
+    assert any("negative submit" in reason for _, reason in rep.examples)
+    assert any("non-numeric" in reason for _, reason in rep.examples)
+    with pytest.raises(ValueError, match=r"bad\.swf:2: negative submit"):
+        load_swf(str(p), strict=True)
+
+
+def test_load_swf_int32_downcast_warning(tmp_path):
+    """Values past int32 load fine (int64 arrays) but warn that the engine's
+    downcast would truncate; the report records int32_safe=False."""
+    p = tmp_path / "big.swf"
+    p.write_text(
+        f"1 {2 ** 31} 0 10 1 -1 -1 1 10 -1 1 -1 -1 -1 -1 -1 -1 -1\n"
+        "2 0 0 10 1 -1 -1 1 10 -1 1 -1 -1 -1 -1 -1 -1 -1\n")
+    with pytest.warns(UserWarning, match="int32"):
+        t, rep = load_swf(str(p), rebase=False)
+    assert not rep.int32_safe
+    assert t["submit"].max() == 2 ** 31
+
+
+def test_dump_swf_round_trip(tmp_path):
+    """dump_swf -> load_swf is the identity on the kept columns (the CI
+    smoke uses this to materialize synthetic archives)."""
+    from repro.traces import synthetic_trace
+    t = synthetic_trace(n_jobs=200, seed=11)
+    path = str(tmp_path / "rt.swf.gz")
+    n = dump_swf(path, t, comment="round-trip fixture")
+    assert n == 200
+    back, rep = load_swf(path, rebase=False)
+    assert rep.n_jobs == 200 and rep.n_quarantined == 0
+    for key in ("submit", "runtime", "nodes", "estimate"):
+        np.testing.assert_array_equal(
+            np.asarray(t[key], dtype=np.int64), back[key])
 
 
 def test_swf_scenario_end_to_end():
@@ -86,9 +153,8 @@ def test_swf_scenario_gz_and_topology():
 
 def test_swf_downcast_overflow_guard():
     """Traces whose horizon would overflow the int32 sentinel are rejected
-    by make_jobset rather than silently wrapped."""
-    import tempfile
-
+    by make_jobset rather than silently wrapped (streaming replay is the
+    supported path for such archives)."""
     with tempfile.NamedTemporaryFile("w", suffix=".swf", delete=False) as fh:
         f = ["1", str(2 ** 31), "0", "10", "1", "-1", "-1", "1", "10", "-1",
              "1"] + ["-1"] * 7

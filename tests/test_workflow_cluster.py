@@ -261,13 +261,15 @@ def test_simulate_window_release_lands_in_a_later_round():
     rounds_with_release = 0
     prev_done = 0
     for r in range(20):
-        state = simulate_window(np.int32(POLICY_IDS["fcfs"]), jobs, state,
-                                np.int32((r + 1) * W), ev_cap)
+        state, sat = simulate_window(np.int32(POLICY_IDS["fcfs"]), jobs, state,
+                                     np.int32((r + 1) * W), ev_cap)
+        assert not bool(sat)
         n_done = int((np.asarray(state.jstate) == DONE).sum())
         rounds_with_release += n_done > prev_done
         prev_done = n_done
-    state = simulate_window(np.int32(POLICY_IDS["fcfs"]), jobs, state,
-                            np.int32(INF_TIME), ev_cap)
+    state, sat = simulate_window(np.int32(POLICY_IDS["fcfs"]), jobs, state,
+                                 np.int32(INF_TIME), ev_cap)
+    assert not bool(sat)
     assert rounds_with_release >= 3          # releases really did span rounds
     np.testing.assert_array_equal(np.asarray(state.start),
                                   np.asarray(one_shot.start))
@@ -287,10 +289,12 @@ def test_simulate_window_with_alloc_ctx_and_deps():
     ev_cap = 8 * jobs.capacity + 8
     state = SimState.init(jobs, 16, machine=machine, event_log=ev_cap)
     for r in range(40):
-        state = simulate_window(np.int32(POLICY_IDS["backfill"]), jobs, state,
-                                np.int32((r + 1) * 25), ev_cap, ctx)
-    state = simulate_window(np.int32(POLICY_IDS["backfill"]), jobs, state,
-                            np.int32(INF_TIME), ev_cap, ctx)
+        state, sat = simulate_window(np.int32(POLICY_IDS["backfill"]), jobs,
+                                     state, np.int32((r + 1) * 25), ev_cap, ctx)
+        assert not bool(sat)
+    state, sat = simulate_window(np.int32(POLICY_IDS["backfill"]), jobs, state,
+                                 np.int32(INF_TIME), ev_cap, ctx)
+    assert not bool(sat)
     np.testing.assert_array_equal(np.asarray(state.start),
                                   np.asarray(one_shot.start))
     np.testing.assert_array_equal(np.asarray(state.alloc_sum),
