@@ -19,7 +19,8 @@ import traceback
 from benchmarks import (
     des_throughput, fig3_occupancy, fig4_policies, fig4_wait, fig5_scaling,
     fig6_workflow_scaling, fig7_workflow_wait, fig_alloc, fig_malleable,
-    fig_reliability, fig_serving, fig_workflow_cluster, roofline_table,
+    fig_reliability, fig_serving, fig_whatif, fig_workflow_cluster,
+    roofline_table,
 )
 
 BENCHES = [
@@ -34,6 +35,7 @@ BENCHES = [
     ("fig_reliability", fig_reliability),
     ("fig_serving", fig_serving),
     ("fig_malleable", fig_malleable),
+    ("fig_whatif", fig_whatif),
     ("des_throughput", des_throughput),
     ("roofline_table", roofline_table),
 ]

@@ -1,0 +1,77 @@
+"""Asking what-if questions: the capacity-planning query service.
+
+A :class:`repro.service.CapacityPlanner` loads a fleet of named queue
+scenarios once and answers versioned, JSON-round-trippable queries —
+"where should this job run", "what happens to p99 wait if we add 64
+nodes", "which MTBF budget meets a goodput target" — by lowering each
+onto the existing ``sweep()`` API (DESIGN.md §20).  Because scenario
+buckets reuse the persistent compiled executables, the first query of
+each shape pays the XLA compile and every later one runs in
+milliseconds; the per-answer ``cache`` counters make that visible.
+
+The same planner serves over stdlib HTTP:
+``python -m repro.service --demo`` (see tests/test_service.py's smoke).
+
+    PYTHONPATH=src python examples/whatif_queries.py
+"""
+
+from repro.service import (
+    CapacityPlanner, JobRequest, Objective, ScenarioDelta, WhatIfQuery,
+    demo_fleet,
+)
+
+planner = CapacityPlanner(demo_fleet())
+
+status = planner.fleet_status()
+print("fleet:")
+for name, q in status["queues"].items():
+    s = q["summary"]
+    print(f"  {name:6s} {q['total_nodes']:4d} nodes  policy={q['policy']:9s}"
+          f" util={s['utilization']:.2f}  p99_wait={s['p99_wait']:.0f}s")
+
+# -- where should this job run? ---------------------------------------------
+job = JobRequest(submit=0, runtime=1800, nodes=24)
+ans = planner.answer(WhatIfQuery(kind="placement", job=job))
+print(f"\nplace a {job.nodes}-node, {job.runtime}s job "
+      f"-> {ans['recommended']!r}")
+for rec in ans["recommendations"]:
+    print(f"  #{rec['rank']} {rec['label']:6s} candidate waits "
+          f"{rec['value']:.0f}s")
+
+# every query round-trips through its canonical JSON form byte-for-byte —
+# what goes over the wire is exactly what the planner answers
+wire = ans and WhatIfQuery(kind="placement", job=job).to_json()
+assert WhatIfQuery.from_json(wire).to_json() == wire
+
+# -- what happens to p99 wait if we add nodes? ------------------------------
+ans = planner.answer(WhatIfQuery(
+    kind="capacity", queue="batch",
+    deltas=(ScenarioDelta(),
+            ScenarioDelta(add_nodes=32),
+            ScenarioDelta(add_nodes=64),
+            ScenarioDelta(add_nodes=64, policy="backfill"))))
+print("\ngrow the batch queue (objective: min p99_wait):")
+for rec in ans["recommendations"]:
+    print(f"  #{rec['rank']} {rec['label']:24s} p99_wait={rec['value']:8.0f}s"
+          f"  ({rec['delta']:+.0f}s vs as-is)")
+print(f"  cache: {ans['cache']['compiles']} compiles, "
+      f"{ans['cache']['hits']} hits")
+
+# -- which MTBF budget meets a goodput target? ------------------------------
+ans = planner.answer(WhatIfQuery(
+    kind="reliability", queue="flaky",
+    mtbf_grid=(500e3, 1000e3, 2000e3, 4000e3),
+    objective=Objective(metric="goodput", goal="max", target=0.85)))
+print("\nMTBF budget for goodput >= 0.85 on the flaky queue "
+      f"-> {ans['recommended']!r}")
+for rec in ans["recommendations"]:
+    mark = "meets" if rec["meets_target"] else "misses"
+    print(f"  #{rec['rank']} {rec['label']:14s} goodput={rec['value']:.3f}"
+          f"  ({mark} target)")
+
+# a repeated query (new candidate values, same shapes) is pure cache hits
+ans = planner.answer(WhatIfQuery(
+    kind="placement", job=JobRequest(submit=300, runtime=60, nodes=4)))
+assert ans["cache"]["compiles"] == 0, ans["cache"]
+print(f"\nrepeat placement query: {ans['cache']['hits']} cache hits, "
+      "0 compiles")

@@ -22,14 +22,14 @@ import importlib
 _SUBMODULES = frozenset({
     "alloc", "api", "ckpt", "configs", "core", "data", "kernels", "launch",
     "malleable", "models", "optim", "refsim", "reliability", "replay",
-    "runtime", "serving", "sharding", "traces",
+    "runtime", "service", "serving", "sharding", "traces",
 })
 
 # names re-exported from repro.api on first access
 _API_NAMES = frozenset({
-    "ArrayTrace", "AutoscalePolicy", "FailureModel", "MalleableModel",
-    "Multicluster", "Result", "Scenario", "ServiceClass", "ServiceTrace",
-    "SweepResult", "SwfTrace", "SyntheticTrace", "Topology",
+    "ArrayTrace", "AutoscalePolicy", "FailureModel", "InjectedTrace",
+    "MalleableModel", "Multicluster", "Result", "Scenario", "ServiceClass",
+    "ServiceTrace", "SweepResult", "SwfTrace", "SyntheticTrace", "Topology",
     "WorkflowTrace", "run", "run_ref", "sweep",
 })
 

@@ -24,18 +24,21 @@ New scenario axes are one-field additions to :class:`Scenario` — not new
 from repro.api.result import Result, simresult_to_np
 from repro.api.run import build_jobset, run, run_ref
 from repro.api.scenario import (
-    ArrayTrace, Multicluster, Scenario, SwfTrace, SyntheticTrace, Topology,
-    TRACED_AXES, WorkflowTrace, as_trace_spec,
+    ArrayTrace, InjectedTrace, Multicluster, Scenario, SwfTrace,
+    SyntheticTrace, Topology, TRACED_AXES, WorkflowTrace, as_trace_spec,
 )
-from repro.api.sweep import SweepResult, sweep
+from repro.api.sweep import (
+    SweepCacheStats, SweepResult, cache_stats, reset_cache_stats, sweep,
+)
 from repro.malleable import MalleableModel
 from repro.reliability import FailureModel
 from repro.serving import AutoscalePolicy, ServiceClass, ServiceTrace
 
 __all__ = [
-    "ArrayTrace", "AutoscalePolicy", "FailureModel", "MalleableModel",
-    "Multicluster", "Result", "Scenario", "ServiceClass", "ServiceTrace",
-    "SweepResult", "SwfTrace", "SyntheticTrace", "Topology", "TRACED_AXES",
-    "WorkflowTrace", "as_trace_spec", "build_jobset", "run", "run_ref",
-    "simresult_to_np", "sweep",
+    "ArrayTrace", "AutoscalePolicy", "FailureModel", "InjectedTrace",
+    "MalleableModel", "Multicluster", "Result", "Scenario", "ServiceClass",
+    "ServiceTrace", "SweepCacheStats", "SweepResult", "SwfTrace",
+    "SyntheticTrace", "Topology", "TRACED_AXES", "WorkflowTrace",
+    "as_trace_spec", "build_jobset", "cache_stats", "reset_cache_stats",
+    "run", "run_ref", "simresult_to_np", "sweep",
 ]

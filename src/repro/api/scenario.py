@@ -246,14 +246,128 @@ class ArrayTrace:
         return len(np.asarray(self.submit))
 
 
+@dataclasses.dataclass(frozen=True)
+class InjectedTrace:
+    """A base trace spec plus appended *candidate* jobs (DESIGN.md §20).
+
+    The what-if service's "where should this job run" queries need to add
+    a hypothetical job to an existing workload without tearing the sweep
+    compile cache: the injected job *values* are trace data (vmap leaves),
+    and only the injected job *count* changes compiled shapes.
+    ``static_key`` is therefore ``(base static key, len(jobs))`` — every
+    placement query against the same base workload with the same number of
+    candidates reuses one cached executable.
+
+    ``jobs`` is a tuple of ``(submit, runtime, nodes, estimate, priority)``
+    tuples (``estimate``/``priority`` may be None); rows are appended after
+    the base trace in input order, so with equal submit times the candidate
+    sorts *behind* every incumbent — a what-if query never jumps the queue.
+    Base dependency edges (pair lists or dense matrices) are preserved;
+    injected jobs are always dependency-free.
+    """
+
+    base: Any                    # a TraceSpec (not ServiceTrace)
+    jobs: Tuple[Tuple[Optional[int], ...], ...]
+
+    def __post_init__(self):
+        base = as_trace_spec(self.base)
+        if isinstance(base, ServiceTrace):
+            raise ValueError(
+                "InjectedTrace cannot wrap a ServiceTrace: open-arrival "
+                "plans carry their own padded job table (inject the "
+                "candidate through ServiceTrace.arrivals instead)")
+        object.__setattr__(self, "base", base)
+        norm = []
+        for j in self.jobs:
+            j = tuple(j) + (None,) * (5 - len(j))
+            if len(j) != 5:
+                raise ValueError(
+                    "injected jobs are (submit, runtime, nodes[, estimate"
+                    f"[, priority]]) tuples; got {j!r}")
+            submit, runtime, nodes = (int(j[0]), int(j[1]), int(j[2]))
+            if runtime < 1 or nodes < 1:
+                raise ValueError(
+                    f"injected job needs runtime >= 1 and nodes >= 1; "
+                    f"got runtime={runtime}, nodes={nodes}")
+            if submit < 0:
+                raise ValueError(
+                    f"injected job submit must be >= 0, got {submit} "
+                    "(make_jobset re-zeroes the trace on its minimum "
+                    "submit; an earlier candidate would shift every "
+                    "incumbent timestamp)")
+            est = None if j[3] is None else int(j[3])
+            pri = None if j[4] is None else int(j[4])
+            norm.append((submit, runtime, nodes, est, pri))
+        if not norm:
+            raise ValueError("InjectedTrace needs at least one injected job")
+        object.__setattr__(self, "jobs", tuple(norm))
+
+    def materialize(self) -> Dict[str, np.ndarray]:
+        t = dict(self.base.materialize())
+        k = len(self.jobs)
+        sub = np.asarray(t["submit"], dtype=np.int64)
+        run = np.asarray(t["runtime"], dtype=np.int64)
+        j_sub = np.asarray([j[0] for j in self.jobs], dtype=np.int64)
+        j_run = np.asarray([j[1] for j in self.jobs], dtype=np.int64)
+        j_nod = np.asarray([j[2] for j in self.jobs], dtype=np.int64)
+        out = {
+            "submit": np.concatenate([sub, j_sub]),
+            "runtime": np.concatenate([run, j_run]),
+            "nodes": np.concatenate(
+                [np.asarray(t["nodes"], dtype=np.int64), j_nod]),
+        }
+        # optional columns exist iff the base carries them OR an injected
+        # job sets them; the base default mirrors make_jobset (estimate ==
+        # runtime, priority == 0)
+        j_est = [j[3] for j in self.jobs]
+        if "estimate" in t or any(e is not None for e in j_est):
+            base_est = np.asarray(t.get("estimate", run), dtype=np.int64)
+            inj = np.asarray(
+                [e if e is not None else r
+                 for e, r in zip(j_est, j_run)], dtype=np.int64)
+            out["estimate"] = np.concatenate([base_est, inj])
+        j_pri = [j[4] for j in self.jobs]
+        if "priority" in t or any(p is not None for p in j_pri):
+            base_pri = np.asarray(
+                t.get("priority", np.zeros(len(sub))), dtype=np.int64)
+            inj = np.asarray([p if p is not None else 0 for p in j_pri],
+                             dtype=np.int64)
+            out["priority"] = np.concatenate([base_pri, inj])
+        deps = t.get("deps")
+        if deps is not None:
+            dm = np.asarray(deps)
+            if dm.ndim == 2 and dm.dtype == bool:
+                # dense matrix: pad k all-False rows/cols (injected jobs
+                # neither depend on nor release anything)
+                n = dm.shape[0]
+                padded = np.zeros((n + k, n + k), dtype=bool)
+                padded[:n, :n] = dm
+                out["deps"] = padded
+            else:
+                # (job, dependency) pairs index the base's input order,
+                # which appending at the tail leaves untouched
+                out["deps"] = deps
+        return out
+
+    def static_key(self):
+        """Base key + injected COUNT: the candidate jobs' values are vmap
+        data, only how many rows they add is a compiled shape."""
+        return ("inject", self.base.static_key(), len(self.jobs))
+
+    @property
+    def n_rows(self) -> Optional[int]:
+        base = self.base.n_rows
+        return None if base is None else base + len(self.jobs)
+
+
 TraceSpec = Union[SyntheticTrace, SwfTrace, ArrayTrace, WorkflowTrace,
-                  ServiceTrace]
+                  ServiceTrace, InjectedTrace]
 
 
 def as_trace_spec(trace) -> TraceSpec:
     """Accept a spec, a plain dict-of-arrays, or an .swf path string."""
     if isinstance(trace, (SyntheticTrace, SwfTrace, ArrayTrace,
-                          WorkflowTrace, ServiceTrace)):
+                          WorkflowTrace, ServiceTrace, InjectedTrace)):
         return trace
     if isinstance(trace, dict):
         return ArrayTrace.from_dict(trace)

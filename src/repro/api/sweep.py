@@ -177,6 +177,79 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence[Any]], *,
 # topology of a given shape; distinct shapes retrace automatically.
 
 
+# ---------------------------------------------------------------------------
+# public cache statistics (DESIGN.md §20)
+# ---------------------------------------------------------------------------
+
+# The what-if query service (repro.service) promises that repeated queries
+# against one scenario bucket pay the XLA compile exactly once.  That
+# contract needs to be *assertable*, so every `_run_bucket` execution is
+# logged against its compile signature — the `_bucket_fn` cache key plus
+# the batched argument treedef and leaf shapes/dtypes, i.e. exactly what
+# determines whether jit reuses an executable or compiles a new one.  A
+# signature seen before counts as a `hit` (warm), a new one as a `compile`
+# (cold).  Stats cover the batched bucket runners only: `sweep(s, axes={})`
+# degenerates to `run()` and multicluster buckets run point-wise, neither
+# of which goes through the shared executable cache.
+
+_CACHE_LOG = {"compiles": 0, "hits": 0}
+_SEEN_SIGNATURES: set = set()
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCacheStats:
+    """Warm-vs-cold executable counters for the shared sweep bucket cache.
+
+    ``compiles`` counts bucket executions whose compile signature had not
+    been seen since the last ``reset_cache_stats(clear=True)`` (cold path:
+    trace + XLA compile); ``hits`` counts executions that reused a known
+    signature (warm path: milliseconds).  ``entries`` is the number of
+    distinct live signatures.
+    """
+
+    compiles: int
+    hits: int
+    entries: int
+
+
+def cache_stats() -> SweepCacheStats:
+    """Current warm-vs-cold counters for the sweep executable cache."""
+    return SweepCacheStats(compiles=_CACHE_LOG["compiles"],
+                           hits=_CACHE_LOG["hits"],
+                           entries=len(_SEEN_SIGNATURES))
+
+
+def reset_cache_stats(*, clear: bool = False) -> None:
+    """Zero the warm/cold counters.
+
+    With ``clear=False`` (default) the cached bucket runners — and the
+    signature set that marks them warm — survive, so subsequent reuse still
+    counts as hits; this is how a long-running service zeroes per-query
+    deltas.  ``clear=True`` additionally drops the cached runner functions
+    (``_bucket_fn.cache_clear()``) and the signature set, so the next query
+    genuinely recompiles — the cold-path fixture for benchmarks and tests.
+    """
+    _CACHE_LOG["compiles"] = 0
+    _CACHE_LOG["hits"] = 0
+    if clear:
+        _SEEN_SIGNATURES.clear()
+        _bucket_fn.cache_clear()
+
+
+def _log_bucket_execution(fn_key: tuple, args: tuple, machine) -> None:
+    leaves, treedef = jax.tree.flatten((args, machine))
+    sig = (fn_key, str(treedef),
+           tuple((tuple(np.shape(leaf)),
+                  np.dtype(getattr(leaf, "dtype",
+                                   np.asarray(leaf).dtype)).str)
+                 for leaf in leaves))
+    if sig in _SEEN_SIGNATURES:
+        _CACHE_LOG["hits"] += 1
+    else:
+        _SEEN_SIGNATURES.add(sig)
+        _CACHE_LOG["compiles"] += 1
+
+
 @functools.lru_cache(maxsize=None)
 def _bucket_fn(with_alloc: bool, with_fail: bool, with_svc: bool,
                with_mal: bool, max_events: Optional[int],
@@ -316,8 +389,10 @@ def _run_bucket(bucket: List[Scenario], mesh: Optional[Mesh]) -> List[Result]:
         args = args + (jax.tree.map(lambda *xs: jnp.stack(xs), *mctxs),)
 
     axis = mesh.axis_names[0] if mesh is not None else None
-    fn = _bucket_fn(machine is not None, with_fail, with_svc, with_mal,
-                    max_events, mesh, axis, static_pol, static_alloc)
+    fn_key = (machine is not None, with_fail, with_svc, with_mal,
+              max_events, mesh, axis, static_pol, static_alloc)
+    fn = _bucket_fn(*fn_key)
+    _log_bucket_execution(fn_key, args, machine)
     if mesh is not None:
         shard = NamedSharding(mesh, P(axis))
         args = tuple(jax.device_put(a, shard) for a in args)

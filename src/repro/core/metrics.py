@@ -291,6 +291,70 @@ def malleable_summary(res) -> Dict[str, float]:
     }
 
 
+def compare_summaries(baseline: Dict[str, float],
+                      candidate: Dict[str, float],
+                      keys=None) -> Dict[str, float]:
+    """Per-metric deltas between two scalar-summary dicts (DESIGN.md §20).
+
+    Returns ``{key: candidate[key] - baseline[key]}`` over the shared
+    numeric keys (or the explicit ``keys``).  NaNs propagate — an empty
+    percentile on either side yields a NaN delta, which ``rank_candidates``
+    sorts last.  This is the "metric deltas that justify it" half of a
+    what-if recommendation row.
+    """
+    if keys is None:
+        keys = [k for k in candidate
+                if k in baseline
+                and isinstance(candidate[k], (int, float))
+                and isinstance(baseline[k], (int, float))]
+    return {k: float(candidate[k]) - float(baseline[k]) for k in keys}
+
+
+def rank_candidates(rows, metric: str, *, goal: str = "min",
+                    baseline: Dict[str, float] = None,
+                    target: float = None):
+    """Rank ``(label, summary)`` candidates into recommendation dicts.
+
+    ``goal`` is ``"min"`` (smaller is better, e.g. p99 wait) or ``"max"``
+    (e.g. goodput).  Each output row carries ``rank`` (1 = best),
+    ``label``, ``metric``, ``value``, and — when a ``baseline`` summary is
+    given — ``baseline`` and ``delta`` (value - baseline).  With a
+    ``target``, ``meets_target`` marks rows at-or-better than it; ranking
+    is unchanged (the caller picks "cheapest meeting target" by its own
+    cost order).  NaN values rank last at their input order.
+    """
+    if goal not in ("min", "max"):
+        raise ValueError(f"goal must be 'min' or 'max', got {goal!r}")
+    rows = list(rows)
+    for label, summ in rows:
+        if metric not in summ:
+            raise KeyError(
+                f"candidate {label!r} summary has no metric {metric!r}; "
+                f"available: {sorted(summ)}")
+    sign = 1.0 if goal == "min" else -1.0
+
+    def sort_key(item):
+        i, (_, summ) = item
+        v = float(summ[metric])
+        return (1, 0.0, i) if np.isnan(v) else (0, sign * v, i)
+
+    ranked = sorted(enumerate(rows), key=sort_key)
+    out = []
+    for rank, (_, (label, summ)) in enumerate(ranked, start=1):
+        v = float(summ[metric])
+        row = {"rank": rank, "label": label, "metric": metric, "value": v}
+        if baseline is not None and metric in baseline:
+            base_v = float(baseline[metric])
+            row["baseline"] = base_v
+            row["delta"] = v - base_v
+        if target is not None:
+            row["meets_target"] = bool(
+                not np.isnan(v)
+                and (v <= target if goal == "min" else v >= target))
+        out.append(row)
+    return out
+
+
 def summary(res, total_nodes: int) -> Dict[str, float]:
     """Scalar metrics used by the five-policy comparison (paper Fig. 4b).
 

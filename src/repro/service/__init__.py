@@ -1,0 +1,38 @@
+"""What-if capacity-planning query service (DESIGN.md §20).
+
+A long-running process loads a *fleet* of named queue
+:class:`~repro.api.Scenario`\\ s once and answers versioned, JSON-round-
+trippable :class:`WhatIfQuery` documents — "where should this job run",
+"what happens to p99 wait if we add 64 nodes", "which MTBF budget meets a
+goodput target" — by lowering each query onto the existing ``sweep()``
+API, so scenario buckets reuse the persistent compiled executables across
+queries (assertable via :func:`repro.api.cache_stats`).
+
+    from repro import service
+
+    planner = service.CapacityPlanner(service.demo_fleet())
+    q = service.WhatIfQuery(kind="capacity", queue="batch",
+                            deltas=(service.ScenarioDelta(add_nodes=64),))
+    print(planner.answer(q)["recommendations"][0])
+
+``python -m repro.service --demo`` (or ``--fleet fleet.json``) serves the
+same planner over stdlib HTTP — see :mod:`repro.service.http`.
+"""
+
+from repro.service.http import WhatIfServer, demo_fleet, main, make_server
+from repro.service.planner import (
+    CapacityPlanner, UnknownQueueError, candidate_outcome, enriched_summary,
+)
+from repro.service.query import (
+    JobRequest, Objective, SCHEMA_VERSION, ScenarioDelta, SchemaError,
+    WhatIfQuery, apply_delta, canonical_dumps, fleet_from_json,
+    fleet_to_json, scenario_from_json, scenario_to_json,
+)
+
+__all__ = [
+    "CapacityPlanner", "JobRequest", "Objective", "SCHEMA_VERSION",
+    "ScenarioDelta", "SchemaError", "UnknownQueueError", "WhatIfQuery",
+    "WhatIfServer", "apply_delta", "candidate_outcome", "canonical_dumps",
+    "demo_fleet", "enriched_summary", "fleet_from_json", "fleet_to_json",
+    "main", "make_server", "scenario_from_json", "scenario_to_json",
+]

@@ -1,0 +1,3 @@
+from repro.service.http import main
+
+raise SystemExit(main())

@@ -150,3 +150,55 @@ def test_smoke_run_emits_valid_schema(tmp_path):
         on_disk = json.load(f)
     validate_bench_report(on_disk)
     assert on_disk["cases"].keys() == report["cases"].keys()
+
+
+# -- what-if service benchmark (ISSUE 10) -----------------------------------
+
+WHATIF_JSON = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "fig_whatif.json")
+
+WHATIF_FAMILIES = ("placement", "capacity", "reliability")
+
+
+def validate_whatif_report(report: dict) -> None:
+    """The cold/warm amortization contract, pinned on the artifact:
+    every family carries both paths, the cold path compiled at least
+    once, the warm path compiled exactly ZERO times and was no slower
+    than cold — a static-key regression that re-compiles per query can
+    never check in a passing artifact."""
+    validate_bench_report(report)
+    assert report["generated_unix"] > 1e9
+    assert report["finished_unix"] >= report["generated_unix"]
+    for family in WHATIF_FAMILIES:
+        cold = report["cases"][f"{family}_cold"]
+        warm = report["cases"][f"{family}_warm"]
+        assert cold["compiles"] >= 1, family
+        assert warm["compiles"] == 0, (
+            f"{family}: warm queries recompiled — the persistent "
+            "executable cache regressed")
+        assert warm["hits"] >= 1, family
+        assert warm["run_s"] <= cold["run_s"], (
+            f"{family}: warm {warm['run_s']:.3f}s slower than cold "
+            f"{cold['run_s']:.3f}s")
+        assert warm["n_queries"] == cold["n_queries"] > 0, family
+
+
+def test_checked_in_whatif_artifact():
+    if not os.path.exists(WHATIF_JSON):
+        pytest.skip("no committed fig_whatif.json")
+    with open(WHATIF_JSON) as f:
+        report = json.load(f)
+    validate_whatif_report(report)
+
+
+@pytest.mark.slow
+def test_whatif_smoke_run_emits_valid_schema(tmp_path):
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.fig_whatif import _run
+
+    _run(smoke=True, outdir=str(tmp_path))
+    with open(tmp_path / "fig_whatif.json") as f:
+        on_disk = json.load(f)
+    validate_whatif_report(on_disk)
+    assert on_disk["smoke"] is True

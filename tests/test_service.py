@@ -1,0 +1,486 @@
+"""What-if service tests (DESIGN.md §20; ISSUE 10).
+
+The load-bearing guarantee is *differential*: every service answer must be
+bit-exact against running the lowered scenario directly — ``run()`` (JAX
+engine) AND ``run_ref()`` (host reference simulator) of
+``apply_delta(base, delta)``.  The service is then pure plumbing over the
+proven engines and can never invent numbers.
+
+Also covered: the sweep executable-cache contract (repeated same-bucket
+queries compile exactly once; bucket-splitting deltas split as predicted),
+strict JSON round trips against a versioned golden fixture, and an
+end-to-end HTTP smoke test running ``python -m repro.service`` in a
+subprocess (skips, not fails, on slow containers — tune
+``REPRO_SERVICE_TIMEOUT``).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro import api, service
+from repro.api import (
+    FailureModel, Scenario, SyntheticTrace, Topology, cache_stats,
+    reset_cache_stats, run, run_ref,
+)
+from repro.service import (
+    CapacityPlanner, JobRequest, Objective, ScenarioDelta, SchemaError,
+    WhatIfQuery, apply_delta, canonical_dumps,
+)
+
+SUBPROC_TIMEOUT = int(os.environ.get("REPRO_SERVICE_TIMEOUT", "240"))
+
+DATA = os.path.join(os.path.dirname(__file__), "data",
+                    "whatif_queries_v1.json")
+
+
+def base_scenario(policy="fcfs", topo=False, failures=False,
+                  n_jobs=60, seed=0):
+    kw = {}
+    if topo:
+        kw.update(topology=Topology.mesh2d(4, 8), alloc="contiguous")
+    else:
+        kw.update(total_nodes=32)
+    if failures:
+        kw.update(failures=FailureModel(mtbf=300_000.0, seed=3,
+                                        max_failures=64))
+    return Scenario(trace=SyntheticTrace(n_jobs=n_jobs, seed=seed,
+                                         kind="sdsc_sp2"),
+                    policy=policy, **kw)
+
+
+def assert_differential(planner, query, fleet):
+    """Every evaluated point must be bit-exact vs direct run()/run_ref()
+    of the independently lowered scenario."""
+    points = planner.evaluate(query)
+    assert points
+    for p in points:
+        if p.get("infeasible"):
+            continue
+        scn = p["scenario"]
+        direct = run(scn)
+        assert p["result"].matches(direct), p["label"]
+        assert direct.matches(run_ref(scn)), p["label"]
+        # and the lowering itself is reproducible from the query alone
+        if p.get("delta") is not None:
+            assert apply_delta(fleet[p["queue"]], p["delta"]) == scn
+    return points
+
+
+# ---------------------------------------------------------------------------
+# differential harness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["fcfs", "sjf", "backfill"])
+@pytest.mark.parametrize("topo", [False, True])
+@pytest.mark.parametrize("failures", [False, True])
+def test_differential_grid(policy, topo, failures):
+    """Every query family, bit-exact vs run()+run_ref(), across
+    {fcfs, sjf, backfill} x {scalar, mesh2d+contiguous} x {failures}."""
+    base = base_scenario(policy, topo=topo, failures=failures)
+    fleet = {"q": base}
+    planner = CapacityPlanner(fleet)
+
+    job = JobRequest(submit=50, runtime=400, nodes=8)
+    assert_differential(
+        planner, WhatIfQuery(kind="placement", job=job), fleet)
+
+    deltas = [ScenarioDelta(), ScenarioDelta(policy="fcfs"),
+              ScenarioDelta(inject=(job, JobRequest(submit=0, runtime=100,
+                                                    nodes=4)))]
+    if topo:
+        deltas.append(ScenarioDelta(alloc="simple"))
+    else:
+        deltas.append(ScenarioDelta(add_nodes=32))
+    if failures:
+        deltas.append(ScenarioDelta(mtbf=150_000.0,
+                                    checkpoint_interval=500))
+    pts = assert_differential(
+        planner, WhatIfQuery(kind="capacity", queue="q",
+                             deltas=tuple(deltas)), fleet)
+    assert len(pts) == len(deltas)
+
+    if failures:
+        assert_differential(
+            planner, WhatIfQuery(kind="reliability", queue="q",
+                                 mtbf_grid=(100_000.0, 300_000.0),
+                                 checkpoint_grid=(0, 800)), fleet)
+
+
+def test_differential_fast_corner():
+    """One un-marked corner so the default suite always exercises the
+    differential contract: batched add_nodes grid + candidate injection
+    on a scalar backfill queue with failures."""
+    fleet = {"q": base_scenario("backfill", failures=True, n_jobs=40)}
+    planner = CapacityPlanner(fleet)
+    q = WhatIfQuery(
+        kind="capacity", queue="q",
+        deltas=(ScenarioDelta(), ScenarioDelta(add_nodes=16),
+                ScenarioDelta(add_nodes=-8),
+                ScenarioDelta(inject=(JobRequest(submit=10, runtime=200,
+                                                 nodes=6),))))
+    pts = assert_differential(planner, q, fleet)
+    ans = planner.answer(q)
+    assert [p["label"] for p in ans["points"]] == [p["label"] for p in pts]
+    assert ans["recommendations"][0]["rank"] == 1
+    assert ans["recommended"] == ans["recommendations"][0]["label"]
+    # deltas vs the baseline summary are present and consistent
+    for rec in ans["recommendations"]:
+        assert rec["delta"] == pytest.approx(
+            rec["value"] - rec["baseline"], nan_ok=True)
+
+
+def test_placement_candidate_semantics():
+    """The candidate lands at the lexsort position (behind equal-submit
+    incumbents), and its reported wait is its own row's wait in the
+    direct run."""
+    fleet = {"small": base_scenario("fcfs", n_jobs=30),
+             "big": base_scenario("fcfs", n_jobs=30, seed=1)}
+    # make "big" actually bigger
+    fleet["big"] = fleet["big"].with_(total_nodes=64)
+    planner = CapacityPlanner(fleet)
+    job = JobRequest(submit=0, runtime=300, nodes=8)
+    ans = planner.answer(WhatIfQuery(kind="placement", job=job))
+    assert set(p["queue"] for p in ans["points"]) == {"small", "big"}
+    for p in ans["points"]:
+        scn = apply_delta(fleet[p["queue"]], ScenarioDelta(inject=(job,)))
+        direct = run(scn).to_np()
+        row = p["candidate"]["row"]
+        assert p["candidate"]["wait"] == int(direct["wait"][row])
+        # appended last => sorts behind every equal-submit incumbent
+        sub = scn.trace.materialize()["submit"]
+        assert row == int(np.sum(np.asarray(sub) <= job.submit) - 1)
+    assert ans["recommended"] in ("small", "big")
+
+
+def test_placement_infeasible_queue_excluded():
+    fleet = {"small": base_scenario(n_jobs=20),
+             "big": base_scenario(n_jobs=20).with_(total_nodes=256)}
+    planner = CapacityPlanner(fleet)
+    ans = planner.answer(WhatIfQuery(
+        kind="placement", job=JobRequest(submit=0, runtime=50, nodes=100)))
+    by_queue = {p["queue"]: p for p in ans["points"]}
+    assert "infeasible" in by_queue["small"]
+    assert ans["recommended"] == "big"
+    # every queue too small => structured error, not a clamped answer
+    with pytest.raises(SchemaError):
+        planner.answer(WhatIfQuery(
+            kind="placement", job=JobRequest(submit=0, runtime=50,
+                                             nodes=9999)))
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@given(st.data())
+@settings(max_examples=15, deadline=None)
+def test_random_delta_differential(data):
+    """Property: ANY valid delta stays bit-exact vs the direct engines —
+    on the cold path (fresh planner) and the warm path (second answer)."""
+    base = base_scenario(
+        policy=data.draw(st.sampled_from(["fcfs", "sjf", "backfill"])),
+        failures=data.draw(st.booleans()), n_jobs=30,
+        seed=data.draw(st.integers(0, 3)))
+    inject = tuple(
+        JobRequest(submit=data.draw(st.integers(0, 1000)),
+                   runtime=data.draw(st.integers(1, 500)),
+                   nodes=data.draw(st.integers(1, 32)))
+        for _ in range(data.draw(st.integers(0, 2))))
+    delta = ScenarioDelta(
+        add_nodes=data.draw(st.integers(-16, 64)),
+        policy=data.draw(st.sampled_from(
+            [None, "fcfs", "sjf", "backfill"])),
+        mtbf=(data.draw(st.floats(50_000, 500_000))
+              if base.failures is not None and data.draw(st.booleans())
+              else None),
+        inject=inject)
+    fleet = {"q": base}
+    planner = CapacityPlanner(fleet)
+    query = WhatIfQuery(kind="capacity", queue="q", deltas=(delta,))
+    for attempt in ("cold", "warm"):
+        pts = planner.evaluate(query)
+        scn = pts[0]["scenario"]
+        assert scn == apply_delta(base, delta)
+        direct = run(scn)
+        assert pts[0]["result"].matches(direct), attempt
+        assert direct.matches(run_ref(scn)), attempt
+
+
+# ---------------------------------------------------------------------------
+# compile-count regression (the persistent-executable contract)
+# ---------------------------------------------------------------------------
+
+
+def test_repeated_queries_compile_once():
+    """Same-bucket queries pay the XLA compile exactly once: the first
+    answer is the only cold execution, every repeat (different candidate
+    values, same shapes) is a cache hit."""
+    fleet = {"q": base_scenario("backfill", n_jobs=40)}
+    planner = CapacityPlanner(fleet)
+    q1 = WhatIfQuery(kind="placement",
+                     job=JobRequest(submit=0, runtime=100, nodes=4))
+    planner.fleet_status()  # warm the baseline bucket first
+    reset_cache_stats()
+    ans = planner.answer(q1)
+    assert ans["cache"]["compiles"] == 1
+    assert ans["cache"]["hits"] == 0
+    # different job VALUES -> same InjectedTrace static key -> warm
+    for submit, runtime, nodes in ((50, 700, 16), (999, 1, 1)):
+        ans = planner.answer(WhatIfQuery(
+            kind="placement",
+            job=JobRequest(submit=submit, runtime=runtime, nodes=nodes)))
+        assert ans["cache"]["compiles"] == 0, (submit, runtime, nodes)
+        assert ans["cache"]["hits"] == 1
+
+
+def test_bucket_splitting_deltas():
+    """Deltas that change compiled shapes split buckets exactly as the
+    static keys predict; traced deltas do not."""
+    fleet = {"q": base_scenario("fcfs", n_jobs=40)}
+    planner = CapacityPlanner(fleet)
+    job = JobRequest(submit=0, runtime=100, nodes=4)
+
+    planner.fleet_status()  # warm the baseline bucket first
+    reset_cache_stats()
+    # policy swap: static_policy is part of the executable key -> 2 compiles
+    ans = planner.answer(WhatIfQuery(
+        kind="capacity", queue="q",
+        deltas=(ScenarioDelta(inject=(job,)),
+                ScenarioDelta(policy="sjf", inject=(job,)))))
+    assert ans["cache"]["compiles"] == 2
+
+    # injected COUNT splits the trace shape: 1 job vs 2 jobs -> new compile;
+    # repeating either count is warm
+    reset_cache_stats()
+    one = WhatIfQuery(kind="capacity", queue="q",
+                      deltas=(ScenarioDelta(inject=(job,)),))
+    two = WhatIfQuery(kind="capacity", queue="q",
+                      deltas=(ScenarioDelta(inject=(job, job)),))
+    assert planner.answer(one)["cache"] == {"compiles": 0, "hits": 1,
+                                            "entries": cache_stats().entries}
+    c = planner.answer(two)["cache"]
+    assert (c["compiles"], c["hits"]) == (1, 0)
+    c = planner.answer(two)["cache"]
+    assert (c["compiles"], c["hits"]) == (0, 1)
+
+    # a batched add_nodes grid on a scalar queue is ONE executable
+    reset_cache_stats()
+    grid = WhatIfQuery(kind="capacity", queue="q",
+                       deltas=tuple(ScenarioDelta(add_nodes=d)
+                                    for d in (0, 16, 32, 64)))
+    c = planner.answer(grid)["cache"]
+    assert (c["compiles"], c["hits"]) == (1, 0)
+    c = planner.answer(grid)["cache"]
+    assert (c["compiles"], c["hits"]) == (0, 1)
+
+
+def test_reset_cache_stats_clear_goes_cold():
+    fleet = {"q": base_scenario(n_jobs=30)}
+    planner = CapacityPlanner(fleet)
+    q = WhatIfQuery(kind="placement",
+                    job=JobRequest(submit=0, runtime=10, nodes=1))
+    planner.answer(q)
+    reset_cache_stats(clear=True)
+    assert cache_stats() == api.SweepCacheStats(0, 0, 0)
+    ans = planner.answer(q)
+    assert ans["cache"]["compiles"] == 1  # genuinely cold again
+
+
+# ---------------------------------------------------------------------------
+# JSON round trips + golden fixture
+# ---------------------------------------------------------------------------
+
+
+def test_golden_fixture_round_trips_byte_identical():
+    with open(DATA, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    assert doc["version"] == service.SCHEMA_VERSION
+    assert len(doc["queries"]) >= 3
+    kinds = set()
+    for entry in doc["queries"]:
+        text = canonical_dumps(entry)
+        q = WhatIfQuery.from_json(text)
+        kinds.add(q.kind)
+        # serialize -> deserialize -> re-serialize is byte-identical
+        assert q.to_json() == text
+        assert WhatIfQuery.from_json(q.to_json()).to_json() == text
+    assert kinds == {"placement", "capacity", "reliability"}
+
+
+def test_query_codec_rejects_unknown_and_missing_fields():
+    good = WhatIfQuery(kind="capacity", queue="q",
+                       deltas=(ScenarioDelta(add_nodes=8),)).to_json_dict()
+
+    bad = dict(good, frobnicate=1)
+    with pytest.raises(SchemaError) as e:
+        WhatIfQuery.from_json_dict(bad)
+    assert e.value.code == "unknown_field"
+
+    bad = {k: v for k, v in good.items() if k != "version"}
+    with pytest.raises(SchemaError) as e:
+        WhatIfQuery.from_json_dict(bad)
+    assert e.value.code == "missing_field"
+
+    with pytest.raises(SchemaError) as e:
+        WhatIfQuery.from_json_dict(dict(good, version=99))
+    assert e.value.code == "bad_version"
+
+    deltas = [dict(good["deltas"][0], nonsense=True)]
+    with pytest.raises(SchemaError) as e:
+        WhatIfQuery.from_json_dict(dict(good, deltas=deltas))
+    assert e.value.code == "unknown_field"
+
+    with pytest.raises(SchemaError):
+        WhatIfQuery.from_json("not json at all {")
+    with pytest.raises(SchemaError):  # kind-level validation
+        WhatIfQuery.from_json_dict(dict(good, deltas=[]))
+
+
+def test_fleet_codec_round_trips():
+    fleet = service.demo_fleet()
+    doc = service.fleet_to_json(fleet)
+    text = canonical_dumps(doc)
+    again = service.fleet_from_json(json.loads(text))
+    assert again == fleet
+    assert canonical_dumps(service.fleet_to_json(again)) == text
+    # unsupported scenarios fail loudly instead of serializing partially
+    with pytest.raises(SchemaError):
+        service.scenario_to_json(Scenario(
+            trace=(SyntheticTrace(n_jobs=5), SyntheticTrace(n_jobs=5)),
+            total_nodes=8, multicluster=api.Multicluster(window=16)))
+
+
+def test_apply_delta_structured_errors():
+    scalar = base_scenario()
+    with pytest.raises(SchemaError) as e:  # no failures to override
+        apply_delta(scalar, ScenarioDelta(mtbf=1000.0))
+    assert e.value.code == "unsupported"
+    with pytest.raises(SchemaError):  # alloc without topology
+        apply_delta(scalar, ScenarioDelta(alloc="contiguous"))
+    with pytest.raises(SchemaError):  # shrink below 1 node
+        apply_delta(scalar, ScenarioDelta(add_nodes=-scalar.total_nodes))
+    mesh = base_scenario(topo=True)
+    with pytest.raises(SchemaError) as e:  # ambiguous mesh growth
+        apply_delta(mesh, ScenarioDelta(add_nodes=16))
+    assert e.value.code == "unsupported"
+
+
+# ---------------------------------------------------------------------------
+# HTTP smoke (subprocess end-to-end)
+# ---------------------------------------------------------------------------
+
+
+def _post(url, payload):
+    req = urllib.request.Request(
+        url, data=canonical_dumps(payload).encode(),
+        headers={"Content-Type": "application/json"}, method="POST")
+    try:
+        with urllib.request.urlopen(req, timeout=SUBPROC_TIMEOUT) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(2 * SUBPROC_TIMEOUT + 60)
+def test_http_smoke():
+    """End-to-end: `python -m repro.service --demo` in a subprocess, all
+    three query families over HTTP, responses equal to direct in-process
+    answers, malformed requests get structured 4xx."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.service", "--demo"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env)
+    try:
+        line = proc.stdout.readline()
+        if not line.startswith("serving on "):
+            rest = ""
+            try:
+                rest = proc.communicate(timeout=10)[0] or ""
+            except subprocess.TimeoutExpired:
+                pass
+            pytest.fail(f"server failed to start: {line!r}\n{rest}")
+        url = line.split("serving on ", 1)[1].strip()
+
+        try:
+            with urllib.request.urlopen(f"{url}/health",
+                                        timeout=SUBPROC_TIMEOUT) as r:
+                health = json.loads(r.read())
+        except TimeoutError:
+            pytest.skip(
+                f"service subprocess exceeded {SUBPROC_TIMEOUT}s (slow "
+                "container; raise REPRO_SERVICE_TIMEOUT to run it)")
+        assert health["status"] == "ok"
+        assert health["queues"] == ["batch", "flaky", "mesh"]
+
+        queries = [
+            WhatIfQuery(kind="placement",
+                        job=JobRequest(submit=0, runtime=400, nodes=16)),
+            WhatIfQuery(kind="capacity", queue="batch",
+                        deltas=(ScenarioDelta(),
+                                ScenarioDelta(add_nodes=64))),
+            WhatIfQuery(kind="reliability", queue="flaky",
+                        mtbf_grid=(500_000.0, 2_000_000.0),
+                        objective=Objective(metric="goodput", goal="max")),
+        ]
+        planner = CapacityPlanner(service.demo_fleet())
+        for q in queries:
+            status, body = _post(f"{url}/query", q.to_json_dict())
+            assert status == 200, body
+            direct = planner.answer(q)
+            # identical answers modulo the per-process cache counters
+            for k in ("points", "recommendations", "recommended",
+                      "baseline", "objective", "kind"):
+                assert body[k] == json.loads(
+                    canonical_dumps(direct[k])), (q.kind, k)
+
+        # fleet aggregation over HTTP
+        with urllib.request.urlopen(f"{url}/fleet",
+                                    timeout=SUBPROC_TIMEOUT) as r:
+            fleet = json.loads(r.read())
+        assert set(fleet["queues"]) == {"batch", "flaky", "mesh"}
+        for qst in fleet["queues"].values():
+            assert qst["summary"]["n_jobs"] > 0
+
+        # malformed / invalid / unknown -> structured errors
+        status, body = _post(f"{url}/query", {"version": 1, "kind": "??"})
+        assert status == 400 and body["error"]["type"] == "bad_value"
+        status, body = _post(
+            f"{url}/query",
+            WhatIfQuery(kind="capacity", queue="nope",
+                        deltas=(ScenarioDelta(),)).to_json_dict())
+        assert status == 404 and body["error"]["type"] == "unknown_queue"
+        status, body = _post(
+            f"{url}/query",
+            WhatIfQuery(kind="reliability", queue="batch",
+                        mtbf_grid=(1e6,)).to_json_dict())
+        assert status == 422 and body["error"]["type"] == "unsupported"
+        req = urllib.request.Request(
+            f"{url}/query", data=b"{not json", method="POST")
+        try:
+            urllib.request.urlopen(req, timeout=SUBPROC_TIMEOUT)
+            pytest.fail("malformed JSON must 4xx")
+        except urllib.error.HTTPError as e:
+            assert e.code == 400
+            assert json.loads(e.read())["error"]["type"] == "bad_value"
+    except (TimeoutError, subprocess.TimeoutExpired):
+        pytest.skip(
+            f"service subprocess exceeded {SUBPROC_TIMEOUT}s (slow "
+            "container; raise REPRO_SERVICE_TIMEOUT to run it)")
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
